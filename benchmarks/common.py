@@ -1,0 +1,40 @@
+"""Shared benchmark plumbing: timing + CSV emission.
+
+Every benchmark prints `name,us_per_call,derived` rows (derived =
+examples/s or another table-specific figure). CPU timings use REDUCED
+configs — the relative ordering across a sweep is the reproduction target
+(the paper reports relative throughput too); absolute TPU numbers come from
+the dry-run roofline instead.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+
+ROWS: List[Tuple[str, float, float]] = []
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time per call in microseconds (blocks on outputs)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: float):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived:.4g}", flush=True)
+
+
+def header():
+    print("name,us_per_call,derived", flush=True)

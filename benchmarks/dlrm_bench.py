@@ -1,0 +1,46 @@
+"""Shared DLRM benchmark driver: build a (reduced) suite config, jit the
+train step, and report examples/s — the paper's throughput metric."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.configs.base import DLRMConfig
+from repro.core.design_space import reduced
+from repro.core.dlrm import dlrm_param_specs
+from repro.core.embedding import EmbeddingBagCollection
+from repro.data.synthetic import make_dlrm_batch
+from repro.nn.params import init_params
+from repro.optim.optimizers import adagrad
+from repro.train.steps import build_dlrm_train_step, dlrm_init_state
+
+
+def bench_dlrm(name: str, cfg: DLRMConfig, batch: int,
+               reduce_factor: int = 16, strategy: str = "auto"):
+    cfg = reduced(cfg, reduce_factor)
+    ebc = EmbeddingBagCollection.build(cfg, n_shards=1, strategy=strategy)
+    params = init_params(dlrm_param_specs(cfg, ebc), jax.random.PRNGKey(0))
+    opt = adagrad(0.01)
+    state = dlrm_init_state(ebc, opt, params)
+    # O(n) sparse apply + donated buffers: per-step cost must not scale with
+    # table height (paper's flat CPU hash-size curve, Fig. 12)
+    step = jax.jit(build_dlrm_train_step(cfg, ebc, opt,
+                                         sparse_apply="sparse"),
+                   donate_argnums=(0, 1))
+    raw = make_dlrm_batch(cfg, batch)
+    b = {"dense": jnp.asarray(raw["dense"]),
+         "idx": ebc.offset_indices(jnp.asarray(raw["idx"])),
+         "label": jnp.asarray(raw["label"])}
+
+    state_cell = [params, state]
+
+    def run(b):
+        p, s, m = step(state_cell[0], state_cell[1], b,
+                       jnp.asarray(0, jnp.int32))
+        state_cell[0], state_cell[1] = p, s
+        return m["loss"]
+
+    us = time_fn(run, b)
+    emit(name, us, batch / (us / 1e6))     # derived = examples/s
+    return us

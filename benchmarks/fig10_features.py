@@ -1,0 +1,21 @@
+"""Paper Fig. 10: throughput vs (dense x sparse) feature counts.
+
+Expected reproduction: throughput drops as either feature count grows;
+sparse features cost more than dense at equal count (embedding lookups +
+interaction dominate) — the paper's section V-A claim.
+"""
+from benchmarks.common import emit
+from benchmarks.dlrm_bench import bench_dlrm
+from repro.core.design_space import test_suite_config
+
+
+def main(batch: int = 256):
+    for n_dense in (64, 256, 1024):
+        for n_sparse in (4, 16, 64):
+            cfg = test_suite_config(n_dense=n_dense, n_sparse=n_sparse)
+            bench_dlrm(f"fig10/dense{n_dense}_sparse{n_sparse}", cfg, batch,
+                       reduce_factor=4)
+
+
+if __name__ == "__main__":
+    main()

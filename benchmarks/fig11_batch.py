@@ -1,0 +1,18 @@
+"""Paper Fig. 11: batch-size throughput scaling.
+
+Expected reproduction: examples/s rises with batch until compute saturates,
+then flattens — the paper's saturation curve (section V-B).
+"""
+from benchmarks.common import emit
+from benchmarks.dlrm_bench import bench_dlrm
+from repro.core.design_space import sweep_fig11_batch, test_suite_config
+
+
+def main():
+    cfg = test_suite_config()
+    for batch in (64, 128, 256, 512, 1024):
+        bench_dlrm(f"fig11/batch{batch}", cfg, batch)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Paper Fig. 12: hash-size scaling.
+
+Expected reproduction: on a single device with in-memory tables (the CPU
+row of Fig. 12), throughput is ~flat in hash size — lookup cost doesn't
+depend on table height; only capacity does. The GPU-side cliff in the paper
+comes from spilling HBM — reproduced in the dry-run placement study
+(fig14) instead, where the planner switches strategy with table size.
+"""
+from benchmarks.common import emit
+from benchmarks.dlrm_bench import bench_dlrm
+from repro.core.design_space import test_suite_config
+
+
+def main(batch: int = 256):
+    for h in (10_000, 50_000, 200_000, 1_000_000):
+        cfg = test_suite_config(hash_size=h)
+        bench_dlrm(f"fig12/hash{h}", cfg, batch, reduce_factor=8)
+
+
+if __name__ == "__main__":
+    main()

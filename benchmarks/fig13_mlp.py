@@ -1,0 +1,19 @@
+"""Paper Fig. 13: throughput vs MLP width^layers.
+
+Expected reproduction: flat until the MLP dominates the embedding work,
+then throughput decays with width^2 (section V-D).
+"""
+from benchmarks.common import emit
+from benchmarks.dlrm_bench import bench_dlrm
+from repro.core.design_space import test_suite_config
+
+
+def main(batch: int = 256):
+    for width, layers in ((64, 2), (128, 2), (256, 3), (512, 3), (1024, 3)):
+        cfg = test_suite_config(mlp_width=width, mlp_layers=layers)
+        bench_dlrm(f"fig13/mlp{width}x{layers}", cfg, batch,
+                   reduce_factor=8)
+
+
+if __name__ == "__main__":
+    main()

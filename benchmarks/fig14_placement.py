@@ -1,0 +1,35 @@
+"""Paper Figs. 1/14: embedding placement strategy comparison.
+
+Two parts:
+  1. CPU-measurable: train-step time under each placement (single shard
+     here, so this isolates the mega-table layout overhead — expected ~equal;
+     the real signal is distributed).
+  2. The planner-level reproduction of the paper's crossover: per-strategy
+     BYTES-PER-SHARD and LOAD-IMBALANCE for M1/M2/M3 on a 16-shard model
+     axis (derived = max bytes/shard in GB). The paper's Fig. 14 ordering
+     (table-wise wins when it fits; row-wise when tables straddle) falls out
+     of the planner's imbalance/capacity numbers.
+"""
+from benchmarks.common import emit
+from benchmarks.dlrm_bench import bench_dlrm
+from repro.configs import get_config
+from repro.core.placement import plan_placement
+
+
+def main():
+    for strategy in ("replicated", "table_wise", "row_wise", "column_wise"):
+        bench_dlrm(f"fig14/step_{strategy}", get_config("dlrm-m1"), 128,
+                   reduce_factor=32, strategy=strategy)
+    for name in ("dlrm-m1", "dlrm-m2", "dlrm-m3"):
+        cfg = get_config(name)
+        for strategy in ("table_wise", "row_wise", "column_wise"):
+            plan = plan_placement(cfg.hash_sizes, cfg.mean_lookups,
+                                  cfg.embed_dim, 16, 9.6e9,
+                                  strategy=strategy)
+            emit(f"fig14/{name}_{strategy}_imbalance",
+                 plan.load_imbalance * 1e6,     # pseudo-us for CSV shape
+                 max(plan.bytes_per_shard) / 1e9)
+
+
+if __name__ == "__main__":
+    main()

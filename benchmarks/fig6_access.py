@@ -1,0 +1,27 @@
+"""Paper Figs. 6/7: hash-size and lookup-length distributions of M1/M2/M3.
+
+Validates the synthetic configs against the paper's stated statistics:
+mean hash sizes ~5.7M/7.3M/3.7M, mean lookups ~28/17/49, range [30, 20M].
+derived = mean hash size (M rows).
+"""
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config
+
+
+def main():
+    expected = {"dlrm-m1": (5.7e6, 28), "dlrm-m2": (7.3e6, 17),
+                "dlrm-m3": (3.7e6, 49)}
+    for name, (eh, el) in expected.items():
+        cfg = get_config(name)
+        mh = float(np.mean(cfg.hash_sizes))
+        ml = float(np.mean(cfg.mean_lookups))
+        assert abs(mh - eh) / eh < 0.25, (name, mh, eh)
+        assert abs(ml - el) / el < 0.25, (name, ml, el)
+        assert min(cfg.hash_sizes) >= 30 and max(cfg.hash_sizes) <= 2e7
+        emit(f"fig6/{name}_meanhash", ml, mh / 1e6)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Kernel microbenchmarks (section III-A.2 hot spots): oracle (jnp) path
+timing on CPU + a correctness pass of the Pallas body (interpret mode).
+derived = lookups/s (embedding_bag), pairs/s (dot_interaction),
+rows/s (rowwise_adagrad).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.kernels import ops, ref
+
+
+def main():
+    rng = np.random.RandomState(0)
+    h, d, b, l = 100_000, 64, 4096, 32
+    table = jnp.asarray(rng.randn(h, d), jnp.float32)
+    idx = jnp.asarray(rng.randint(-1, h, size=(b, l)), jnp.int32)
+    f = jax.jit(lambda t, i: ref.embedding_bag_ref(t, i, "sum"))
+    us = time_fn(f, table, idx)
+    emit("kernels/embedding_bag_ref", us, b * l / (us / 1e6))
+
+    z = jnp.asarray(rng.randn(2048, 33, 64), jnp.float32)
+    g = jax.jit(ref.dot_interaction_ref)
+    us = time_fn(g, z)
+    emit("kernels/dot_interaction_ref", us,
+         2048 * 33 * 32 / 2 / (us / 1e6))
+
+    accum = jnp.zeros((h,), jnp.float32)
+    gr = jnp.asarray(rng.randn(b * 4, d), jnp.float32)
+    ii = jnp.asarray(rng.randint(-1, h, size=(b * 4,)), jnp.int32)
+    k = jax.jit(lambda t, a, i, g: ref.rowwise_adagrad_ref(t, a, i, g, 0.01))
+    us = time_fn(k, table, accum, ii, gr)
+    emit("kernels/rowwise_adagrad_ref", us, b * 4 / (us / 1e6))
+
+    q = jnp.asarray(rng.randn(2, 256, 4, 64) * 0.5, jnp.float32)
+    fa = jax.jit(lambda q: ref.flash_attention_ref(
+        q.swapaxes(1, 2), q.swapaxes(1, 2), q.swapaxes(1, 2), True))
+    us = time_fn(fa, q)
+    emit("kernels/flash_attention_ref", us, 2 * 256 * 256 / (us / 1e6))
+
+    # interpret-mode correctness spot check (body actually executes)
+    out_k = ops.embedding_bag(table[:512], idx[:8] % 512, "sum", None, True)
+    out_r = ref.embedding_bag_ref(table[:512], idx[:8] % 512, "sum")
+    np.testing.assert_allclose(out_k, out_r, rtol=1e-5, atol=1e-5)
+    emit("kernels/pallas_interpret_check", 0.0, 1.0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Render the section-Roofline table from runs/dryrun/*.json artifacts.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_report [--dir runs/dryrun]
+Emits a markdown table (also used verbatim in EXPERIMENTS.md) plus CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load(dirname: str) -> List[Dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def _fmt_s(x) -> str:
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}m"
+    return f"{x * 1e6:.0f}u"
+
+
+def markdown(recs: List[Dict], mesh: str = "single") -> str:
+    rows = [r for r in recs if r.get("mesh") ==
+            ("2x16x16" if mesh == "multi" else "16x16")]
+    out = ["| arch | shape | compute_s | per-chip | memory_s | "
+           "collective_s | dominant | model/HLO | roofline | est GB "
+           "| raw GB | ok |",
+           "|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if not r.get("ok"):
+            out.append(f"| {r['arch']} | {r['shape']} | - | - | - | - | - |"
+                       f" - | - | - | - | FAIL: "
+                       f"{r.get('error', '?')[:40]} |")
+            continue
+        gb = r["memory"]["peak_per_device"] / 1e9
+        est = r.get("hbm_estimate_gb")
+        pc = r.get("compute_s_per_chip")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_s(r['compute_s'])} | "
+            f"{_fmt_s(pc) if pc is not None else '-'} | "
+            f"{_fmt_s(r['memory_s'])} | {_fmt_s(r['collective_s'])} | "
+            f"{r['dominant'].replace('_s', '')} | "
+            f"{r['model_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | "
+            f"{est if est is not None else '-'} | {gb:.1f} | yes |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="runs/dryrun")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    if not recs:
+        print(f"(no dry-run artifacts in {args.dir} — run "
+              f"`python -m repro.launch.dryrun` first)")
+        return
+    print(markdown(recs, args.mesh))
+    ok = sum(1 for r in recs if r.get("ok"))
+    print(f"\n{ok}/{len(recs)} cells ok")
+
+
+if __name__ == "__main__":
+    main()

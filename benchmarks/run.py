@@ -1,0 +1,52 @@
+"""Run every paper-table benchmark. One section per paper figure/table.
+
+`PYTHONPATH=src python -m benchmarks.run`
+prints ``name,us_per_call,derived`` CSV (derived = examples/s unless noted).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (fig6_access, fig10_features, fig11_batch, fig12_hash,
+                        fig13_mlp, fig14_placement, kernels_bench,
+                        table3_prod)
+from benchmarks.common import header
+
+
+def main() -> None:
+    argparse.ArgumentParser().parse_known_args()
+    header()
+    sections = [
+        ("fig6/7 access distributions", fig6_access.main),
+        ("kernels (section III-A.2)", kernels_bench.main),
+        ("fig10 feature sweep", fig10_features.main),
+        ("fig11 batch scaling", fig11_batch.main),
+        ("fig12 hash scaling", fig12_hash.main),
+        ("fig13 mlp dims", fig13_mlp.main),
+        ("table III production models", table3_prod.main),
+        ("fig1/14 placement", fig14_placement.main),
+    ]
+    failures = 0
+    for name, fn in sections:
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn()
+        except Exception:  # noqa: BLE001 — report all sections
+            failures += 1
+            traceback.print_exc()
+    print("# --- roofline (from dry-run artifacts, if present) ---")
+    try:
+        from benchmarks import roofline_report
+        recs = roofline_report.load("runs/dryrun")
+        if recs:
+            print(roofline_report.markdown(recs))
+    except Exception:  # noqa: BLE001
+        traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Paper Table III: the three production models end to end (reduced).
+
+Reports training examples/s for M1/M2/M3. Expected reproduction: M3 (127
+sparse features, 49 mean lookups) is the slowest per example by a wide
+margin — the embedding-dominant regime that motivated Zion.
+"""
+from benchmarks.common import emit
+from benchmarks.dlrm_bench import bench_dlrm
+from repro.configs import get_config
+
+
+def main(batch: int = 128):
+    for name in ("dlrm-m1", "dlrm-m2", "dlrm-m3"):
+        bench_dlrm(f"table3/{name}", get_config(name), batch,
+                   reduce_factor=8)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""The paper's section-V design-space exploration, runnable: sweep sparse
+features and batch size on the parameterized test suite, print the
+throughput matrix (the CPU analogue of Figs. 10/11).
+
+    PYTHONPATH=src python examples/design_space.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core.design_space import reduced, test_suite_config
+from repro.core.dlrm import dlrm_param_specs
+from repro.core.embedding import EmbeddingBagCollection
+from repro.data import make_dlrm_batch
+from repro.nn.params import init_params
+from repro.optim import adagrad
+from repro.train.steps import build_dlrm_train_step, dlrm_init_state
+import time
+
+
+def throughput(cfg, batch: int) -> float:
+    cfg = reduced(cfg, 8)
+    ebc = EmbeddingBagCollection.build(cfg, n_shards=1)
+    params = init_params(dlrm_param_specs(cfg, ebc), jax.random.PRNGKey(0))
+    opt = adagrad(0.01)
+    state = dlrm_init_state(ebc, opt, params)
+    step = jax.jit(build_dlrm_train_step(cfg, ebc, opt,
+                                         sparse_apply="sparse"),
+                   donate_argnums=(0, 1))
+    raw = make_dlrm_batch(cfg, batch)
+    b = {"dense": jnp.asarray(raw["dense"]),
+         "idx": ebc.offset_indices(jnp.asarray(raw["idx"])),
+         "label": jnp.asarray(raw["label"])}
+    params, state, _ = step(params, state, b, jnp.asarray(0, jnp.int32))
+    jax.block_until_ready(params["emb"]["mega"])
+    t0 = time.perf_counter()
+    iters = 5
+    for i in range(iters):
+        params, state, m = step(params, state, b, jnp.asarray(i, jnp.int32))
+    jax.block_until_ready(params["emb"]["mega"])
+    return batch * iters / (time.perf_counter() - t0)
+
+
+def main():
+    print("== Fig. 10 analogue: examples/s vs (dense x sparse) features ==")
+    print(f"{'':>12}" + "".join(f"sparse={s:<8}" for s in (4, 16, 64)))
+    for nd in (64, 512, 2048):
+        row = [throughput(test_suite_config(n_dense=nd, n_sparse=ns), 256)
+               for ns in (4, 16, 64)]
+        print(f"dense={nd:<6}" + "".join(f"{r:>10.0f}  " for r in row))
+
+    print("\n== Fig. 11 analogue: examples/s vs batch size ==")
+    cfg = test_suite_config()
+    for b in (64, 256, 1024):
+        print(f"batch={b:<6} {throughput(cfg, b):>10.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Config registry: one module per assigned architecture + the paper's own
+DLRM production models. `get_config(name)` returns the full-size config,
+`get_smoke_config(name)` a reduced same-family config for CPU smoke tests.
+"""
+from repro.configs.base import (  # noqa: F401
+    DLRMConfig,
+    ModelConfig,
+    Shape,
+    DLRM_SHAPES,
+    LM_SHAPES,
+    shapes_for,
+)
+from repro.configs.registry import (  # noqa: F401
+    ARCH_NAMES,
+    get_config,
+    get_smoke_config,
+    list_cells,
+)

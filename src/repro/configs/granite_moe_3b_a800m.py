@@ -1,0 +1,13 @@
+"""granite-moe-3b-a800m [moe] — 40 experts top-8 per assignment.
+[hf:ibm-granite; hf]
+
+expert_pad=8: 40 experts do not divide the 16-way model axis; 8 never-routed
+dummy experts pad the weight tables to 48 so expert-parallel sharding stays
+even (GShard-style; routing semantics unchanged — DESIGN.md section 4)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-3b-a800m", family="moe", n_layers=32, d_model=1536,
+    n_heads=24, n_kv_heads=8, d_ff=512, vocab_size=49155,
+    n_experts=40, top_k=8, expert_pad=8, moe_every=1, mlp_type="swiglu",
+    norm_type="rmsnorm", rope_style="neox", tie_embeddings=True)

@@ -1,0 +1,13 @@
+"""qwen1.5-32b [dense] — QKV bias, assigned kv=40 (MHA). [hf:Qwen; hf]
+
+int8 KV cache: the 32k x 128 decode cache is 5.5 TB in bf16 (21.5 GB/chip on
+256 chips — over the 16 GB v5e HBM); int8 + per-token-head scales halves it.
+fsdp=True: 32 B params -> optimizer state must shard over `data` too."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-32b", family="dense", n_layers=64, d_model=5120,
+    n_heads=40, n_kv_heads=40, d_ff=27392, vocab_size=152064,
+    mlp_type="swiglu", norm_type="rmsnorm", qkv_bias=True,
+    rope_style="neox", tie_embeddings=False, fsdp=True,
+    kv_cache_dtype="int8")

@@ -1,0 +1,20 @@
+"""The paper's primary contribution as a composable JAX module set:
+
+  placement.py     PlacementPlanner — capacity/frequency-driven embedding
+                   placement (table-wise / row-wise / column-wise /
+                   replicated), the TPU mapping of the paper's Fig. 8
+  embedding.py     EmbeddingBagCollection — mega-table layout + multi-hot
+                   pooled lookup under any placement plan
+  interaction.py   concat / pairwise-dot feature interaction (section III-A.3)
+  dlrm.py          the full DLRM (Fig. 3): bottom MLP -> EMBs -> interaction
+                   -> top MLP, loss, and the split dense/sparse train step
+  design_space.py  the section-V parameterized test suite (feature counts,
+                   batch size, hash size, MLP dims sweeps)
+"""
+from repro.core.dlrm import (  # noqa: F401
+    dlrm_forward,
+    dlrm_loss,
+    dlrm_param_specs,
+)
+from repro.core.embedding import EmbeddingBagCollection  # noqa: F401
+from repro.core.placement import PlacementPlan, plan_placement  # noqa: F401

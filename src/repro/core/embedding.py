@@ -1,0 +1,185 @@
+"""EmbeddingBagCollection: all sparse-feature tables of one model as a single
+row-concatenated mega table + a PlacementPlan.
+
+Lookup semantics (paper section III-A.2): each sparse feature is a multi-hot
+index list of up to `truncation` entries; each entry fetches one d-vector;
+vectors are sum-pooled per (example, feature). Index preprocessing (hashing
+into [0, hash_size) and adding the table's row offset) happens in the data
+pipeline; the collection consumes offset global indices with -1 padding.
+
+Two lookup paths:
+  * `lookup` — pure-jnp gather+pool with GLOBAL semantics: under pjit the
+    XLA SPMD partitioner turns the gather-from-sharded-table into partial
+    local gathers + an all-reduce over the `model` axis (the embedding
+    "all-to-all" of the paper's PS architecture). Used for training and the
+    dry-run (collectives must be visible to the roofline pass).
+  * `lookup_local` — the Pallas embedding_bag kernel on one shard's rows;
+    used inside shard_map on real TPUs and by serving.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import DLRMConfig
+from repro.core.placement import PlacementPlan, plan_placement
+from repro.kernels import ops
+from repro.nn.params import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddingBagCollection:
+    cfg: DLRMConfig
+    plan: PlacementPlan
+
+    @classmethod
+    def build(cls, cfg: DLRMConfig, n_shards: int,
+              strategy: Optional[str] = None,
+              second_axis_size: int = 1) -> "EmbeddingBagCollection":
+        plan = plan_placement(
+            cfg.hash_sizes, cfg.mean_lookups, cfg.embed_dim, n_shards,
+            hbm_budget_bytes=cfg.hbm_budget_gb * 1e9,
+            itemsize=4 if cfg.param_dtype == "float32" else 2,
+            strategy=strategy or cfg.placement,
+            second_axis_size=second_axis_size)
+        return cls(cfg, plan)
+
+    # -- params ------------------------------------------------------------
+
+    def param_specs(self) -> dict:
+        dt = jnp.float32 if self.cfg.param_dtype == "float32" else jnp.bfloat16
+        return {"mega": ParamSpec(
+            (self.plan.total_rows, self.cfg.embed_dim),
+            ("hash", "table_dim"), dtype=dt, init="normal",
+            scale=1.0 / np.sqrt(self.cfg.embed_dim))}
+
+    def optimizer_specs(self) -> dict:
+        """Row-wise AdaGrad second-moment accumulator."""
+        return {"accum": ParamSpec((self.plan.total_rows,), ("hash",),
+                                   dtype=jnp.float32, init="zeros")}
+
+    def pspecs(self) -> dict:
+        return {"mega": self.plan.pspec}
+
+    def optimizer_pspecs(self) -> dict:
+        return {"accum": jax.sharding.PartitionSpec(*self.plan.pspec[:1])}
+
+    # -- index preprocessing -----------------------------------------------
+
+    def offset_indices(self, raw: jax.Array) -> jax.Array:
+        """raw: (B, F, L) per-table indices in [0, hash_size_f) or -1 pad.
+        Returns global mega-table rows (still -1 padded)."""
+        off = jnp.asarray(self.plan.table_offsets, jnp.int32)
+        out = raw + off[None, :, None]
+        return jnp.where(raw >= 0, out, -1)
+
+    # -- lookup ------------------------------------------------------------
+
+    def lookup(self, params: dict, idx: jax.Array, rules=None) -> jax.Array:
+        """idx: (B, F, L) offset global rows, -1 pads. Returns (B, F, d)
+        sum-pooled embeddings. Pure-jnp global-semantics path: under pjit the
+        gather from the model-sharded mega table lowers to local gathers +
+        the cross-shard reduce — the paper's PS pull."""
+        from repro.nn.sharding import shard_activation
+        mega = params["mega"]
+        b, f, l = idx.shape
+
+        def pool_one(_, idx_f):
+            # idx_f: (b, l) one feature's bags
+            valid = idx_f >= 0
+            rows = jnp.take(mega, jnp.maximum(idx_f, 0).reshape(-1), axis=0)
+            rows = rows.reshape(b, l, -1)
+            rows = jnp.where(valid[..., None], rows.astype(jnp.float32), 0.0)
+            return None, rows.sum(axis=1).astype(mega.dtype)
+
+        if f > 8:
+            # scan over features: bounds the (b, l, d) gather transient to
+            # one feature at a time (m3 has 127 tables x 32 lookups)
+            _, pooled = jax.lax.scan(pool_one, None,
+                                     jnp.swapaxes(idx, 0, 1))
+            pooled = jnp.swapaxes(pooled, 0, 1)              # (b, f, d)
+        else:
+            valid = idx >= 0
+            rows = jnp.take(mega, jnp.maximum(idx, 0).reshape(-1), axis=0)
+            rows = rows.reshape(b, f, l, -1)
+            rows = jnp.where(valid[..., None], rows.astype(jnp.float32), 0.0)
+            pooled = rows.sum(axis=2).astype(mega.dtype)
+        return shard_activation(pooled, ("act_batch", None, None),
+                                rules or {})
+
+    def lookup_pooled_psum(self, params: dict, idx: jax.Array,
+                           mesh, model_axis: str = "model") -> jax.Array:
+        """shard_map lookup with PS-SIDE POOLING: each model shard pools its
+        local rows per bag, then a psum of the (B, F, d) POOLED tensor
+        crosses shards — instead of the naive gather whose cross-shard
+        payload is the (B, F, L, d) un-pooled rows (truncation x more
+        bytes; the paper's PS architecture pools at the PS for exactly this
+        reason). Requires plan.pspec == P(model_axis, None) and the batch
+        sharded over the remaining axes."""
+        from jax import shard_map
+        from jax.sharding import PartitionSpec as P
+        assert self.plan.pspec == P(model_axis, None), self.plan.pspec
+        batch_axes = tuple(a for a in mesh.axis_names if a != model_axis)
+        rows_local = self.plan.total_rows // mesh.shape[model_axis]
+        d = self.cfg.embed_dim
+
+        def local_fn(mega_shard, idx_local):
+            shard = jax.lax.axis_index(model_axis)
+            lo = shard * rows_local
+            loc = jnp.where((idx_local >= lo)
+                            & (idx_local < lo + rows_local),
+                            idx_local - lo, -1)
+            b, f, l = loc.shape
+            valid = loc >= 0
+            rows = jnp.take(mega_shard, jnp.maximum(loc, 0).reshape(-1),
+                            axis=0).reshape(b, f, l, d)
+            rows = jnp.where(valid[..., None], rows.astype(jnp.float32),
+                             0.0)
+            pooled = rows.sum(axis=2)          # POOL BEFORE the collective
+            return jax.lax.psum(pooled, model_axis)
+
+        return shard_map(
+            local_fn, mesh=mesh,
+            in_specs=(P(model_axis, None), P(batch_axes, None, None)),
+            out_specs=P(batch_axes, None, None),
+        )(params["mega"], idx).astype(params["mega"].dtype)
+
+    def lookup_local(self, mega_shard: jax.Array, idx: jax.Array,
+                     row_lo: int, row_hi: int,
+                     interpret: bool = False) -> jax.Array:
+        """Per-shard lookup for shard_map/serving: gather only rows owned by
+        this shard ([row_lo, row_hi)); callers all-reduce partial pools."""
+        b, f, l = idx.shape
+        local = jnp.where((idx >= row_lo) & (idx < row_hi),
+                          idx - row_lo, -1)
+        out = ops.embedding_bag(mega_shard, local.reshape(b * f, l),
+                                "sum", None, interpret)
+        return out.reshape(b, f, -1)
+
+    # -- gradient layout for the sparse optimizer ---------------------------
+
+    def per_lookup_grads(self, idx: jax.Array, pooled_grad: jax.Array
+                         ) -> Tuple[jax.Array, jax.Array]:
+        """Sum pooling => each valid lookup slot inherits its bag's grad.
+
+        idx: (B, F, L); pooled_grad: (B, F, d).
+        Returns (flat_idx (B*F*L,), flat_grads (B*F*L, d)) for
+        rowwise_adagrad_update.
+        """
+        b, f, l = idx.shape
+        g = jnp.broadcast_to(pooled_grad[:, :, None, :],
+                             (b, f, l, pooled_grad.shape[-1]))
+        return idx.reshape(-1), g.reshape(b * f * l, -1)
+
+    # -- stats ---------------------------------------------------------------
+
+    def table_bytes(self) -> int:
+        item = 4 if self.cfg.param_dtype == "float32" else 2
+        return self.plan.total_rows * self.cfg.embed_dim * item
+
+    def lookups_per_example(self) -> float:
+        return float(sum(self.cfg.mean_lookups))

@@ -1,0 +1,35 @@
+"""Feature interaction (paper section III-A.3): concat or pairwise dot.
+
+`dot`: project the bottom-MLP output to the embedding dim, stack it with the
+pooled sparse embeddings into Z (B, F+1, d), take all strictly-lower-triangle
+pairwise dot products (sparse-sparse and sparse-dense interactions), and
+concatenate them with the bottom output — exactly DLRM's interaction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def interact(bottom_out: jax.Array, pooled: jax.Array, kind: str,
+             use_kernel=None, interpret: bool = False) -> jax.Array:
+    """bottom_out: (B, d); pooled: (B, F, d). Returns top-MLP input."""
+    if kind == "cat":
+        b = pooled.shape[0]
+        return jnp.concatenate([bottom_out, pooled.reshape(b, -1)], axis=-1)
+    if kind == "dot":
+        z = jnp.concatenate([bottom_out[:, None, :], pooled], axis=1)
+        tri = ops.dot_interaction(z, 8, use_kernel, interpret)
+        return jnp.concatenate([bottom_out, tri.astype(bottom_out.dtype)],
+                               axis=-1)
+    raise ValueError(f"unknown interaction {kind!r}")
+
+
+def interaction_dim(n_sparse: int, embed_dim: int, kind: str) -> int:
+    """Width of the top-MLP input."""
+    f = n_sparse + 1
+    if kind == "cat":
+        return embed_dim + n_sparse * embed_dim
+    return embed_dim + f * (f - 1) // 2

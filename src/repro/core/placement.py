@@ -1,0 +1,195 @@
+"""PlacementPlanner: decides WHERE each embedding table lives.
+
+This is the TPU realization of the paper's Fig. 8 placement options
+(section IV-B.1) and of its observation that access frequency does NOT
+correlate with table size (Fig. 6/7) — so balanced placement must bin-pack
+on *load* (lookups/step) under *capacity* (bytes/shard) constraints.
+
+All tables are laid out in one row-concatenated MEGA TABLE (rows, d). The
+plan fixes each table's row offset and the mega table's PartitionSpec:
+
+  replicated   fits in one chip's budget -> paper's "EMB on (one) GPU"
+  table_wise   whole tables bin-packed onto `model`-axis shards; offsets
+               padded so no table straddles a shard boundary -> paper's
+               "table-wise partitioning on GPUs"
+  row_wise     rows striped across shards regardless of table boundaries ->
+               paper's "row-wise partitioning" (large tables straddle)
+  column_wise  embedding dim sharded -> balances tiny-but-hot tables
+               (follow-up work to the paper; included as a beyond-paper
+               option)
+
+The paper's "system memory" / "remote PS" tiers have no dry-run analogue
+(no host DRAM tier on the target); the pod's pooled HBM plays that role —
+see DESIGN.md section 7. A `host_offload` strategy string is accepted and
+mapped to row_wise with a note, to keep configs portable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementPlan:
+    strategy: str                    # replicated|table_wise|row_wise|column_wise
+    table_offsets: Tuple[int, ...]   # row offset of each table in the mega table
+    total_rows: int                  # padded row count of the mega table
+    pspec: P                         # sharding of the (rows, d) mega table
+    shard_of_table: Optional[Tuple[int, ...]]  # table_wise only
+    n_shards: int
+    # diagnostics
+    bytes_per_shard: Tuple[int, ...] = ()
+    load_per_shard: Tuple[float, ...] = ()
+
+    @property
+    def load_imbalance(self) -> float:
+        if not self.load_per_shard or max(self.load_per_shard) == 0:
+            return 1.0
+        mean = float(np.mean(self.load_per_shard))
+        return float(max(self.load_per_shard)) / max(mean, 1e-9)
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def plan_placement(hash_sizes: Sequence[int],
+                   mean_lookups: Sequence[float],
+                   embed_dim: int,
+                   n_shards: int,
+                   hbm_budget_bytes: float,
+                   itemsize: int = 4,
+                   strategy: str = "auto",
+                   model_axis: str = "model",
+                   second_axis: str = "data",
+                   second_axis_size: int = 1) -> PlacementPlan:
+    """Build a placement plan for one EmbeddingBagCollection.
+
+    hbm_budget_bytes is the per-shard capacity available for embeddings
+    (chip HBM minus activations/MLP budget — the caller decides).
+    """
+    hash_sizes = [int(h) for h in hash_sizes]
+    loads = [float(l) for l in mean_lookups]
+    total_bytes = sum(h * embed_dim * itemsize for h in hash_sizes)
+    if strategy == "host_offload":  # no host tier on target: DESIGN.md section 7
+        strategy = "row_wise"
+    if strategy == "auto":
+        if total_bytes <= hbm_budget_bytes:
+            strategy = "replicated"
+        elif (total_bytes <= hbm_budget_bytes * n_shards
+              and max(hash_sizes) * embed_dim * itemsize
+              <= hbm_budget_bytes):
+            strategy = "table_wise"
+        else:
+            strategy = "row_wise"
+
+    if strategy == "replicated":
+        offsets, rows = _contiguous(hash_sizes, pad_mult=8)
+        return PlacementPlan(strategy, offsets, rows, P(None, None), None,
+                             n_shards,
+                             bytes_per_shard=(total_bytes,) * 1,
+                             load_per_shard=(sum(loads),))
+
+    if strategy == "row_wise":
+        offsets, rows = _contiguous(hash_sizes, pad_mult=8)
+        rows = _round_up(rows, n_shards * 8)
+        per = rows // n_shards * embed_dim * itemsize
+        pspec = P(model_axis, None)
+        shards = n_shards
+        if per > hbm_budget_bytes and second_axis_size > 1:
+            # one axis of shards is not enough (the paper's M3 regime, where
+            # a single Big Basin cannot hold the tables): spread rows over
+            # the full pod — pooled HBM is the Zion 2 TB tier (DESIGN 2)
+            shards = n_shards * second_axis_size
+            rows = _round_up(rows, shards * 8)
+            per = rows // shards * embed_dim * itemsize
+            pspec = P((model_axis, second_axis), None)
+        return PlacementPlan(strategy, offsets, rows, pspec,
+                             None, shards,
+                             bytes_per_shard=(per,) * shards,
+                             load_per_shard=_rowwise_load(
+                                 hash_sizes, loads, offsets, rows, shards))
+
+    if strategy == "column_wise":
+        offsets, rows = _contiguous(hash_sizes, pad_mult=8)
+        per = rows * embed_dim // n_shards * itemsize
+        return PlacementPlan(strategy, offsets, rows, P(None, model_axis),
+                             None, n_shards,
+                             bytes_per_shard=(per,) * n_shards,
+                             load_per_shard=(sum(loads) / n_shards,)
+                             * n_shards)
+
+    if strategy == "table_wise":
+        return _table_wise(hash_sizes, loads, embed_dim, n_shards,
+                           hbm_budget_bytes, itemsize, model_axis)
+
+    raise ValueError(f"unknown placement strategy {strategy!r}")
+
+
+def _contiguous(hash_sizes, pad_mult: int):
+    offsets, off = [], 0
+    for h in hash_sizes:
+        offsets.append(off)
+        off += _round_up(h, pad_mult)
+    return tuple(offsets), off
+
+
+def _rowwise_load(hash_sizes, loads, offsets, rows, n_shards):
+    """Expected lookups hitting each shard under uniform row access."""
+    shard_rows = rows // n_shards
+    per = np.zeros(n_shards)
+    for h, l, o in zip(hash_sizes, loads, offsets):
+        lo, hi = o, o + h
+        for s in range(n_shards):
+            a, b = s * shard_rows, (s + 1) * shard_rows
+            overlap = max(0, min(hi, b) - max(lo, a))
+            if h:
+                per[s] += l * overlap / h
+    return tuple(float(x) for x in per)
+
+
+def _table_wise(hash_sizes, loads, embed_dim, n_shards, budget, itemsize,
+                model_axis):
+    """Greedy LPT bin-packing on LOAD with BYTES capacity constraint.
+
+    The paper's insight (Fig. 6/7): hot tables are often small, so packing by
+    bytes alone strands bandwidth — we balance lookups/step instead and treat
+    bytes as the hard constraint.
+    """
+    n = len(hash_sizes)
+    order = np.argsort([-l for l in loads])      # heaviest load first
+    shard_bytes = np.zeros(n_shards)
+    shard_load = np.zeros(n_shards)
+    shard_tables = [[] for _ in range(n_shards)]
+    shard_of = np.zeros(n, np.int32)
+    for t in order:
+        tb = hash_sizes[t] * embed_dim * itemsize
+        # least-loaded shard with room; fall back to least-byte shard
+        cand = sorted(range(n_shards), key=lambda s: (shard_load[s],
+                                                      shard_bytes[s]))
+        pick = next((s for s in cand if shard_bytes[s] + tb <= budget),
+                    int(np.argmin(shard_bytes)))
+        shard_of[t] = pick
+        shard_bytes[pick] += tb
+        shard_load[pick] += loads[t]
+        shard_tables[pick].append(t)
+
+    # rows per shard = max shard allocation, padded so shards align
+    rows_of = [_round_up(h, 8) for h in hash_sizes]
+    shard_rows = max(sum(rows_of[t] for t in ts) for ts in shard_tables)
+    shard_rows = _round_up(max(shard_rows, 8), 8)
+    offsets = [0] * n
+    for s, ts in enumerate(shard_tables):
+        off = s * shard_rows
+        for t in ts:
+            offsets[t] = off
+            off += rows_of[t]
+    total = shard_rows * n_shards
+    return PlacementPlan("table_wise", tuple(offsets), total,
+                         P(model_axis, None), tuple(int(x) for x in shard_of),
+                         n_shards,
+                         bytes_per_shard=tuple(int(x) for x in shard_bytes),
+                         load_per_shard=tuple(float(x) for x in shard_load))

@@ -1,0 +1,7 @@
+from repro.data.synthetic import (  # noqa: F401
+    dlrm_batch_specs,
+    lm_batch_specs,
+    make_dlrm_batch,
+    make_lm_batch,
+)
+from repro.data.pipeline import DataPipeline, ShardedLoader  # noqa: F401

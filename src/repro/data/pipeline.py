@@ -1,0 +1,89 @@
+"""Host-side data pipeline: the paper's reader-server tier (section IV-B.2).
+
+Readers are decoupled from trainers so data loading never stalls training:
+`DataPipeline` runs generator workers in a background thread pool feeding a
+bounded queue (double buffering by default), and `ShardedLoader` slices each
+global batch into this host's shard (the `(pod, data)` axes of the mesh) with
+deterministic per-step seeds — any host can regenerate any shard of any step,
+which is also what makes elastic restart (train/elastic.py) possible without
+data-state checkpoints.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Dict, Iterator, Optional
+
+import numpy as np
+
+
+class DataPipeline:
+    """Prefetching wrapper: gen(step) -> batch, produced ahead of use."""
+
+    def __init__(self, gen: Callable[[int], Dict[str, np.ndarray]],
+                 prefetch: int = 2, start_step: int = 0):
+        self._gen = gen
+        self._q: "queue.Queue" = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._step = start_step
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = self._gen(step)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        if self._stop.is_set():
+            raise StopIteration
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()
+        # drain so the worker unblocks
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2)
+
+
+class ShardedLoader:
+    """Deterministic per-host slicing of global batches.
+
+    host_index / num_hosts follow jax.process_index()/count() in a real
+    deployment; injectable here for tests.
+    """
+
+    def __init__(self, gen: Callable[[int, int], Dict[str, np.ndarray]],
+                 global_batch: int, host_index: int = 0, num_hosts: int = 1,
+                 seed: int = 0):
+        assert global_batch % num_hosts == 0
+        self.global_batch = global_batch
+        self.host_batch = global_batch // num_hosts
+        self.host_index = host_index
+        self.num_hosts = num_hosts
+        self.seed = seed
+        self._gen = gen
+
+    def host_slice(self, step: int) -> Dict[str, np.ndarray]:
+        """Generate ONLY this host's rows (readers scale out per host)."""
+        full = self._gen(step, self.seed)
+        lo = self.host_index * self.host_batch
+        hi = lo + self.host_batch
+        return {k: v[lo:hi] for k, v in full.items()}
+
+    def pipeline(self, prefetch: int = 2, start_step: int = 0) -> DataPipeline:
+        return DataPipeline(self.host_slice, prefetch, start_step)

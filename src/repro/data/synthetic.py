@@ -1,0 +1,137 @@
+"""Synthetic data generators.
+
+DLRM click logs: per-table multi-hot index lists whose LENGTHS follow the
+paper's power-law (Fig. 7 KDE shapes — a few hot tables with many lookups)
+and whose INDEX values follow a Zipf over the hash space (hot rows exist,
+motivating the caching observations of section III-A.2). Labels are generated
+from a planted logistic model so training has signal and loss can decrease.
+
+LM token streams: uniform random tokens (throughput benchmarking needs
+shape-realistic, not linguistically-real, data) with deterministic per-step
+seeds so every data shard regenerates its slice independently — the
+reader-server decoupling of section IV-B.2 without materializing storage.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import DLRMConfig, ModelConfig, Shape
+
+# ---------------------------------------------------------------------------
+# DLRM
+# ---------------------------------------------------------------------------
+
+
+def _zipf_indices(rng: np.random.RandomState, hash_size: int, n: int,
+                  a: float = 1.3) -> np.ndarray:
+    """Zipf-ish draws clipped into [0, hash_size)."""
+    raw = rng.zipf(a, size=n) - 1
+    return (raw % max(hash_size, 1)).astype(np.int32)
+
+
+def make_dlrm_batch(cfg: DLRMConfig, batch: int, step: int = 0,
+                    seed: int = 0) -> Dict[str, np.ndarray]:
+    """Returns {dense (B, n_dense) f32, idx (B, F, L) i32 (-1 pads, already
+    in-table — NOT offset), label (B,) f32}."""
+    rng = np.random.RandomState(seed * 1_000_003 + step)
+    f, trunc = cfg.n_sparse_features, cfg.truncation
+    dense = rng.randn(batch, cfg.n_dense_features).astype(np.float32)
+
+    idx = np.full((batch, f, trunc), -1, np.int32)
+    planted = 0.0
+    for t in range(f):
+        mean_len = min(cfg.mean_lookups[t], trunc)
+        lens = np.clip(rng.poisson(mean_len, size=batch), 1, trunc)
+        for b in range(batch):
+            vals = _zipf_indices(rng, cfg.hash_sizes[t], lens[b])
+            idx[b, t, :lens[b]] = vals
+        planted = planted + (idx[:, t, 0] % 7 - 3)
+
+    # planted logistic labels: depend on dense mean + a hash of first indices
+    score = dense[:, :8].mean(axis=1) * 2.0 + planted * 0.3
+    prob = 1.0 / (1.0 + np.exp(-score))
+    label = (rng.rand(batch) < prob).astype(np.float32)
+    return {"dense": dense, "idx": idx, "label": label}
+
+
+def dlrm_batch_specs(cfg: DLRMConfig, batch: int) -> Dict:
+    """ShapeDtypeStruct stand-ins for the dry-run (indices already offset)."""
+    import jax.numpy as jnp
+    return {
+        "dense": jax.ShapeDtypeStruct((batch, cfg.n_dense_features),
+                                      jnp.float32),
+        "idx": jax.ShapeDtypeStruct(
+            (batch, cfg.n_sparse_features, cfg.truncation), jnp.int32),
+        "label": jax.ShapeDtypeStruct((batch,), jnp.float32),
+    }
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+def vlm_prefix(seq_len: int) -> int:
+    """Image-prefix length for VLM archs (patch embeddings from the stub
+    frontend): 256 patches, bounded for tiny smoke sequences."""
+    return min(256, max(4, seq_len // 8))
+
+
+def make_lm_batch(cfg: ModelConfig, batch: int, seq_len: int, step: int = 0,
+                  seed: int = 0) -> Dict[str, np.ndarray]:
+    rng = np.random.RandomState(seed * 7_777_777 + step + 1)
+    out: Dict[str, np.ndarray] = {}
+    if cfg.frontend == "vision":
+        prefix = vlm_prefix(seq_len)
+        text = seq_len - prefix
+        out["embeds"] = rng.randn(batch, prefix,
+                                  cfg.d_model).astype(np.float32) * 0.02
+        out["tokens"] = rng.randint(0, cfg.vocab_size,
+                                    size=(batch, text)).astype(np.int32)
+        out["targets"] = rng.randint(0, cfg.vocab_size,
+                                     size=(batch, seq_len)).astype(np.int32)
+        # image positions don't contribute to the loss
+        out["loss_mask"] = np.concatenate(
+            [np.zeros((batch, prefix), np.float32),
+             np.ones((batch, text), np.float32)], axis=1)
+    elif cfg.frontend == "audio":
+        out["embeds"] = rng.randn(batch, seq_len,
+                                  cfg.d_model).astype(np.float32) * 0.02
+        out["targets"] = rng.randint(
+            0, cfg.vocab_size,
+            size=(batch, seq_len, cfg.n_codebooks)).astype(np.int32)
+        out["loss_mask"] = np.ones((batch, seq_len), np.float32)
+    else:
+        out["tokens"] = rng.randint(0, cfg.vocab_size,
+                                    size=(batch, seq_len)).astype(np.int32)
+        out["targets"] = np.concatenate(
+            [out["tokens"][:, 1:],
+             rng.randint(0, cfg.vocab_size, size=(batch, 1))],
+            axis=1).astype(np.int32)
+        out["loss_mask"] = np.ones((batch, seq_len), np.float32)
+    return out
+
+
+def lm_batch_specs(cfg: ModelConfig, batch: int, seq_len: int) -> Dict:
+    import jax.numpy as jnp
+    out: Dict = {}
+    if cfg.frontend == "vision":
+        prefix = vlm_prefix(seq_len)
+        text = seq_len - prefix
+        out["embeds"] = jax.ShapeDtypeStruct((batch, prefix, cfg.d_model),
+                                             jnp.float32)
+        out["tokens"] = jax.ShapeDtypeStruct((batch, text), jnp.int32)
+        out["targets"] = jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)
+        out["loss_mask"] = jax.ShapeDtypeStruct((batch, seq_len), jnp.float32)
+    elif cfg.frontend == "audio":
+        out["embeds"] = jax.ShapeDtypeStruct((batch, seq_len, cfg.d_model),
+                                             jnp.float32)
+        out["targets"] = jax.ShapeDtypeStruct(
+            (batch, seq_len, cfg.n_codebooks), jnp.int32)
+        out["loss_mask"] = jax.ShapeDtypeStruct((batch, seq_len), jnp.float32)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)
+        out["targets"] = jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)
+        out["loss_mask"] = jax.ShapeDtypeStruct((batch, seq_len), jnp.float32)
+    return out

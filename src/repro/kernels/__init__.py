@@ -1,0 +1,25 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+The paper (section III-A.2) identifies irregular embedding-vector access as the
+throughput limiter of recommendation training, and section VII notes prior
+near-memory accelerators are "not optimized for gradient aggregation". The
+three kernels here cover exactly that path:
+
+  embedding_bag    fused multi-hot gather + pooling (fwd) — the EMB lookup
+  dot_interaction  pairwise-dot feature interaction (section III-A.3), MXU-shaped
+  rowwise_adagrad  deduplicated sparse gradient aggregation + row-wise
+                   AdaGrad apply — the EMB backward/update
+  flash_attention  causal streaming attention with static triangle
+                   skipping — the prefill_32k hot spot of the LM family
+
+Each kernel ships an `ops.py` jit wrapper and a pure-jnp oracle in `ref.py`;
+tests sweep shapes/dtypes with interpret=True. On non-TPU backends the
+wrappers transparently fall back to the oracle so the full system trains on
+CPU; `interpret=True` executes the real kernel body for validation.
+"""
+from repro.kernels.ops import (  # noqa: F401
+    dot_interaction,
+    embedding_bag,
+    flash_attention,
+    rowwise_adagrad_update,
+)

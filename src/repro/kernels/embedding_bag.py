@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: fused multi-hot embedding gather + pooling.
+
+TPU-native design (DESIGN.md section 2): the table stays in HBM
+(`MemorySpace.ANY`); bag indices are scalar-prefetched into SMEM so they can
+drive row DMAs; each grid step owns one bag and double-buffers row copies
+HBM->VMEM (fetch row l+1 while accumulating row l), pooling in fp32 VREGs.
+The embedding dim D is padded to the 128-lane width by the ops.py wrapper.
+
+This replaces the GPU's warp-per-bag gather with an explicitly scheduled
+DMA pipeline — the TPU analogue of the paper's "irregular vector access"
+bottleneck (section III-A.2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bag_kernel(idx_ref, table_ref, out_ref, rows_vmem, sems, *,
+                max_len: int, mode: str):
+    """One grid step = one bag. idx_ref: (B, L) SMEM; table_ref: (H, D) HBM;
+    out_ref: (1, D) VMEM block; rows_vmem: (2, 1, D) scratch; sems: 2 DMAs."""
+    b = pl.program_id(0)
+    d = out_ref.shape[-1]
+
+    def start_fetch(slot, l):
+        ix = jnp.maximum(idx_ref[b, l], 0)
+        pltpu.make_async_copy(table_ref.at[pl.ds(ix, 1)],
+                              rows_vmem.at[slot], sems.at[slot]).start()
+
+    start_fetch(0, 0)
+
+    def body(l, carry):
+        acc, cnt = carry
+        slot = jax.lax.rem(l, 2)
+
+        @pl.when(l + 1 < max_len)
+        def _():
+            start_fetch(jax.lax.rem(l + 1, 2), l + 1)
+
+        pltpu.make_async_copy(table_ref.at[pl.ds(0, 1)],
+                              rows_vmem.at[slot], sems.at[slot]).wait()
+        valid = idx_ref[b, l] >= 0
+        acc = acc + jnp.where(valid,
+                              rows_vmem[slot].astype(jnp.float32), 0.0)
+        cnt = cnt + jnp.where(valid, 1.0, 0.0)
+        return acc, cnt
+
+    acc, cnt = jax.lax.fori_loop(
+        0, max_len, body,
+        (jnp.zeros((1, d), jnp.float32), jnp.zeros((), jnp.float32)))
+    if mode == "mean":
+        acc = acc / jnp.maximum(cnt, 1.0)
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mode", "interpret"))
+def embedding_bag_kernel(table: jax.Array, indices: jax.Array,
+                         mode: str = "sum",
+                         interpret: bool = False) -> jax.Array:
+    """table: (H, D) with D a multiple of 128 (pad in ops.py);
+    indices: (B, L) int32 (-1 pads). Returns (B, D) pooled rows."""
+    b, max_len = indices.shape
+    _, d = table.shape
+    kernel = functools.partial(_bag_kernel, max_len=max_len, mode=mode)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b,),
+            in_specs=[pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY)],
+            out_specs=pl.BlockSpec((1, d), lambda i, idx_ref: (i, 0)),
+            scratch_shapes=[
+                pltpu.MemorySpace.VMEM((2, 1, d), table.dtype),
+                pltpu.SemaphoreType.DMA((2,)),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, d), table.dtype),
+        interpret=interpret,
+    )(indices, table)

@@ -1,0 +1,187 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Responsibilities:
+  * pad the embedding dim to the TPU lane width (128) and the feature count
+    to the sublane width (8) before invoking kernels, un-pad after;
+  * dispatch: real Pallas kernel on TPU, `interpret=True` kernel body when
+    explicitly requested (tests), pure-jnp oracle otherwise (CPU runtime);
+  * differentiability: embedding_bag carries a custom VJP (scatter-add);
+    dot_interaction is natively differentiable through the oracle and uses
+    the kernel only for the forward pass.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.dot_interaction import dot_interaction_kernel
+from repro.kernels.embedding_bag import embedding_bag_kernel
+from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.rowwise_adagrad import rowwise_adagrad_kernel
+
+LANE = 128
+SUBLANE = 8
+
+
+def _use_pallas(force: Optional[bool]) -> bool:
+    if force is not None:
+        return force
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+# ---------------------------------------------------------------------------
+# embedding_bag
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def embedding_bag(table: jax.Array, indices: jax.Array, mode: str = "sum",
+                  use_kernel: Optional[bool] = None,
+                  interpret: bool = False) -> jax.Array:
+    """Pooled multi-hot lookup. table: (H, D); indices: (B, L) int32, -1 pads.
+    Returns (B, D)."""
+    if _use_pallas(use_kernel) or interpret:
+        d = table.shape[1]
+        tp = _pad_to(table, LANE, 1)
+        out = embedding_bag_kernel(tp, indices, mode=mode,
+                                   interpret=interpret)
+        return out[:, :d]
+    return ref.embedding_bag_ref(table, indices, mode)
+
+
+def _bag_fwd(table, indices, mode, use_kernel, interpret):
+    out = embedding_bag(table, indices, mode, use_kernel, interpret)
+    return out, (indices, table.shape[0],
+                 (indices >= 0).sum(1) if mode == "mean" else None)
+
+
+def _bag_bwd(mode, use_kernel, interpret, res, g):
+    indices, h, cnt = res
+    b, l = indices.shape
+    gf = g.astype(jnp.float32)
+    if mode == "mean":
+        gf = gf / jnp.maximum(cnt, 1)[:, None]
+    valid = indices >= 0
+    idx = jnp.where(valid, indices, h)
+    gexp = jnp.broadcast_to(gf[:, None, :], (b, l, g.shape[-1]))
+    gtab = jnp.zeros((h + 1, g.shape[-1]), jnp.float32).at[idx.reshape(-1)] \
+        .add(jnp.where(valid.reshape(-1)[:, None], gexp.reshape(b * l, -1),
+                       0.0))[:h]
+    return gtab.astype(g.dtype), None
+
+
+embedding_bag.defvjp(_bag_fwd, _bag_bwd)
+
+# ---------------------------------------------------------------------------
+# dot_interaction
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def dot_interaction(z: jax.Array, tile_b: int = 8,
+                    use_kernel: Optional[bool] = None,
+                    interpret: bool = False) -> jax.Array:
+    """z: (B, F, D) -> (B, F*(F-1)//2) strict-lower-triangle pairwise dots."""
+    if _use_pallas(use_kernel) or interpret:
+        b, f, d = z.shape
+        zp = _pad_to(_pad_to(z, LANE, 2), SUBLANE, 1)
+        tb = tile_b if b % tile_b == 0 else 1
+        s = dot_interaction_kernel(zp, tile_b=tb, interpret=interpret)
+        rows, cols = np.tril_indices(f, -1)     # static pack, fuses in XLA
+        return s[:, rows, cols]
+    return ref.dot_interaction_ref(z)
+
+
+def _dot_fwd(z, tile_b, use_kernel, interpret):
+    return dot_interaction(z, tile_b, use_kernel, interpret), z
+
+
+def _dot_bwd(tile_b, use_kernel, interpret, z, g):
+    b, f, d = z.shape
+    rows, cols = np.tril_indices(f, -1)
+    s_bar = jnp.zeros((b, f, f), jnp.float32)
+    s_bar = s_bar.at[:, rows, cols].set(g.astype(jnp.float32))
+    s_bar = s_bar + jnp.swapaxes(s_bar, 1, 2)   # d(zi.zj) hits both rows
+    gz = jnp.einsum("bfg,bgd->bfd", s_bar, z.astype(jnp.float32))
+    return (gz.astype(z.dtype),)
+
+
+dot_interaction.defvjp(_dot_fwd, _dot_bwd)
+
+# ---------------------------------------------------------------------------
+# rowwise_adagrad (not differentiated through — it IS the optimizer)
+# ---------------------------------------------------------------------------
+
+
+def rowwise_adagrad_update(table: jax.Array, accum: jax.Array,
+                           indices: jax.Array, grads: jax.Array,
+                           lr, eps: float = 1e-8,
+                           use_kernel: Optional[bool] = None,
+                           interpret: bool = False
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """Apply deduplicated row-wise AdaGrad.
+
+    table: (H, D); accum: (H,) fp32; indices: (N,) int32 per-lookup rows
+    (-1 pads); grads: (N, D) per-lookup gradients. Returns (table', accum').
+    """
+    h, d = table.shape
+    if _use_pallas(use_kernel) or interpret:
+        uniq, gsum = ref.dedup_grads_ref(indices, grads, h)
+        tp = _pad_to(table, LANE, 1)
+        gp = _pad_to(gsum, LANE, 1)
+        # the kernel computes mean(g^2) over the PADDED dim Dp; scaling the
+        # padded grads by sqrt(Dp/d) makes that equal the true mean over d,
+        # and lr is divided by the same factor so the weight delta
+        # lr_k * g_k * rsqrt(...) stays lr * g * rsqrt(...).
+        scale = np.sqrt(tp.shape[1] / d).astype(np.float32)
+        new_t, new_a = rowwise_adagrad_kernel(
+            tp, accum, uniq, gp * scale,
+            jnp.asarray(lr, jnp.float32) / scale,
+            eps=eps, interpret=interpret)
+        return new_t[:, :d], new_a[:, 0]
+    return ref.rowwise_adagrad_ref(table, accum, indices, grads, lr, eps)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention (forward; training uses the XLA blockwise fallback)
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    block_q: int = 128, block_k: int = 128,
+                    causal: bool = True,
+                    use_kernel: Optional[bool] = None,
+                    interpret: bool = False) -> jax.Array:
+    """q, k, v: (b, s, h, dh) (layer-zoo layout). Pads dh to the lane width
+    and s to the block size; padded KV rows are masked by causality."""
+    if not (_use_pallas(use_kernel) or interpret):
+        from repro.kernels.ref import flash_attention_ref
+        out = flash_attention_ref(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                                  v.swapaxes(1, 2), causal)
+        return out.swapaxes(1, 2)
+    assert causal, "kernel path masks seq padding via causality"
+    b, s, h, dh = q.shape
+    qt = _pad_to(_pad_to(q.swapaxes(1, 2), LANE, 3), block_q, 2)
+    kt = _pad_to(_pad_to(k.swapaxes(1, 2), LANE, 3), block_k, 2)
+    vt = _pad_to(_pad_to(v.swapaxes(1, 2), LANE, 3), block_k, 2)
+    # dh padding changes softmax scale: kernel divides by sqrt(padded dh);
+    # pre-scale q to compensate
+    scale_fix = np.sqrt(qt.shape[-1] / dh).astype(np.float32)
+    out = flash_attention_kernel(qt * scale_fix, kt, vt, block_q=block_q,
+                                 block_k=block_k, causal=True,
+                                 interpret=interpret)
+    return out[:, :, :s, :dh].swapaxes(1, 2)

@@ -1,0 +1,111 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the correctness references (tests assert_allclose kernels against
+them) AND the CPU fallback path used when running the full system without a
+TPU. They are written for clarity, not speed.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def embedding_bag_ref(table: jax.Array, indices: jax.Array,
+                      mode: str = "sum") -> jax.Array:
+    """Multi-hot embedding lookup + pooling.
+
+    table: (H, D); indices: (B, L) int32, -1 = padding slot.
+    Returns (B, D) pooled embeddings (sum or mean over valid slots).
+    """
+    valid = indices >= 0
+    rows = table[jnp.maximum(indices, 0)]                    # (B, L, D)
+    rows = jnp.where(valid[..., None], rows.astype(jnp.float32), 0.0)
+    out = rows.sum(axis=1)
+    if mode == "mean":
+        cnt = jnp.maximum(valid.sum(axis=1, keepdims=True), 1)
+        out = out / cnt
+    return out.astype(table.dtype)
+
+
+def dot_interaction_ref(z: jax.Array) -> jax.Array:
+    """Pairwise dot-product feature interaction (paper section III-A.3).
+
+    z: (B, F, D) stacked feature vectors (dense projection + pooled EMBs).
+    Returns (B, F*(F-1)//2): strictly-lower-triangle of z @ z^T per example.
+    """
+    f = z.shape[1]
+    s = jnp.einsum("bfd,bgd->bfg", z.astype(jnp.float32),
+                   z.astype(jnp.float32))
+    rows, cols = np.tril_indices(f, -1)
+    return s[:, rows, cols].astype(z.dtype)
+
+
+def rowwise_adagrad_ref(table: jax.Array, accum: jax.Array,
+                        indices: jax.Array, grads: jax.Array,
+                        lr: float, eps: float = 1e-8):
+    """Deduplicating sparse row-wise AdaGrad (the paper's 'gradient
+    aggregation' step).
+
+    table: (H, D); accum: (H,) row-wise second-moment; indices: (N,) int32
+    (-1 = padding); grads: (N, D) per-lookup gradients.
+
+    Duplicate rows are aggregated FIRST, then a single update is applied —
+    matching a synchronous dedup (not HogWild's racy per-duplicate applies).
+    Returns (new_table, new_accum).
+    """
+    h, d = table.shape
+    valid = indices >= 0
+    idx = jnp.where(valid, indices, h)                       # h = sentinel
+    gsum = jnp.zeros((h + 1, d), jnp.float32).at[idx].add(
+        jnp.where(valid[:, None], grads.astype(jnp.float32), 0.0))[:h]
+    touched = jnp.zeros((h + 1,), bool).at[idx].set(valid)[:h]
+    g2 = jnp.mean(jnp.square(gsum), axis=-1)                 # (H,)
+    new_accum = accum + jnp.where(touched, g2, 0.0)
+    upd = lr * gsum * jax.lax.rsqrt(new_accum[:, None] + eps)
+    new_table = table - jnp.where(touched[:, None], upd, 0.0
+                                  ).astype(table.dtype)
+    return new_table.astype(table.dtype), new_accum
+
+
+def dedup_grads_ref(indices: jax.Array, grads: jax.Array, num_rows: int):
+    """Aggregate per-lookup grads into unique-row grads — O(n log n) in the
+    number of LOOKUPS (sort + run-length segment sum), independent of the
+    table height (the paper's flat CPU hash-size curve, Fig. 12, depends on
+    exactly this property).
+
+    Returns (unique_idx (N,), summed_grads (N, D)): each unique row appears
+    once (at its run head in sorted order); all other slots are -1 / zeros —
+    the layout the rowwise_adagrad kernel consumes (it skips -1).
+    """
+    n, d = grads.shape
+    valid = indices >= 0
+    safe = jnp.where(valid, indices, num_rows)               # pads sort last
+    order = jnp.argsort(safe)
+    s_idx = safe[order]
+    s_g = jnp.where(valid[order][:, None], grads[order].astype(jnp.float32),
+                    0.0)
+    is_head = jnp.concatenate(
+        [jnp.ones((1,), bool), s_idx[1:] != s_idx[:-1]])
+    seg = jnp.cumsum(is_head) - 1                            # run id per slot
+    gsum_by_run = jax.ops.segment_sum(s_g, seg, num_segments=n)
+    s_valid = s_idx < num_rows
+    uniq = jnp.where(is_head & s_valid, s_idx, -1).astype(jnp.int32)
+    gsum = jnp.where((is_head & s_valid)[:, None], gsum_by_run[seg], 0.0)
+    return uniq, gsum
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True) -> jax.Array:
+    """Oracle for the flash_attention kernel. q,k,v: (b, h, s, dh)."""
+    dh = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(
+        jnp.asarray(dh, jnp.float32))
+    if causal:
+        sq, sk = q.shape[2], k.shape[2]
+        mask = np.arange(sk)[None, :] > np.arange(sq)[:, None]
+        s = jnp.where(jnp.asarray(mask)[None, None], -1e30, s)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

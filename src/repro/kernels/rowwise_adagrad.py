@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: fused sparse gradient aggregation + row-wise AdaGrad.
+
+The paper (section VII) notes near-memory designs (RecNMP, TensorDIMM) are "not
+optimized for gradient aggregation" — this is the training-side hot spot.
+The ops.py wrapper first DEDUPLICATES per-lookup gradients (duplicate rows in
+a batch are summed — the synchronous replacement for HogWild's racy applies,
+DESIGN.md section 2), then this kernel streams unique rows through VMEM:
+
+  per grid step (one updated row):
+    DMA row + accumulator in (HBM->VMEM), compute
+      acc' = acc + mean(g^2);  w' = w - lr * g * rsqrt(acc' + eps)
+    DMA row + accumulator back (VMEM->HBM), in-place via io aliasing.
+
+Padding slots (index -1) are skipped with pl.when, so a fixed-shape lowered
+kernel serves any batch sparsity pattern.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rwadagrad_kernel(idx_ref, gsum_ref, lr_ref, table_ref, accum_ref,
+                      table_out, accum_out, row_vmem, acc_vmem, sems,
+                      *, eps: float):
+    """Grid step i updates unique row idx_ref[i].
+
+    idx_ref: (N,) SMEM; gsum_ref: (1, D) VMEM block (deduped grad);
+    table_ref/table_out: (H, D) HBM aliased; accum_ref/accum_out: (H, 1) HBM
+    aliased; row_vmem: (1, D); acc_vmem: (1, 1); sems: 2 DMA semaphores.
+    """
+    i = pl.program_id(0)
+    ix = idx_ref[i]
+
+    @pl.when(ix >= 0)
+    def _():
+        # fetch row + accumulator
+        cp_r = pltpu.make_async_copy(table_ref.at[pl.ds(ix, 1)], row_vmem,
+                                     sems.at[0])
+        cp_a = pltpu.make_async_copy(accum_ref.at[pl.ds(ix, 1)], acc_vmem,
+                                     sems.at[1])
+        cp_r.start()
+        cp_a.start()
+        cp_r.wait()
+        cp_a.wait()
+
+        g = gsum_ref[...].astype(jnp.float32)                # (1, D)
+        acc_new = acc_vmem[...].astype(jnp.float32) + \
+            jnp.mean(jnp.square(g), axis=-1, keepdims=True)
+        w_new = row_vmem[...].astype(jnp.float32) - \
+            lr_ref[0] * g * jax.lax.rsqrt(acc_new + eps)
+
+        row_vmem[...] = w_new.astype(row_vmem.dtype)
+        acc_vmem[...] = acc_new.astype(acc_vmem.dtype)
+
+        cp_wr = pltpu.make_async_copy(row_vmem, table_out.at[pl.ds(ix, 1)],
+                                      sems.at[0])
+        cp_wa = pltpu.make_async_copy(acc_vmem, accum_out.at[pl.ds(ix, 1)],
+                                      sems.at[1])
+        cp_wr.start()
+        cp_wa.start()
+        cp_wr.wait()
+        cp_wa.wait()
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def rowwise_adagrad_kernel(table: jax.Array, accum: jax.Array,
+                           uniq_idx: jax.Array, gsum: jax.Array,
+                           lr: jax.Array, eps: float = 1e-8,
+                           interpret: bool = False):
+    """table: (H, D) D % 128 == 0; accum: (H, 1) fp32; uniq_idx: (N,) int32
+    (-1 skips); gsum: (N, D) deduped row grads; lr: () fp32.
+    Returns (new_table, new_accum) updated in place (io aliasing)."""
+    h, d = table.shape
+    n = uniq_idx.shape[0]
+    kernel = functools.partial(_rwadagrad_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n,),
+            in_specs=[
+                pl.BlockSpec((1, d), lambda i, idx_ref: (i, 0)),   # gsum
+                pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),  # lr
+                pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),   # table
+                pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),   # accum
+            ],
+            out_specs=[
+                pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+                pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+            ],
+            scratch_shapes=[
+                pltpu.MemorySpace.VMEM((1, d), table.dtype),
+                pltpu.MemorySpace.VMEM((1, 1), jnp.float32),
+                pltpu.SemaphoreType.DMA((2,)),
+            ],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((h, d), table.dtype),
+                   jax.ShapeDtypeStruct((h, 1), jnp.float32)],
+        input_output_aliases={3: 0, 4: 1},
+        interpret=interpret,
+    )(uniq_idx, gsum, jnp.asarray(lr, jnp.float32).reshape(1), table,
+      accum.reshape(h, 1).astype(jnp.float32))

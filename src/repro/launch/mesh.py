@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module must never
+touch jax device state (smoke tests see 1 CPU device; only dryrun.py sets
+XLA_FLAGS for 512 placeholder devices before importing jax).
+
+Mesh semantics (DESIGN.md section 5): `data` = the paper's trainer axis,
+`model` = the paper's sparse-parameter-server axis, `pod` = pod-level data
+parallelism (and the EASGD replica axis).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape=(2, 4), axes=("data", "model")) -> jax.sharding.Mesh:
+    """Small mesh for CPU integration tests (requires
+    xla_force_host_platform_device_count >= prod(shape))."""
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

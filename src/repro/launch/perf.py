@@ -1,0 +1,186 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Performance-iteration harness (section Perf): re-lower a dry-run cell under a
+named VARIANT (sharding rules / config change), re-analyse, and append the
+(hypothesis, before, after) record to runs/perf/<cell>__<variant>.json.
+
+Each variant below documents its napkin-math hypothesis; EXPERIMENTS.md
+section Perf narrates confirmed/refuted.
+
+    python -m repro.launch.perf --cell qwen1.5-32b/train_4k --variant zero_dp
+    python -m repro.launch.perf --cell qwen1.5-32b/train_4k --all
+"""
+import argparse   # noqa: E402
+import json       # noqa: E402
+from typing import Any, Dict  # noqa: E402
+
+from repro.configs import shapes_for  # noqa: E402
+from repro.launch.dryrun import run_cell  # noqa: E402
+from repro.nn.sharding import ZERO_DP_RULES  # noqa: E402
+
+# variant = {"rules": overrides-or-table, "config": config overrides,
+#            "hypothesis": one-liner}
+VARIANTS: Dict[str, Dict[str, Dict[str, Any]]] = {
+    "qwen1.5-32b/train_4k": {
+        "baseline": {"hypothesis": "paper-faithful DP(trainer) x TP(PS) "
+                     "mapping; expect TP activation all-reduces + FSDP "
+                     "gathers to dominate"},
+        "causal_skip": {
+            "config": {"causal_skip": True},
+            "hypothesis": "static causal block skipping removes the "
+            "masked upper-triangle attention work: ~2x fewer attention "
+            "FLOPs (~8% of total at 4k) and the matching slice traffic"},
+        "head_pad48": {
+            "config": {"n_heads": 48, "n_kv_heads": 48, "d_head": 128},
+            "hypothesis": "40 heads don't divide TP=16 so attention runs "
+            "replicated on every model shard (per-chip dot FLOPs >> "
+            "global/256); padding to 48 heads shards it 16-ways: per-chip "
+            "attention compute drops ~13x at +20% attention params"},
+        "zero_dp": {
+            "rules": ZERO_DP_RULES,
+            "hypothesis": "drop TP entirely: batch over all 256 chips "
+            "kills the ~2 GB/layer TP activation all-reduces; only bf16 "
+            "weight gathers (3 x 64 GB x 15/16 per step) remain -> "
+            "collective term ~4 s -> ~1.2 s"},
+        "zero_dp_skip": {
+            "rules": ZERO_DP_RULES,
+            "config": {"causal_skip": True},
+            "hypothesis": "compose the two wins"},
+        "zero_dp_skip_bf16grad": {
+            "rules": ZERO_DP_RULES,
+            "config": {"causal_skip": True,
+                       "grad_reduce_dtype": "bfloat16"},
+            "hypothesis": "fp32 grad reduce-scatter moves 2 x 128 GB "
+            "x 255/256 per step (~5.1 s of the remaining 11.1 s "
+            "collective bound); bf16 halves it -> bound ~8.5 s"},
+    },
+    "granite-moe-1b-a400m/train_4k": {
+        "baseline": {"hypothesis": "expert-parallel MoE: dispatch "
+                     "all-to-all + FSDP gathers dominate"},
+        "cf10": {
+            "config": {"capacity_factor": 1.0},
+            "hypothesis": "capacity 1.25 -> 1.0 cuts expert tile bytes and "
+            "dispatch traffic 20% at the cost of more dropped tokens"},
+        "zero_dp": {
+            "rules": ZERO_DP_RULES,
+            "hypothesis": "experts gathered per layer (2.4 GB bf16) make "
+            "dispatch group-LOCAL: the all-to-all disappears; collective "
+            "term becomes pure weight-gather traffic"},
+        "zero_dp_cf10": {
+            "rules": ZERO_DP_RULES,
+            "config": {"capacity_factor": 1.0},
+            "hypothesis": "compose zero_dp with tighter capacity: expert "
+            "tiles shrink 20% on top of the local dispatch"},
+        "zero_dp_noremat": {
+            "rules": ZERO_DP_RULES,
+            "config": {"remat": "none"},
+            "hypothesis": "at 4096 tokens/chip the 1B model's activations "
+            "fit without remat (~1.6 GB); dropping the rematerialized "
+            "forward removes one of the three weight-gather passes -> "
+            "collective ~ -1/3"},
+    },
+    "internvl2-26b/train_4k": {
+        "baseline": {"hypothesis": "26B dense; same TP-AR-bound regime as "
+                     "qwen but divisible heads (48): expect zero_dp to "
+                     "generalize"},
+        "zero_dp": {
+            "rules": ZERO_DP_RULES,
+            "hypothesis": "TP activation ARs vanish; weight gathers "
+            "(3 x 52 GB bf16) + grad reduction remain"},
+        "zero_dp_skip": {
+            "rules": ZERO_DP_RULES,
+            "config": {"causal_skip": True},
+            "hypothesis": "compose with causal skipping"},
+    },
+    "qwen1.5-32b/prefill_32k": {
+        "baseline": {"hypothesis": "32k prefill: attention is ~40% of "
+                     "FLOPs and the dynamic blockwise path does 2x the "
+                     "causal work (model/HLO 0.62)"},
+        "causal_skip": {
+            "config": {"causal_skip": True},
+            "hypothesis": "static triangle skipping: ~1.8x fewer "
+            "attention FLOPs at 32k and half the KV re-read traffic"},
+        "head_pad48_skip": {
+            "config": {"n_heads": 48, "n_kv_heads": 48, "d_head": 128,
+                       "causal_skip": True},
+            "hypothesis": "pad heads to 48 so attention shards 16-ways "
+            "(kills the 6.8x per-chip replication) AND skip causal "
+            "upper-triangle blocks: per-chip ~2 s, KV cache +20%"},
+        "dp_serve": {
+            "rules": {"batch": ("pod", "data", "model"),
+                      "act_batch": ("pod", "data", "model"),
+                      "heads": None, "kv_heads": None, "ff": None,
+                      "vocab": None, "act_vocab": None, "act_heads": None,
+                      "act_ff": None, "cache_kv": None, "cache_seq": None,
+                      "_fallback": None},
+            "hypothesis": "32 sequences over 256 chips = seq-only "
+            "parallelism is impossible (batch 32 < 256); GSPMD pads 8x -> "
+            "expect refutation (kept as the negative control)"},
+    },
+    "dlrm-m3/train_b64k": {
+        "baseline": {"hypothesis": "2-axis row-wise table; naive gather "
+                     "moves un-pooled (B,F,L,d) rows across shards"},
+        "pooled_psum": {
+            "config": {"placement": "row_wise", "lookup_impl": "psum",
+                       "hbm_budget_gb": 8.0},
+            "hypothesis": "PS-side pooling (shard_map + psum of pooled "
+            "(B,F,d)) cuts forward cross-shard bytes by ~L=32x vs "
+            "gathering rows"},
+        "column_wise": {
+            "config": {"placement": "column_wise"},
+            "hypothesis": "column-wise placement balances load perfectly "
+            "but every lookup touches all 16 shards: traffic ~same, "
+            "latency-bound on real HW (paper's d=64 is only 4 lanes/shard "
+            "- expect no win; refutation expected)"},
+        "pooled_psum_bf16": {
+            "config": {"placement": "row_wise", "lookup_impl": "psum",
+                       "hbm_budget_gb": 8.0,
+                       "grad_reduce_dtype": "bfloat16"},
+            "hypothesis": "the remaining 0.29 s is the single fp32 gsum "
+            "psum (2 x 7.4 GB ring); bf16 halves it -> ~0.15 s"},
+    },
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True,
+                    help="arch/shape, e.g. qwen1.5-32b/train_4k")
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="runs/perf")
+    args = ap.parse_args()
+
+    arch, shape_name = args.cell.split("/")
+    shape = shapes_for(arch)[shape_name]
+    cell_variants = VARIANTS[args.cell]
+    names = list(cell_variants) if args.all else [args.variant]
+    os.makedirs(args.out, exist_ok=True)
+
+    for name in names:
+        spec = cell_variants[name]
+        print(f"[perf] {args.cell} :: {name}", flush=True)
+        rec = run_cell(arch, shape, args.multi_pod,
+                       rules_overrides=spec.get("rules"),
+                       config_overrides=spec.get("config"))
+        rec["variant"] = name
+        rec["hypothesis"] = spec.get("hypothesis", "")
+        path = os.path.join(
+            args.out, f"{arch}__{shape_name}__{name}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        if rec["ok"]:
+            print(f"   compute={rec['compute_s']:.3f}s "
+                  f"(per-chip {rec.get('compute_s_per_chip', -1):.3f}s) "
+                  f"memory={rec['memory_s']:.3f}s "
+                  f"collective={rec['collective_s']:.3f}s "
+                  f"dominant={rec['dominant']} "
+                  f"bound={rec['bound_s']:.3f}s", flush=True)
+        else:
+            print(f"   FAIL {rec.get('error', '')[:120]}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Roofline model for the target hardware (TPU v5e-class chip).
+
+  compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+  memory term     = HLO_bytes / (chips x HBM_bw)
+  collective term = per-chip collective bytes / link_bw
+                    (equivalently global collective bytes / (chips x link_bw))
+
+FLOPs/bytes are GLOBAL (from pre-partition StableHLO, loop-corrected);
+collective bytes are PER-CHIP (from post-SPMD HLO). The dominant term is the
+step-time lower bound the perf loop iterates on; roofline_fraction =
+model_flops / (dominant_s x chips x peak) is "useful-FLOP utilization at the
+bound" (an MFU upper bound estimate).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class HWSpec:
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = 197e12      # per chip
+    hbm_bw: float = 819e9                # bytes/s per chip
+    ici_bw: float = 50e9                 # bytes/s per link
+    hbm_bytes: float = 16e9              # capacity per chip
+
+
+HW = HWSpec()
+
+
+def roofline_terms(flops: float, bytes_hbm: float,
+                   collective_bytes_per_chip: float, chips: int,
+                   model_flops: float, hw: HWSpec = HW) -> Dict:
+    compute_s = flops / (chips * hw.peak_flops_bf16)
+    memory_s = bytes_hbm / (chips * hw.hbm_bw)
+    collective_s = collective_bytes_per_chip / hw.ici_bw
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound_s = max(terms.values())
+    util = (model_flops / (bound_s * chips * hw.peak_flops_bf16)
+            if bound_s > 0 else 0.0)
+    return {
+        **terms,
+        "dominant": dominant,
+        "bound_s": bound_s,
+        "model_flops_ratio": (model_flops / flops) if flops else 0.0,
+        "roofline_fraction": util,
+    }

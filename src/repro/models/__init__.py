@@ -1,0 +1,10 @@
+from repro.models.lm import (  # noqa: F401
+    cache_abstract,
+    cache_pspecs,
+    decode_step,
+    init_caches,
+    lm_forward,
+    lm_loss,
+    lm_param_specs,
+    prefill_step,
+)

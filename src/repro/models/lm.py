@@ -1,0 +1,348 @@
+"""Unified causal LM covering the 10 assigned architectures.
+
+One parameterized decoder: GQA attention (RoPE neox/glm/none, optional QKV
+bias, partial rotary), SwiGLU/GELU FF or top-k MoE, Mamba-2 SSD mixers, and
+hybrid per-period layer patterns (Jamba). Layers are SCANNED over repeating
+units (the smallest pattern period) with stacked params, keeping HLO size and
+compile time flat in depth — essential for the 512-device dry-run.
+
+Modality frontends are STUBS per the assignment: `vlm` consumes precomputed
+patch embeddings, `audio` consumes precomputed EnCodec frame embeddings
+(data/synthetic.py provides them; decode feeds back codebook embeddings).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn import layers as L
+from repro.nn import mamba2 as M
+from repro.nn import moe as MOE
+from repro.nn.params import ParamSpec, stack_specs
+from repro.nn.sharding import (TRAIN_RULES, LogicalRules, gather_weight,
+                               shard_activation)
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def _block_specs(cfg: ModelConfig, kind: str, is_moe: bool) -> Dict:
+    specs: Dict[str, Any] = {"ln1": L.norm_specs(cfg.d_model, cfg.norm_type)}
+    if kind == "a":
+        specs["attn"] = L.attention_specs(cfg)
+    elif kind == "m":
+        specs["mamba"] = M.mamba_specs(cfg)
+    else:
+        raise ValueError(kind)
+    if cfg.d_ff > 0:
+        specs["ln2"] = L.norm_specs(cfg.d_model, cfg.norm_type)
+        specs["ffn"] = MOE.moe_specs(cfg) if is_moe else L.mlp_specs(cfg)
+    return specs
+
+
+def _pattern_moe_flags(cfg: ModelConfig) -> Tuple[bool, ...]:
+    """MoE-ness per pattern position — must be unit-independent."""
+    period = len(cfg.pattern)
+    if cfg.n_experts > 0:
+        assert period % cfg.moe_every == 0, (
+            "pattern period must be a multiple of moe_every for scan layout")
+    return tuple(cfg.is_moe_layer(i) for i in range(period))
+
+
+def lm_param_specs(cfg: ModelConfig) -> Dict:
+    v, d = cfg.vocab_size, cfg.d_model
+    p: Dict[str, Any] = {"embed": {}}
+    if cfg.frontend == "audio":
+        p["embed"]["codebooks"] = ParamSpec(
+            (cfg.n_codebooks, v, d), (None, "vocab", "embed"),
+            init="normal", scale=0.02)
+    else:
+        p["embed"]["tok"] = ParamSpec((v, d), ("vocab", "embed"),
+                                      init="normal", scale=0.02)
+    flags = _pattern_moe_flags(cfg)
+    p["blocks"] = {
+        f"b{i}": stack_specs(_block_specs(cfg, kind, flags[i]), cfg.n_units)
+        for i, kind in enumerate(cfg.pattern)}
+    p["final_norm"] = L.norm_specs(cfg.d_model, cfg.norm_type)
+    if not cfg.tie_embeddings:
+        out_dim = v * cfg.n_codebooks if cfg.frontend == "audio" else v
+        p["head"] = {"w": ParamSpec((d, out_dim), ("embed", "vocab"),
+                                    init="fan_in")}
+    return p
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+
+
+def embed_input(params: Dict, batch: Dict, cfg: ModelConfig,
+                rules: LogicalRules,
+                positions: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (x (B, S, D), positions (B, S)). `positions` is supplied by
+    the decode path (current cache index); defaults to arange(S)."""
+    dtype = _dtype(cfg)
+    if cfg.frontend != "audio":
+        tok_table = gather_weight(params["embed"]["tok"],
+                                  ("vocab", "embed"), rules)
+    if cfg.frontend == "vision":
+        tok = jnp.take(tok_table, batch["tokens"], axis=0)
+        x = jnp.concatenate([batch["embeds"].astype(dtype),
+                             tok.astype(dtype)], axis=1)
+    elif cfg.frontend == "audio":
+        x = batch["embeds"].astype(dtype)
+    else:
+        x = jnp.take(tok_table, batch["tokens"], axis=0).astype(dtype)
+    b, s = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    if cfg.sinusoidal_pos:
+        pos_emb = L.sinusoidal_positions(positions, cfg.d_model).astype(dtype)
+        pos_emb = shard_activation(
+            pos_emb, ("act_batch", "act_seq", "act_embed"), rules)
+        x = x + pos_emb
+    x = shard_activation(x, ("act_batch", "act_seq", "act_embed"), rules)
+    return x, positions
+
+
+def lm_logits(params: Dict, x: jax.Array, cfg: ModelConfig,
+              rules: LogicalRules) -> jax.Array:
+    dtype = _dtype(cfg)
+    x = L.apply_norm(params["final_norm"], x, cfg.norm_type, dtype=dtype,
+                     rules=rules)
+    if cfg.tie_embeddings:
+        w = gather_weight(params["embed"]["tok"].astype(dtype),
+                          ("vocab", "embed"), rules)
+        logits = jnp.einsum("bsd,vd->bsv", x, w)
+    else:
+        w = gather_weight(params["head"]["w"].astype(dtype),
+                          ("embed", "vocab"), rules)
+        logits = x @ w
+    if cfg.frontend == "audio":
+        b, s, _ = logits.shape
+        logits = logits.reshape(b, s, cfg.n_codebooks, cfg.vocab_size)
+    logits = shard_activation(
+        logits, ("act_batch", "act_seq", "act_vocab")
+        if logits.ndim == 3 else ("act_batch", "act_seq", None, "act_vocab"),
+        rules)
+    return logits
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(bp: Dict, x: jax.Array, cfg: ModelConfig, kind: str,
+                 is_moe: bool, positions: jax.Array, mode: str,
+                 cache: Optional[Dict], cache_index, rules: LogicalRules):
+    dtype = _dtype(cfg)
+    h = L.apply_norm(bp["ln1"], x, cfg.norm_type, dtype=dtype, rules=rules)
+    new_cache = cache
+    if kind == "a":
+        h, new_cache = L.attention(bp["attn"], h, cfg, positions, mode=mode,
+                                   cache=cache, cache_index=cache_index,
+                                   dtype=dtype, rules=rules)
+    else:
+        h, new_cache = M.mamba_block(bp["mamba"], h, cfg, mode=mode,
+                                     cache=cache, dtype=dtype, rules=rules)
+        if mode == "decode" and new_cache is None:
+            new_cache = cache
+    x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.d_ff > 0:
+        h = L.apply_norm(bp["ln2"], x, cfg.norm_type, dtype=dtype,
+                         rules=rules)
+        if is_moe:
+            h, aux = MOE.moe(bp["ffn"], h, cfg, dtype=dtype, rules=rules)
+        else:
+            h = L.mlp(bp["ffn"], h, cfg, dtype=dtype, rules=rules)
+        x = x + h
+    x = shard_activation(x, ("act_batch", "act_seq", "act_embed"), rules)
+    return x, new_cache, aux
+
+# ---------------------------------------------------------------------------
+# full forward (train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def lm_forward(params: Dict, batch: Dict, cfg: ModelConfig,
+               mode: str = "train", caches: Optional[Dict] = None,
+               cache_index: Optional[jax.Array] = None,
+               rules: LogicalRules = TRAIN_RULES
+               ) -> Tuple[jax.Array, jax.Array, Optional[Dict]]:
+    """Returns (logits, aux_loss, new_caches)."""
+    flags = _pattern_moe_flags(cfg)
+    positions = None
+    if mode == "decode":
+        assert cache_index is not None
+        b = next(iter(batch.values())).shape[0]
+        ci = jnp.asarray(cache_index, jnp.int32)
+        # scalar index: shared position; (b,) index: per-slot positions
+        # (continuous batching)
+        positions = jnp.broadcast_to(
+            ci[None, None] if ci.ndim == 0 else ci[:, None], (b, 1))
+    x, positions = embed_input(params, batch, cfg, rules, positions)
+
+    def unit_body(carry, xs):
+        x, aux = carry
+        unit_params, unit_caches = xs
+        new_caches = {}
+        for i, kind in enumerate(cfg.pattern):
+            cache_i = unit_caches.get(f"b{i}") if unit_caches else None
+            x, nc, a = _apply_block(
+                unit_params[f"b{i}"], x, cfg, kind, flags[i], positions,
+                mode, cache_i, cache_index, rules)
+            if nc is not None:
+                new_caches[f"b{i}"] = nc
+            aux = aux + a
+        return (x, aux), (new_caches if new_caches else None)
+
+    body = unit_body
+    if mode == "train" and cfg.remat != "none":
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat == "dots" else None)
+        body = jax.checkpoint(unit_body, policy=policy,
+                              prevent_cse=False)
+
+    (x, aux), new_caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        (params["blocks"], caches), length=cfg.n_units)
+    logits = lm_logits(params, x, cfg, rules)
+    return logits, aux, new_caches
+
+
+def lm_loss(params: Dict, batch: Dict, cfg: ModelConfig,
+            rules: LogicalRules = TRAIN_RULES) -> Tuple[jax.Array, Dict]:
+    logits, aux, _ = lm_forward(params, batch, cfg, "train", rules=rules)
+    targets, mask = batch["targets"], batch["loss_mask"]
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    # one-hot contraction instead of take_along_axis: a gather over the
+    # model-sharded vocab axis would force an all-gather of the logits;
+    # the compare+select+reduce fuses and only the (B, S) partials cross
+    # shards.
+    v = lf.shape[-1]
+    onehot = (targets[..., None]
+              == jnp.arange(v, dtype=targets.dtype)).astype(lf.dtype)
+    tgt = (lf * onehot).sum(axis=-1)
+    nll = lse - tgt                                   # (B,S) or (B,S,K)
+    if nll.ndim == 3:                                 # audio codebooks
+        nll = nll.mean(axis=-1)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = (nll * mask).sum() / denom
+    total = ce + cfg.aux_loss_coef * aux
+    return total, {"ce": ce, "aux": aux}
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def _unit_cache(cfg: ModelConfig, batch: int, max_len: int, abstract: bool):
+    """Cache pytree for ONE unit (no leading n_units dim)."""
+    quant = cfg.kv_cache_dtype == "int8"
+    out = {}
+    for i, kind in enumerate(cfg.pattern):
+        if kind == "a":
+            fn = L.kv_cache_abstract if abstract else L.init_kv_cache
+            out[f"b{i}"] = fn(batch, max_len, cfg.n_kv_heads, cfg.d_head,
+                              jnp.bfloat16, quant)
+        else:
+            fn = M.mamba_cache_abstract if abstract else M.init_mamba_cache
+            out[f"b{i}"] = fn(batch, cfg)
+    return out
+
+
+def _stack_cache(unit_cache, n_units: int, abstract: bool):
+    if abstract:
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n_units,) + s.shape, s.dtype),
+            unit_cache)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (n_units,) + a.shape).copy(),
+        unit_cache)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    return _stack_cache(_unit_cache(cfg, batch, max_len, False),
+                        cfg.n_units, False)
+
+
+def cache_abstract(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    return _stack_cache(_unit_cache(cfg, batch, max_len, True),
+                        cfg.n_units, True)
+
+
+def cache_pspecs(cfg: ModelConfig, rules: LogicalRules, mesh,
+                 batch: int, max_len: int):
+    """PartitionSpec pytree matching init_caches/cache_abstract —
+    size-aware (e.g. qwen's 40 kv heads can't shard 16-ways; the seq dim or
+    nothing takes over per the rules)."""
+    from repro.nn.sharding import resolve_sized
+
+    abstract = cache_abstract(cfg, batch, max_len)
+    kv_axes = ("layer", "act_batch", "cache_seq", "cache_kv", None)
+    axes_tree = {}
+    for i, kind in enumerate(cfg.pattern):
+        if kind == "a":
+            keys = ["k", "v"] + (["k_scale", "v_scale"]
+                                 if cfg.kv_cache_dtype == "int8" else [])
+            axes_tree[f"b{i}"] = {k: kv_axes for k in keys}
+        else:
+            axes_tree[f"b{i}"] = {
+                "conv": ("layer", "act_batch", None, "conv_dim"),
+                "ssm": ("layer", "act_batch", "ssm_heads", None, None),
+            }
+    return jax.tree.map(
+        lambda axes, ab: resolve_sized(axes, rules, mesh, ab.shape),
+        axes_tree, abstract,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+# ---------------------------------------------------------------------------
+# serving steps
+# ---------------------------------------------------------------------------
+
+
+def decode_step(params: Dict, tokens: jax.Array, caches: Dict,
+                cache_index: jax.Array, cfg: ModelConfig,
+                rules: LogicalRules) -> Tuple[jax.Array, Dict]:
+    """One token for every sequence in the batch.
+
+    tokens: (B, 1) int32 — or (B, 1, K) for audio codebooks.
+    Returns (logits for the new position, updated caches)."""
+    dtype = _dtype(cfg)
+    if cfg.frontend == "audio":
+        # sum the K codebook embeddings of the previous step's tokens
+        emb = params["embed"]["codebooks"]           # (K, V, D)
+        x = jnp.einsum("bskd->bsd", jnp.stack(
+            [jnp.take(emb[k], tokens[..., k], axis=0)
+             for k in range(cfg.n_codebooks)], axis=2)).astype(dtype)
+        batch = {"embeds": x}
+    elif cfg.frontend == "vision":
+        batch = {"tokens": tokens, "embeds":
+                 jnp.zeros((tokens.shape[0], 0, cfg.d_model), jnp.float32)}
+    else:
+        batch = {"tokens": tokens}
+    logits, _, new_caches = lm_forward(params, batch, cfg, "decode",
+                                       caches, cache_index, rules)
+    return logits[:, -1], new_caches
+
+
+def prefill_step(params: Dict, batch: Dict, caches: Dict, cfg: ModelConfig,
+                 rules: LogicalRules) -> Tuple[jax.Array, Dict]:
+    """Run the full prompt once, filling caches. Returns (last-position
+    logits, caches)."""
+    logits, _, new_caches = lm_forward(params, batch, cfg, "prefill",
+                                       caches, None, rules)
+    return logits[:, -1], new_caches

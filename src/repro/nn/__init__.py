@@ -1,0 +1,19 @@
+"""Minimal functional neural-net substrate: param specs, logical-axis
+sharding, and the layer zoo shared by the DLRM core and the LM family.
+
+Everything is a pure function over pytrees of arrays; a "module" is a pair of
+(param_specs(cfg) -> pytree[ParamSpec], apply(params, ...) -> arrays).
+"""
+from repro.nn.params import (  # noqa: F401
+    ParamSpec,
+    abstract_params,
+    init_params,
+    specs_to_pspecs,
+    specs_to_shardings,
+    stack_specs,
+)
+from repro.nn.sharding import (  # noqa: F401
+    LogicalRules,
+    logical_to_pspec,
+    shard_activation,
+)

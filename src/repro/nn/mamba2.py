@@ -1,0 +1,243 @@
+"""Mamba-2 (SSD — state-space duality) block, chunked-parallel for train /
+prefill and O(1)-state recurrent for decode.
+
+Follows the minimal SSD formulation of arXiv:2405.21060: within a chunk the
+output is a masked (semiseparable) matmul — MXU-friendly — and across chunks
+a short scan propagates the (heads, headdim, state) tensor.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.params import ParamSpec
+from repro.nn.sharding import gather_weight
+
+
+def mamba_dims(cfg) -> Dict[str, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_headdim
+    return dict(
+        d_inner=d_inner,
+        n_heads=n_heads,
+        headdim=cfg.ssm_headdim,
+        d_state=cfg.ssm_state,
+        n_groups=cfg.ssm_ngroups,
+        d_conv=cfg.ssm_conv,
+        # in_proj produces: z (d_inner), x (d_inner), B (g*n), C (g*n), dt (h)
+        d_in_proj=2 * d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state + n_heads,
+        conv_dim=d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state,
+    )
+
+
+def mamba_specs(cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    m = mamba_dims(cfg)
+    out_scale = 1.0 / math.sqrt(2 * max(cfg.n_layers, 1))
+    return {
+        "in_proj": ParamSpec((d, m["d_in_proj"]), ("embed", "ssm_inner"),
+                             init="fan_in"),
+        "conv_w": ParamSpec((m["d_conv"], m["conv_dim"]),
+                            (None, "conv_dim"), init="fan_in", fan_axis=0),
+        "conv_b": ParamSpec((m["conv_dim"],), ("conv_dim",), init="zeros"),
+        "dt_bias": ParamSpec((m["n_heads"],), ("ssm_heads",),
+                             init="constant", scale=math.log(math.e - 1)),
+        "A_log": ParamSpec((m["n_heads"],), ("ssm_heads",),
+                           init="constant", scale=0.0),
+        "D": ParamSpec((m["n_heads"],), ("ssm_heads",), init="ones"),
+        "norm_scale": ParamSpec((m["d_inner"],), ("ssm_inner",), init="ones"),
+        "out_proj": ParamSpec((m["d_inner"], d), ("ssm_inner", "embed"),
+                              init="fan_in", scale=out_scale),
+    }
+
+
+def _segsum(logdec: jax.Array) -> jax.Array:
+    """Stable segment-sum: logdec (..., l) -> (..., l, l) lower-tri cumsums,
+    L[i, j] = sum(logdec[j+1 .. i]) for j <= i, -inf above the diagonal."""
+    l = logdec.shape[-1]
+    cs = jnp.cumsum(logdec, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """SSD scan.  x: (b, s, h, p); dt: (b, s, h); A: (h,) (negative);
+    B, C: (b, s, g, n) with h % g == 0. Returns (y, final_state)."""
+    b, s, h, p = x.shape
+    g, n = B.shape[-2], B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = h // g
+
+    # fold dt into x and build per-step log decay (decay math stays fp32)
+    xdt = x * dt.astype(x.dtype)[..., None]          # (b, s, h, p)
+    logdec = dt * A                                  # (b, s, h), <= 0
+
+    # chunk views
+    xc = xdt.reshape(b, nc, chunk, h, p)
+    dc = logdec.reshape(b, nc, chunk, h).transpose(0, 1, 3, 2)  # (b,c,h,l)
+    Bc = B.reshape(b, nc, chunk, g, n)
+    Cc = C.reshape(b, nc, chunk, g, n)
+    Bh = jnp.repeat(Bc, rep, axis=3)                 # (b, c, l, h, n)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    # 1. intra-chunk (diagonal blocks): Y = (C B^T ∘ L) X
+    L = jnp.exp(_segsum(dc))                         # (b, c, h, l, l)
+    scores = jnp.einsum("bclhn,bcmhn->bchlm", Ch, Bh)
+    y_diag = jnp.einsum("bchlm,bchlm,bcmhp->bclhp",
+                        scores, L.astype(scores.dtype), xc)
+
+    # 2. chunk final states: S_c = sum_m decay_to_end[m] * B_m x_m^T
+    dcum = jnp.cumsum(dc, axis=-1)                   # (b, c, h, l)
+    dec_to_end = jnp.exp(dcum[..., -1:] - dcum)      # (b, c, h, l)
+    states = jnp.einsum("bchl,bclhn,bclhp->bchpn",
+                        dec_to_end.astype(x.dtype), Bh, xc)  # per-chunk
+
+    # 3. inter-chunk recurrence over nc chunks
+    chunk_decay = jnp.exp(dcum[..., -1])             # (b, c, h)
+
+    def step(carry, inp):
+        st_prev = carry                              # (b, h, p, n)
+        st_c, dec_c = inp                            # (b,h,p,n), (b,h)
+        st = st_prev * dec_c[..., None, None].astype(st_prev.dtype) + st_c
+        return st, st_prev
+
+    init = jnp.zeros((b, h, p, n), x.dtype)
+    final_state, prev_states = jax.lax.scan(
+        step, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (b, c, h, p, n)
+
+    # 4. inter-chunk output: Y_off = C_l · (decay_from_start[l] * S_{c-1})
+    dec_from_start = jnp.exp(dcum)                   # (b, c, h, l)
+    y_off = jnp.einsum("bclhn,bchpn,bchl->bclhp",
+                       Ch, prev_states, dec_from_start.astype(x.dtype))
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final_state
+
+
+def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t):
+    """One recurrent step. state: (b,h,p,n); x_t: (b,h,p); dt_t: (b,h);
+    B_t, C_t: (b,g,n). Returns (y_t, new_state)."""
+    h = x_t.shape[1]
+    g = B_t.shape[1]
+    rep = h // g
+    Bh = jnp.repeat(B_t, rep, axis=1)                # (b, h, n)
+    Ch = jnp.repeat(C_t, rep, axis=1)
+    dec = jnp.exp(dt_t * A)                          # (b, h)
+    upd = jnp.einsum("bhp,bhn->bhpn", x_t * dt_t[..., None], Bh)
+    new_state = state * dec[..., None, None].astype(state.dtype) + \
+        upd.astype(state.dtype)
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch.astype(state.dtype))
+    return y, new_state
+
+
+def _causal_conv_train(xBC, w, bias):
+    """xBC: (b, s, c); w: (k, c) depthwise causal conv."""
+    k = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xBC)
+    for i in range(k):
+        out = out + pad[:, i:i + xBC.shape[1]] * w[i]
+    return out + bias
+
+
+def _split_in_proj(zxbcdt, m):
+    di, g, n, h = m["d_inner"], m["n_groups"], m["d_state"], m["n_heads"]
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + m["conv_dim"]]
+    dt = zxbcdt[..., di + m["conv_dim"]:]
+    return z, xBC, dt
+
+
+def mamba_block(p, x, cfg, *, mode: str = "train",
+                cache: Optional[Dict[str, jax.Array]] = None,
+                dtype=jnp.bfloat16,
+                rules=None) -> Tuple[jax.Array, Optional[Dict]]:
+    """Mamba-2 mixer. cache (decode): {"conv": (b, k-1, conv_dim),
+    "ssm": (b, h, p, n)}."""
+    m = mamba_dims(cfg)
+    b, s, _ = x.shape
+    in_proj = gather_weight(p["in_proj"].astype(dtype),
+                            ("embed", "ssm_inner"), rules)
+    zxbcdt = x.astype(dtype) @ in_proj
+    z, xBC, dt = _split_in_proj(zxbcdt, m)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))          # (h,), negative
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (b, s, h)
+
+    conv_w = p["conv_w"].astype(dtype)
+    conv_b = p["conv_b"].astype(dtype)
+
+    if mode == "decode":
+        assert cache is not None and s == 1
+        # causal conv via cache of the last k-1 inputs
+        hist = jnp.concatenate([cache["conv"],
+                                xBC.astype(cache["conv"].dtype)], axis=1)
+        xBC_c = (hist * conv_w[None]).sum(axis=1, keepdims=True) + conv_b
+        new_conv = hist[:, 1:]
+        xBC_c = jax.nn.silu(xBC_c)
+        xs = xBC_c[..., :m["d_inner"]].reshape(b, 1, m["n_heads"],
+                                               m["headdim"])
+        Bmat = xBC_c[..., m["d_inner"]:m["d_inner"] + m["n_groups"]
+                     * m["d_state"]].reshape(b, 1, m["n_groups"], m["d_state"])
+        Cmat = xBC_c[..., m["d_inner"] + m["n_groups"] * m["d_state"]:] \
+            .reshape(b, 1, m["n_groups"], m["d_state"])
+        y_t, new_ssm = ssd_decode_step(
+            cache["ssm"], xs[:, 0], dt[:, 0], A, Bmat[:, 0], Cmat[:, 0])
+        y = y_t[:, None]                                   # (b, 1, h, p)
+        new_cache = {"conv": new_conv, "ssm": new_ssm}
+    else:
+        xBC_c = jax.nn.silu(_causal_conv_train(xBC, conv_w, conv_b))
+        xs = xBC_c[..., :m["d_inner"]].reshape(b, s, m["n_heads"],
+                                               m["headdim"])
+        Bmat = xBC_c[..., m["d_inner"]:m["d_inner"] + m["n_groups"]
+                     * m["d_state"]].reshape(b, s, m["n_groups"], m["d_state"])
+        Cmat = xBC_c[..., m["d_inner"] + m["n_groups"] * m["d_state"]:] \
+            .reshape(b, s, m["n_groups"], m["d_state"])
+        y, final_state = ssd_chunked(xs, dt, A, Bmat, Cmat,
+                                     chunk=min(cfg.ssm_chunk, s))
+        new_cache = None
+        if mode == "prefill":
+            assert cache is not None
+            new_conv = jnp.concatenate(
+                [jnp.zeros_like(xBC[:, :max(0, m["d_conv"] - 1 - s)]),
+                 xBC[:, -(m["d_conv"] - 1):]], axis=1
+            ).astype(cache["conv"].dtype)
+            new_cache = {"conv": new_conv, "ssm": final_state}
+
+    # skip connection D, gate, norm, out projection
+    y = y + xs * p["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(b, s, m["d_inner"])
+    y = y * jax.nn.silu(z.astype(y.dtype))
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(var + 1e-5)
+         * p["norm_scale"].astype(jnp.float32)).astype(dtype)
+    out_proj = gather_weight(p["out_proj"].astype(dtype),
+                             ("ssm_inner", "embed"), rules)
+    return y @ out_proj, new_cache
+
+
+def init_mamba_cache(batch: int, cfg, dtype=jnp.bfloat16) -> Dict:
+    m = mamba_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, m["d_conv"] - 1, m["conv_dim"]), dtype),
+        "ssm": jnp.zeros((batch, m["n_heads"], m["headdim"], m["d_state"]),
+                         jnp.float32),
+    }
+
+
+def mamba_cache_abstract(batch: int, cfg, dtype=jnp.bfloat16) -> Dict:
+    m = mamba_dims(cfg)
+    return {
+        "conv": jax.ShapeDtypeStruct(
+            (batch, m["d_conv"] - 1, m["conv_dim"]), dtype),
+        "ssm": jax.ShapeDtypeStruct(
+            (batch, m["n_heads"], m["headdim"], m["d_state"]), jnp.float32),
+    }

@@ -1,0 +1,132 @@
+"""Token-choice top-k Mixture-of-Experts with GShard-style GROUPED dispatch.
+
+Tokens are split into `moe_groups` groups (one per data shard at scale);
+capacity, position-in-expert, gather tables and combine all stay group-local,
+so the only cross-shard traffic is the (group, expert, capacity, d) reshard
+between the data-sharded group dim and the model-sharded expert dim — the
+MoE all-to-all. A global-token formulation instead makes XLA all-gather
+every token to every chip (measured 16x worse, EXPERIMENTS.md Perf).
+
+The placement analogy to the paper (DESIGN.md section 4): experts are embedding
+tables, the router is a multi-hot lookup, expert-parallel sharding over
+`model` is table-wise placement, and per-group capacity is the paper's
+truncation-size bound on lookups.
+
+Expert padding: expert counts that don't divide the TP axis (granite-3b's
+40 over 16 shards) are padded with never-routed dummy experts
+(cfg.expert_pad) — weights shard evenly; the router only scores real
+experts. GShard does the same.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.params import ParamSpec
+from repro.nn.sharding import gather_weight, shard_activation
+
+
+def moe_specs(cfg) -> Dict[str, Any]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts + cfg.expert_pad
+    out_scale = 1.0 / math.sqrt(2 * max(cfg.n_layers, 1))
+    return {
+        "router": ParamSpec((d, cfg.n_experts), ("embed", None),
+                            init="fan_in"),
+        "wi": ParamSpec((e, d, f), ("expert", "embed", "ff"),
+                        init="fan_in", fan_axis=1),
+        "wg": ParamSpec((e, d, f), ("expert", "embed", "ff"),
+                        init="fan_in", fan_axis=1),
+        "wo": ParamSpec((e, f, d), ("expert", "ff", "embed"),
+                        init="fan_in", fan_axis=1, scale=out_scale),
+    }
+
+
+def _capacity(tokens_per_group: int, n_experts: int, top_k: int,
+              capacity_factor: float) -> int:
+    c = int(math.ceil(top_k * tokens_per_group / n_experts
+                      * capacity_factor))
+    return max(8, -(-c // 8) * 8)  # round up to 8 (sublane friendly)
+
+
+def moe(p, x: jax.Array, cfg, dtype=jnp.bfloat16,
+        capacity_factor: float = None,
+        rules=None) -> Tuple[jax.Array, jax.Array]:
+    """x: (b, s, d) -> (y, aux_loss)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    e_pad = e + cfg.expert_pad
+    cf = capacity_factor or cfg.capacity_factor
+    t = b * s
+    g = max(1, cfg.moe_groups)
+    assert t % g == 0, (t, g)
+    tg = t // g
+    cap = _capacity(tg, e, k, cf)
+
+    xg = x.reshape(g, tg, d).astype(dtype)
+    xg = shard_activation(xg, ("moe_groups", None, None), rules or {})
+    logits = (xg @ p["router"].astype(dtype)).astype(jnp.float32)  # (g,tg,e)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)            # (g, tg, k)
+    gate_vals = gate_vals / jnp.clip(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch): e * sum(fraction * prob_mean)
+    me = probs.mean(axis=(0, 1))                             # (e,)
+    ce = jnp.zeros((e,), jnp.float32).at[gate_idx.reshape(-1)].add(
+        1.0 / (t * k))
+    aux = e * jnp.sum(me * ce)
+
+    # group-local position of each (token, slot) within its expert
+    flat_e = gate_idx.reshape(g, tg * k)                     # (g, n)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)      # (g, n, e)
+    pos = jnp.cumsum(onehot, axis=1) - onehot                # exclusive
+    pos = jnp.take_along_axis(pos, flat_e[..., None],
+                              axis=2)[..., 0]                # (g, n)
+    keep = pos < cap
+
+    # scatter (token, slot) -> (expert, cap) gather table, per group
+    token_ids = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(tg, dtype=jnp.int32), k)[None], (g, tg * k))
+    slot_e = jnp.where(keep, flat_e, e_pad)       # overflow/pad row: dropped
+    slot_p = jnp.where(keep, pos, 0)
+
+    def build_table(se, sp, ti):
+        tab = jnp.full((e_pad + 1, cap), tg, jnp.int32)      # tg = sentinel
+        return tab.at[se, sp].set(ti)[:e_pad]
+
+    gather = jax.vmap(build_table)(slot_e, slot_p, token_ids)  # (g,e_pad,cap)
+
+    # group-local gather (sentinel row -> zeros), then the constraint to
+    # (data x model) tiles performs the all-to-all
+    xpad = jnp.concatenate([xg, jnp.zeros((g, 1, d), dtype)], axis=1)
+    xe = jax.vmap(lambda xp, gt: xp[gt])(xpad, gather)       # (g,e_pad,cap,d)
+    xe = shard_activation(xe, ("moe_groups", "act_expert", None, None),
+                          rules or {})
+
+    wi = gather_weight(p["wi"].astype(dtype), ("expert", "embed", "ff"),
+                       rules)
+    wg = gather_weight(p["wg"].astype(dtype), ("expert", "embed", "ff"),
+                       rules)
+    wo = gather_weight(p["wo"].astype(dtype), ("expert", "ff", "embed"),
+                       rules)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, wg)) * \
+        jnp.einsum("gecd,edf->gecf", xe, wi)
+    h = shard_activation(h, ("moe_groups", "act_expert", None, "act_ff"),
+                         rules or {})
+    ye = jnp.einsum("gecf,efd->gecd", h, wo)                 # (g,e_pad,cap,d)
+    ye = shard_activation(ye, ("moe_groups", "act_expert", None, None),
+                          rules or {})
+
+    # combine back, group-local
+    ye_flat = ye.reshape(g, e_pad * cap, d)
+    slot_flat = jnp.where(keep, flat_e * cap + pos, 0)       # (g, n)
+    contrib = jax.vmap(lambda yf, sf: yf[sf])(ye_flat, slot_flat)
+    contrib = contrib * (gate_vals.reshape(g, tg * k, 1)
+                         * keep[..., None]).astype(dtype)
+    y = jax.vmap(lambda ti, c: jnp.zeros((tg, d), jnp.float32)
+                 .at[ti].add(c.astype(jnp.float32)))(token_ids, contrib)
+    y = shard_activation(y, ("moe_groups", None, None), rules or {})
+    return y.reshape(b, s, d).astype(dtype), aux

@@ -1,0 +1,124 @@
+"""ParamSpec pytrees: declare shapes + logical axes once, derive everything
+(init values, abstract shapes for the dry-run, NamedShardings) from the spec.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+
+from repro.nn.sharding import LogicalRules, _resolve
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declarative description of one parameter tensor."""
+    shape: Tuple[int, ...]
+    logical_axes: Tuple[Optional[str], ...]
+    dtype: Any = jnp.float32
+    init: str = "fan_in"          # fan_in | normal | zeros | ones | constant
+    scale: float = 1.0            # stddev multiplier / constant value
+    fan_axis: int = -2            # which axis is fan-in for "fan_in" init
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical_axes), (
+            f"shape {self.shape} vs axes {self.logical_axes}")
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_one(spec: ParamSpec, key) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "constant":
+        return jnp.full(spec.shape, spec.scale, spec.dtype)
+    if spec.init == "normal":
+        return (jax.random.normal(key, spec.shape, jnp.float32)
+                * spec.scale).astype(spec.dtype)
+    if spec.init == "fan_in":
+        fan = spec.shape[spec.fan_axis] if spec.shape else 1
+        std = spec.scale / math.sqrt(max(fan, 1))
+        return (jax.random.normal(key, spec.shape, jnp.float32)
+                * std).astype(spec.dtype)
+    raise ValueError(f"unknown init {spec.init!r}")
+
+
+def init_params(specs, key):
+    """Initialize a pytree of ParamSpec into a pytree of arrays."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(specs):
+    """ShapeDtypeStruct pytree — used by the dry-run, no allocation."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        specs, is_leaf=_is_spec)
+
+
+def specs_to_pspecs(specs, rules: LogicalRules, mesh_axis_names=None,
+                    mesh: Mesh = None):
+    """PartitionSpecs for a ParamSpec tree. Pass `mesh` to get size-aware
+    resolution (drops mesh axes that don't divide the dim — required for
+    pjit argument shardings)."""
+    if mesh is not None:
+        from repro.nn.sharding import resolve_sized
+        return jax.tree.map(
+            lambda s: resolve_sized(s.logical_axes, rules, mesh, s.shape),
+            specs, is_leaf=_is_spec)
+    return jax.tree.map(
+        lambda s: _resolve(s.logical_axes, rules, mesh_axis_names),
+        specs, is_leaf=_is_spec)
+
+
+def specs_to_shardings(specs, rules: LogicalRules, mesh: Mesh):
+    from repro.nn.sharding import resolve_sized
+    return jax.tree.map(
+        lambda s: NamedSharding(
+            mesh, resolve_sized(s.logical_axes, rules, mesh, s.shape)),
+        specs, is_leaf=_is_spec)
+
+
+def stack_specs(specs, n: int, axis_name: str = "layer"):
+    """Prepend a stacked-layer axis to every spec (for scan-over-layers)."""
+    return jax.tree.map(
+        lambda s: dataclasses.replace(
+            s,
+            shape=(n,) + s.shape,
+            logical_axes=(axis_name,) + s.logical_axes,
+            fan_axis=s.fan_axis - 1 if s.fan_axis < 0 else s.fan_axis + 1,
+        ),
+        specs, is_leaf=_is_spec)
+
+
+def cast_specs(specs, dtype):
+    """Replace the dtype of floating-point specs (bf16 serving weights)."""
+    import jax.numpy as _jnp
+
+    def one(s):
+        if _jnp.issubdtype(_jnp.dtype(s.dtype), _jnp.floating):
+            return dataclasses.replace(s, dtype=dtype)
+        return s
+
+    return jax.tree.map(one, specs, is_leaf=_is_spec)
+
+
+def param_count(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=_is_spec)
+    return sum(math.prod(s.shape) for s in leaves)
+
+
+def param_bytes(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=_is_spec)
+    return sum(math.prod(s.shape) * jnp.dtype(s.dtype).itemsize
+               for s in leaves)

@@ -1,0 +1,273 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+Params and activations carry *logical* axis names ("vocab", "heads", "ff",
+"batch", ...). A rules table maps each logical name to a mesh axis (or a tuple
+of mesh axes, or None = replicated). Conflict resolution: within one
+PartitionSpec a physical mesh axis may be used at most once; later logical
+axes that would reuse an already-consumed mesh axis degrade to replicated.
+
+This is the single knob the perf hillclimb turns: change the rules, re-lower.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+LogicalRules = Dict[str, MeshAxes]
+
+# ---------------------------------------------------------------------------
+# Default rule tables. "pod" only exists on the multi-pod mesh; rules are
+# filtered against the live mesh axis names at resolution time so one table
+# serves both meshes.
+# ---------------------------------------------------------------------------
+
+#: Training rules: data-parallel batch, tensor-parallel heads/ff/vocab/expert.
+#: This is the paper-faithful mapping: `data` axis = trainers, `model` axis =
+#: sparse parameter-server shards (DESIGN.md section 2).
+TRAIN_RULES: LogicalRules = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "vocab": "model",
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ff": "model",
+    "expert": "model",
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "ssm_heads": "model",
+    "conv_dim": "model",
+    "layer": None,
+    # DLRM logical axes
+    "hash": "model",        # row-wise embedding-table sharding
+    "table": None,          # table-wise handled by the placement planner
+    "feature": None,
+    "dense_ff": "model",
+    # activations
+    "act_batch": ("pod", "data"),
+    "act_seq": None,
+    "act_embed": None,
+    "act_vocab": "model",
+    "act_heads": "model",
+    "act_ff": "model",
+    # MoE dispatch tiles: (group, expert, capacity) on ((pod, data), model, -)
+    "act_tokens": ("pod", "data"),
+    "act_expert": "model",
+    "moe_groups": ("pod", "data"),
+    "moe_cap": None,
+}
+
+#: FSDP (ZeRO-3) + sequence-parallel variant — the DEFAULT train mapping for
+#: the dry-run (every assigned arch is >= 0.8B: replicated fp32 grads alone
+#: blow 16 GB/chip; see EXPERIMENTS.md section Perf for the measured delta
+#: vs. plain TRAIN_RULES). Weights/opt-state/grads shard over `data` on the
+#: non-TP dim; the residual stream between blocks shards its seq dim over
+#: `model` (Megatron-style sequence parallelism), bounding saved activations.
+FSDP_RULES: LogicalRules = dict(
+    TRAIN_RULES,
+    embed=("data",),
+    head_dim=None,
+    ssm_state=None,
+    _gather_weights=True,
+)
+
+#: Beyond-paper train mapping (§Perf): pure data parallelism over ALL mesh
+#: axes + ZeRO-3 weight sharding. No tensor parallelism => no per-layer
+#: activation all-reduces at all; the only collectives are bf16 weight
+#: all-gathers (fwd + rematted bwd) and gradient reduce-scatters. Wins when
+#: per-chip batch stays >= 1 and the full vocab CE region fits (it does at
+#: 4096 tokens/chip for every assigned arch). MoE dispatch becomes fully
+#: local (every chip holds gathered experts).
+ZERO_DP_RULES: LogicalRules = dict(
+    TRAIN_RULES,
+    batch=("pod", "data", "model"),
+    act_batch=("pod", "data", "model"),
+    act_tokens=("pod", "data", "model"),
+    moe_groups=("pod", "data", "model"),
+    heads=None, kv_heads=None, ff=None, vocab=None,
+    ssm_inner=None, ssm_heads=None, conv_dim=None,
+    act_vocab=None, act_heads=None, act_ff=None, act_expert=None,
+    expert=("model",),                   # experts still sharded at rest
+    embed=("data", "model"),             # ZeRO-3: 256-way sharded at rest...
+    _gather_weights=True,                # ...gathered bf16 at compute
+    _gather_axes=("embed", "expert"),    # experts fully gathered too: the
+                                         # dispatch becomes chip-local
+)
+
+#: Serving rules: pure TP over `model`, batch over `data`; KV cache seq dim
+#: sharded over `model` when kv_heads are too few / not divisible (flash-
+#: decoding style; XLA inserts the softmax collectives).
+SERVE_RULES: LogicalRules = dict(
+    TRAIN_RULES,
+    batch=("pod", "data"),
+    act_batch=("pod", "data"),
+    embed=None,
+    cache_seq=None,
+    cache_kv="model",
+    # serving-only: a non-divisible heads dim (qwen's 40) migrates its mesh
+    # axis to head_dim so bf16 weights still shard 16-ways; the price is
+    # score-matrix partial-sums, negligible at decode (q_len=1). Training
+    # does NOT use this (score all-reduces at 4k seq measured 7x worse).
+    _fallback={"heads": "head_dim", "kv_heads": "head_dim"},
+)
+
+#: Serving rules for long-context decode (batch=1 cannot fill `data`):
+#: shard the cache sequence dim over `model` (flash-decoding — XLA inserts
+#: the softmax-reduction collectives); batch/token dims replicated.
+LONG_SERVE_RULES: LogicalRules = dict(
+    SERVE_RULES,
+    cache_seq="model",
+    cache_kv=None,
+    batch=None,
+    act_batch=None,
+    act_tokens=None,
+    moe_groups=None,
+)
+
+
+def _resolve(axes: Sequence[Optional[str]], rules: LogicalRules,
+             mesh_axis_names: Sequence[str]) -> P:
+    """Map logical axis names to a PartitionSpec, dropping conflicts."""
+    used: set = set()
+    out = []
+    for name in axes:
+        if name is None:
+            out.append(None)
+            continue
+        target = rules.get(name, None)
+        if target is None:
+            out.append(None)
+            continue
+        if isinstance(target, str):
+            target = (target,)
+        picked = tuple(t for t in target
+                       if t in mesh_axis_names and t not in used)
+        for t in picked:
+            used.add(t)
+        if not picked:
+            out.append(None)
+        elif len(picked) == 1:
+            out.append(picked[0])
+        else:
+            out.append(picked)
+    # trim trailing Nones for cleanliness
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def logical_to_pspec(axes: Sequence[Optional[str]],
+                     rules: LogicalRules,
+                     mesh: Optional[Mesh] = None) -> P:
+    names = mesh.axis_names if mesh is not None else _live_mesh_axis_names()
+    return _resolve(axes, rules, names)
+
+
+def resolve_sized(axes: Sequence[Optional[str]], rules: LogicalRules,
+                  mesh: Mesh, shape: Sequence[int]) -> P:
+    """Like _resolve, but drops mesh axes that do not evenly divide the
+    dimension (pjit argument shardings require divisibility — e.g. qwen's
+    40 kv heads or mamba's 50280 vocab cannot shard 16-ways).
+
+    A dropped mesh axis may MIGRATE to a sibling dim via rules["_fallback"]
+    (e.g. heads -> head_dim): qwen's wq (d, 40, 128) becomes
+    P("data", None, "model") instead of leaving the whole attention stack —
+    weights, grads, optimizer moments — replicated over the TP axis
+    (measured 20+ GB/chip of replication waste, EXPERIMENTS.md Perf)."""
+    base = _resolve(axes, rules, mesh.axis_names)
+    out = []
+    dropped = []                       # (mesh_axis, source_logical_name)
+    for i, dim in enumerate(shape):
+        entry = base[i] if i < len(base) else None
+        if entry is None:
+            out.append(None)
+            continue
+        cand = entry if isinstance(entry, tuple) else (entry,)
+        kept, prod = [], 1
+        for a in cand:
+            size = mesh.shape[a]
+            if dim % (prod * size) == 0:
+                kept.append(a)
+                prod *= size
+            elif i < len(axes):
+                dropped.append((a, axes[i]))
+        out.append(tuple(kept) if len(kept) > 1
+                   else (kept[0] if kept else None))
+    fallbacks = rules.get("_fallback") or {}
+    if dropped and fallbacks:
+        used = {a for e in out if e
+                for a in (e if isinstance(e, tuple) else (e,))}
+        for mesh_ax, src in dropped:
+            tgt = fallbacks.get(src)
+            if tgt is None or mesh_ax in used:
+                continue
+            for j, lname in enumerate(axes):
+                if (lname == tgt and j < len(shape) and out[j] is None
+                        and shape[j] % mesh.shape[mesh_ax] == 0):
+                    out[j] = mesh_ax
+                    used.add(mesh_ax)
+                    break
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def _live_mesh() -> Optional[Mesh]:
+    env_mesh = jax._src.mesh.thread_resources.env.physical_mesh
+    if env_mesh.empty:
+        return None
+    return env_mesh
+
+
+def _live_mesh_axis_names() -> Tuple[str, ...]:
+    m = _live_mesh()
+    return tuple(m.axis_names) if m is not None else ()
+
+
+def shard_activation(x, axes: Sequence[Optional[str]],
+                     rules: LogicalRules,
+                     mesh: Optional[Mesh] = None):
+    """with_sharding_constraint by logical axis names; no-op outside a mesh
+    or with an empty rules table (an empty table means "unmanaged", not
+    "replicate everything"). Size-aware: mesh axes that don't divide a dim
+    are dropped rather than erroring."""
+    if not rules:
+        return x
+    mesh = mesh if mesh is not None else _live_mesh()
+    if mesh is None:
+        return x
+    spec = resolve_sized(axes, rules, mesh, x.shape)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def named_sharding(mesh: Mesh, axes: Sequence[Optional[str]],
+                   rules: LogicalRules) -> NamedSharding:
+    return NamedSharding(mesh, _resolve(axes, rules, mesh.axis_names))
+
+
+#: weight logical axes that FSDP shards at rest and gathers at compute time
+#: (rules["_gather_axes"] overrides; ZERO_DP adds "expert")
+GATHERED_AXES = ("embed",)
+
+
+def gather_weight(w, axes: Sequence[Optional[str]], rules: LogicalRules):
+    """Manual FSDP: re-constrain a (compute-dtype) weight to its gathered,
+    TP-only sharding at the point of use.
+
+    Storage sharding (from the ParamSpec) keeps `embed` on the `data` axis;
+    this constraint drops it, so the partitioner emits one bf16 all-gather
+    of the weight per use (forward, and again in the rematted backward) and
+    a reduce-scatter of the weight gradient — ZeRO-3 traffic, instead of
+    guessing (it otherwise replicates ACTIVATIONS and all-reduces
+    activation-sized partials — measured 16x worse, EXPERIMENTS.md Perf).
+    Enabled by rules["_gather_weights"]; a no-op otherwise.
+    """
+    if not rules or not rules.get("_gather_weights"):
+        return w
+    gathered = rules.get("_gather_axes", GATHERED_AXES)
+    g_axes = tuple(None if a in gathered else a for a in axes)
+    return shard_activation(w, g_axes, rules)

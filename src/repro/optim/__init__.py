@@ -1,0 +1,17 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    adagrad,
+    adamw,
+    clip_by_global_norm,
+    sgd,
+)
+from repro.optim.easgd import (  # noqa: F401
+    EASGDState,
+    easgd_init,
+    easgd_sync,
+    local_sgd_sync,
+)
+from repro.optim.compression import (  # noqa: F401
+    compress_decompress,
+    error_feedback_compress,
+)

@@ -1,0 +1,46 @@
+"""Gradient compression for the slow (cross-pod) axis, with error feedback.
+
+The multi-pod mesh reduces gradients over ICI links within a pod and the
+data-center network between pods; compressing the inter-pod all-reduce to
+bf16 (or int8) halves (quarters) the bytes on the slowest hop. Error
+feedback (Seide et al.; Karimireddy et al. 2019) keeps the quantization
+noise from biasing convergence: the residual of each step is added back
+before the next compression.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_decompress(g: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    """Straight-through quantize/dequantize of one gradient leaf."""
+    if dtype == jnp.int8:
+        scale = jnp.max(jnp.abs(g.astype(jnp.float32))) / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127)
+        return (q * scale).astype(g.dtype)
+    return g.astype(dtype).astype(g.dtype)
+
+
+def error_feedback_compress(grads: Any, residual: Any,
+                            dtype=jnp.bfloat16) -> Tuple[Any, Any]:
+    """Returns (compressed_grads, new_residual). residual pytree mirrors
+    grads (fp32)."""
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        cq = compress_decompress(corrected, dtype)
+        return cq.astype(g.dtype), corrected - cq.astype(jnp.float32)
+
+    flat = jax.tree.map(one, grads, residual)
+    comp = jax.tree.map(lambda t: t[0], flat,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda t: t[1], flat,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return comp, res
+
+
+def init_residual(grads_shape: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                        grads_shape)

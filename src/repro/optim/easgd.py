@@ -1,0 +1,70 @@
+"""Elastic-Averaging SGD (Zhang et al. 2015) and local-SGD synchronization —
+the paper's gradient-sync methods (section III-A.6), adapted to SPMD.
+
+The paper's CPU fleet runs EASGD asynchronously between trainers and a
+center dense PS, with HogWild threads inside a trainer. Lock-free async has
+no TPU analogue (DESIGN.md section 7): here each *pod* is one EASGD trainer
+(replica), replicas live as a leading `replica` axis sharded over the `pod`
+mesh axis, and the elastic pull runs round-synchronously every tau steps:
+
+    x_i <- x_i - alpha * (x_i - c)
+    c   <- c + beta/R * sum_i (x_i - c)
+
+which is exactly the EASGD update with a synchronous round schedule.
+`local_sgd_sync` (alpha=1 limit with center == mean) gives ShadowSync-style
+deferred full averaging. Both operate on stacked pytrees (leading dim R), so
+they drop into pjit with P("pod") on the replica axis — cross-pod traffic
+happens ONLY at sync steps, the paper's motivation for async methods.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EASGDState(NamedTuple):
+    replicas: Any    # pytree, each leaf (R, ...) — per-pod trainer params
+    center: Any      # pytree, each leaf (...)    — the center variable
+
+
+def easgd_init(params, n_replicas: int) -> EASGDState:
+    replicas = jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None], (n_replicas,) + p.shape).copy(),
+        params)
+    return EASGDState(replicas=replicas, center=params)
+
+
+def easgd_sync(state: EASGDState, alpha: float, beta: float) -> EASGDState:
+    """One elastic-averaging round (runs every tau local steps)."""
+    def pull(x, c):
+        return x - alpha * (x - c[None].astype(x.dtype))
+
+    def push(c, x):
+        mean = jnp.mean(x.astype(jnp.float32), axis=0)
+        return (c.astype(jnp.float32)
+                + beta * (mean - c.astype(jnp.float32))).astype(c.dtype)
+
+    new_replicas = jax.tree.map(pull, state.replicas, state.center)
+    new_center = jax.tree.map(push, state.center, state.replicas)
+    return EASGDState(new_replicas, new_center)
+
+
+def local_sgd_sync(state: EASGDState) -> EASGDState:
+    """ShadowSync/local-SGD limit: replicas collapse to their mean."""
+    def avg(x):
+        mean = jnp.mean(x.astype(jnp.float32), axis=0).astype(x.dtype)
+        return jnp.broadcast_to(mean[None], x.shape)
+
+    new_replicas = jax.tree.map(avg, state.replicas)
+    new_center = jax.tree.map(lambda x: x[0], new_replicas)
+    return EASGDState(new_replicas, new_center)
+
+
+def replica_step(state: EASGDState, grads_stacked, lr: float) -> EASGDState:
+    """Per-replica SGD step; grads_stacked leaves are (R, ...)."""
+    new_replicas = jax.tree.map(
+        lambda x, g: x - lr * g.astype(x.dtype), state.replicas,
+        grads_stacked)
+    return EASGDState(new_replicas, state.center)

@@ -1,0 +1,134 @@
+"""Batched serving engine: continuous batching over fixed decode slots.
+
+The engine keeps a fixed-batch KV/SSM cache (shape-stable => one compiled
+decode step), admits queued requests into free slots, decodes all active
+slots each step, and retires sequences that hit EOS or their token budget.
+This is the slot-based continuous batching of production LM servers, sized
+so the decode_32k / long_500k dry-run shapes are exactly what the engine
+lowers.
+
+The KV cache dtype (bf16 / int8 via cfg.kv_cache_dtype) is the serving-side
+capacity lever — the same capacity-vs-placement trade the paper makes for
+embedding tables (DESIGN.md section 4: qwen-32b's 32k x 128 cache only fits HBM
+in int8).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.lm import decode_step, init_caches, prefill_step
+from repro.nn.sharding import SERVE_RULES, LogicalRules
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                    # (prompt_len,) int32
+    max_new_tokens: int = 32
+    generated: Optional[List[int]] = None
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig, batch_slots: int,
+                 max_len: int, rules: LogicalRules = SERVE_RULES,
+                 eos_id: int = -1, greedy: bool = True):
+        assert cfg.frontend is None or cfg.frontend == "vision", \
+            "engine drives token-in/token-out archs"
+        self.params = params
+        self.cfg = cfg
+        self.rules = rules
+        self.batch_slots = batch_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.greedy = greedy
+        self.caches = init_caches(cfg, batch_slots, max_len)
+        self.slot_req: List[Optional[Request]] = [None] * batch_slots
+        self.slot_pos = np.zeros(batch_slots, np.int32)
+        self.slot_budget = np.zeros(batch_slots, np.int32)
+        self.queue: "queue.Queue[Request]" = queue.Queue()
+        self.completed: Dict[int, List[int]] = {}
+        self._decode = jax.jit(
+            lambda p, t, c, i: decode_step(p, t, c, i, cfg, rules))
+        self.steps_run = 0
+
+    # -- admission -----------------------------------------------------------
+
+    def submit(self, req: Request):
+        req.generated = []
+        self.queue.put(req)
+
+    def _admit(self):
+        for slot in range(self.batch_slots):
+            if self.slot_req[slot] is not None or self.queue.empty():
+                continue
+            req = self.queue.get()
+            # prefill one slot: run prompt tokens through decode steps
+            # (slot-local prefill keeps the cache layout fixed-batch).
+            for t, tok in enumerate(req.prompt):
+                tok_arr = jnp.full((self.batch_slots, 1), int(tok), jnp.int32)
+                logits, caches = self._decode(
+                    self.params, tok_arr, self.caches,
+                    jnp.asarray(t, jnp.int32))
+                self.caches = _merge_slot(self.caches, caches, slot)
+            self.slot_req[slot] = req
+            self.slot_pos[slot] = len(req.prompt)
+            self.slot_budget[slot] = req.max_new_tokens
+
+    # -- decode --------------------------------------------------------------
+
+    def _sample(self, logits: np.ndarray) -> np.ndarray:
+        return np.argmax(logits, axis=-1).astype(np.int32)
+
+    def step(self):
+        """One engine step: admit, decode all active slots, retire."""
+        self._admit()
+        active = [s for s in range(self.batch_slots)
+                  if self.slot_req[s] is not None]
+        if not active:
+            return
+        # current last token per slot (pad inactive with 0)
+        toks = np.zeros((self.batch_slots, 1), np.int32)
+        for s in active:
+            req = self.slot_req[s]
+            toks[s, 0] = (req.generated[-1] if req.generated
+                          else int(req.prompt[-1]))
+        # per-slot positions: each sequence writes its cache at its own
+        # depth and attends over its own valid prefix (continuous batching)
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(toks), self.caches,
+            jnp.asarray(self.slot_pos, jnp.int32))
+        nxt = self._sample(np.asarray(logits, np.float32))
+        self.steps_run += 1
+        for s in active:
+            req = self.slot_req[s]
+            req.generated.append(int(nxt[s]))
+            self.slot_pos[s] += 1
+            done = (len(req.generated) >= self.slot_budget[s]
+                    or int(nxt[s]) == self.eos_id
+                    or self.slot_pos[s] >= self.max_len - 1)
+            if done:
+                self.completed[req.uid] = req.generated
+                self.slot_req[s] = None
+
+    def run_until_drained(self, max_steps: int = 10_000):
+        while (not self.queue.empty()
+               or any(r is not None for r in self.slot_req)):
+            self.step()
+            if self.steps_run > max_steps:
+                raise RuntimeError("serve loop did not drain")
+        return self.completed
+
+
+def _merge_slot(old_caches, new_caches, slot: int):
+    """Keep only `slot`'s rows from new_caches (batch dim is axis 1 under the
+    stacked-unit leading dim)."""
+    def merge(o, n):
+        return o.at[:, slot].set(n[:, slot])
+    return jax.tree.map(merge, old_caches, new_caches)

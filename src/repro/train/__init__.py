@@ -1,0 +1,9 @@
+from repro.train.steps import (  # noqa: F401
+    build_dlrm_train_step,
+    build_lm_train_step,
+)
+from repro.train.checkpoint import CheckpointManager  # noqa: F401
+from repro.train.fault_tolerance import (  # noqa: F401
+    PreemptionHandler,
+    StragglerDetector,
+)

@@ -1,0 +1,261 @@
+"""Train-step builders: the jitted SPMD functions the launcher lowers/runs.
+
+LM path: AdamW on all params, optional gradient accumulation (microbatching)
+via lax.scan over grad chunks — the batch-size lever of paper section V-B
+without blowing activation memory.
+
+DLRM path (the paper's split, Fig. 4): dense params via dense AdaGrad,
+embedding mega-table via deduplicated row-wise AdaGrad fed with
+(indices, pooled-gradients) — no dense gradient for the table is ever
+materialized. Both optimizers run inside one jit so XLA overlaps the
+embedding-update scatter with the dense backward's collectives.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DLRMConfig, ModelConfig
+from repro.core.dlrm import dlrm_grads
+from repro.core.embedding import EmbeddingBagCollection
+from repro.kernels import ref as kref
+from repro.models.lm import lm_loss
+from repro.nn.sharding import (TRAIN_RULES, LogicalRules,
+                               _live_mesh_axis_names, shard_activation)
+from repro.optim.optimizers import Optimizer
+
+
+def _constrain(x, pspec):
+    """with_sharding_constraint that no-ops outside a mesh context."""
+    if not _live_mesh_axis_names():
+        return x
+    return jax.lax.with_sharding_constraint(x, pspec)
+
+# ---------------------------------------------------------------------------
+# LM
+# ---------------------------------------------------------------------------
+
+
+def build_lm_train_step(cfg: ModelConfig, opt: Optimizer,
+                        rules: LogicalRules = TRAIN_RULES,
+                        accum_steps: int = 1,
+                        grad_dtype: str = "float32") -> Callable:
+    """Returns step(params, opt_state, batch, step_idx) ->
+    (params, opt_state, metrics).
+
+    grad_dtype="bfloat16" casts gradients before the cross-shard reduction
+    (the ZeRO reduce-scatter / DP all-reduce moves half the bytes; fp32
+    moments in the optimizer absorb the rounding — standard mixed-precision
+    practice and the paper-era bandwidth lever, DESIGN.md section 5)."""
+
+    def loss_fn(params, batch):
+        return lm_loss(params, batch, cfg, rules)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single(params, batch):
+        (loss, parts), grads = grad_fn(params, batch)
+        return loss, parts, grads
+
+    def accumulated(params, batch):
+        # split the batch into accum_steps chunks along the batch dim
+        def chunk(i, x):
+            size = x.shape[0] // accum_steps
+            return jax.lax.dynamic_slice_in_dim(x, i * size, size, 0)
+
+        def body(carry, i):
+            loss_sum, grads_sum = carry
+            mb = jax.tree.map(functools.partial(chunk, i), batch)
+            (loss, _), grads = grad_fn(params, mb)
+            grads_sum = jax.tree.map(
+                lambda a, g: a + g.astype(a.dtype), grads_sum, grads)
+            return (loss_sum + loss, grads_sum), None
+
+        zero_grads = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, grads), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), zero_grads),
+            jnp.arange(accum_steps))
+        inv = 1.0 / accum_steps
+        grads = jax.tree.map(lambda g: g * inv, grads)
+        return loss_sum * inv, {}, grads
+
+    def step(params, opt_state, batch, step_idx):
+        if accum_steps > 1:
+            loss, parts, grads = accumulated(params, batch)
+        else:
+            loss, parts, grads = single(params, batch)
+        if grad_dtype == "bfloat16":
+            grads = jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+        new_params, new_state = opt.apply(params, grads, opt_state, step_idx)
+        metrics = {"loss": loss, **{k: v for k, v in parts.items()}}
+        return new_params, new_state, metrics
+
+    return step
+
+# ---------------------------------------------------------------------------
+# DLRM
+# ---------------------------------------------------------------------------
+
+
+def build_dlrm_train_step(cfg: DLRMConfig, ebc: EmbeddingBagCollection,
+                          dense_opt: Optimizer, sparse_lr: float = 0.05,
+                          sparse_eps: float = 1e-8, interpret: bool = False,
+                          rules: LogicalRules = TRAIN_RULES,
+                          sparse_apply: str = "dense") -> Callable:
+    """Returns step(params, state, batch, step_idx) -> (params, state,
+    metrics) where state = {"dense": dense_opt_state, "accum": (rows,) f32}.
+
+    sparse_apply:
+      "dense"  — scatter-add over the (sharded) full row space; right for
+                 SPMD where each model shard owns its rows (the PS side).
+      "sparse" — dedup to unique rows, update only those: O(lookups) not
+                 O(table height); right for single-host runs (matches the
+                 paper's flat CPU hash-size curve, Fig. 12). Same math as
+                 the Pallas rowwise_adagrad kernel path.
+    """
+
+    row_pspec = ebc.plan.pspec                 # (rows, d) mega-table sharding
+
+    def sparse_update_nrows(mega, accum, idx, g_pooled):
+        """O(n) unique-row apply (dedup + gathered read-modify-write)."""
+        h, d = mega.shape
+        flat_idx, flat_g = ebc.per_lookup_grads(idx, g_pooled)
+        uniq, gsum = kref.dedup_grads_ref(flat_idx, flat_g, h)
+        valid = uniq >= 0
+        safe = jnp.where(valid, uniq, 0)
+        acc_rows = accum[safe] + jnp.where(
+            valid, jnp.mean(jnp.square(gsum), axis=-1), 0.0)
+        upd = sparse_lr * gsum * jax.lax.rsqrt(acc_rows[:, None]
+                                               + sparse_eps)
+        upd = jnp.where(valid[:, None], upd, 0.0)
+        drop = jnp.where(valid, uniq, h)       # h = out of bounds -> dropped
+        new_mega = mega.at[drop].add(-upd.astype(mega.dtype), mode="drop")
+        new_accum = accum.at[drop].set(jnp.where(valid, acc_rows, 0.0),
+                                       mode="drop")
+        return new_mega, new_accum
+
+    def sparse_update_shardmap(mega, accum, idx, g_pooled):
+        """shard_map PS-side aggregation: each (model, data) shard scatters
+        ITS batch slice into a LOCAL (rows_local, d) buffer (scan over
+        features, zero collectives), then ONE psum over the batch axes
+        merges partials. The pjit scatter-in-scan alternative re-all-reduces
+        the whole gsum buffer per feature (measured 127x the traffic —
+        EXPERIMENTS.md Perf, dlrm-m3)."""
+        from repro.nn.sharding import _live_mesh
+        from jax import shard_map
+        from jax.sharding import PartitionSpec as SP
+        mesh = _live_mesh()
+        h, d = mega.shape
+        model_axis = "model"
+        batch_axes = tuple(a for a in mesh.axis_names if a != model_axis)
+        rows_local = h // mesh.shape[model_axis]
+
+        def local(mega_sh, accum_sh, idx_loc, g_loc):
+            shard = jax.lax.axis_index(model_axis)
+            lo = shard * rows_local
+            b, f, l = idx_loc.shape
+
+            def add_feature(gsum, xs):
+                idx_f, g_f = xs
+                inside = (idx_f >= lo) & (idx_f < lo + rows_local)
+                loc = jnp.where(inside, idx_f - lo, rows_local)  # oob drops
+                upd = jnp.broadcast_to(g_f[:, None, :], (b, l, d))
+                upd = jnp.where(inside[..., None], upd, 0.0)
+                return gsum.at[loc.reshape(-1)].add(
+                    upd.reshape(b * l, d), mode="drop"), None
+
+            gsum0 = jax.lax.pcast(                 # mark device-varying for
+                jnp.zeros((rows_local, d), jnp.float32),
+                tuple(mesh.axis_names), to="varying")  # the shard_map scan
+            gsum, _ = jax.lax.scan(
+                add_feature,
+                gsum0,
+                (jnp.swapaxes(idx_loc, 0, 1), jnp.swapaxes(g_loc, 0, 1)))
+            if cfg.grad_reduce_dtype == "bfloat16":
+                gsum = jax.lax.psum(gsum.astype(jnp.bfloat16),
+                                    batch_axes).astype(jnp.float32)
+            else:
+                gsum = jax.lax.psum(gsum, batch_axes)  # ONE merge
+            touched = jnp.any(gsum != 0.0, axis=-1)
+            g2 = jnp.mean(jnp.square(gsum), axis=-1)
+            acc_new = accum_sh + jnp.where(touched, g2, 0.0)
+            upd = sparse_lr * gsum * jax.lax.rsqrt(acc_new[:, None]
+                                                   + sparse_eps)
+            new_mega = mega_sh - jnp.where(touched[:, None], upd,
+                                           0.0).astype(mega_sh.dtype)
+            return new_mega, acc_new
+
+        return shard_map(
+            local, mesh=mesh,
+            in_specs=(SP(model_axis, None), SP(model_axis),
+                      SP(batch_axes, None, None), SP(batch_axes, None, None)),
+            out_specs=(SP(model_axis, None), SP(model_axis)),
+        )(mega, accum, idx, g_pooled)
+
+    def sparse_update(mega, accum, idx, g_pooled):
+        """Row-wise AdaGrad with dedup via scatter-add onto the SHARDED
+        row space (same math as kernels/ref.rowwise_adagrad_ref, with
+        sharding constraints so the aggregation buffer lives on the
+        `model` shards — the PS-side gradient aggregation of section VII).
+        The scatter scans over features so the (B, L, d) broadcast of each
+        bag's gradient never materializes for all 127 tables at once."""
+        h, d = mega.shape
+        b, f, l = idx.shape
+
+        def add_feature(gsum, xs):
+            idx_f, g_f = xs                   # (b, l), (b, d)
+            valid = idx_f >= 0
+            safe = jnp.where(valid, idx_f, h)
+            upd = jnp.broadcast_to(g_f[:, None, :], (b, l, d))
+            upd = jnp.where(valid[..., None], upd, 0.0)
+            gsum = gsum.at[safe.reshape(-1)].add(upd.reshape(b * l, d))
+            return gsum, None
+
+        gsum0 = jnp.zeros((h + 1, d), jnp.float32)
+        gsum0 = _constrain(gsum0, row_pspec)
+        gsum, _ = jax.lax.scan(
+            add_feature, gsum0,
+            (jnp.swapaxes(idx, 0, 1), jnp.swapaxes(g_pooled, 0, 1)))
+        gsum = _constrain(gsum[:h], row_pspec)
+        touched = jnp.any(gsum != 0.0, axis=-1)
+        g2 = jnp.mean(jnp.square(gsum), axis=-1)
+        new_accum = accum + jnp.where(touched, g2, 0.0)
+        upd = sparse_lr * gsum * jax.lax.rsqrt(new_accum[:, None]
+                                               + sparse_eps)
+        new_mega = (mega - jnp.where(touched[:, None], upd, 0.0)
+                    .astype(mega.dtype))
+        return new_mega, new_accum
+
+    def step(params, state, batch, step_idx):
+        loss, g_dense, (idx, g_pooled) = dlrm_grads(
+            params, batch, cfg, ebc, interpret, rules)
+        new_dense, new_dense_state = dense_opt.apply(
+            {"bottom": params["bottom"], "top": params["top"]},
+            g_dense, state["dense"], step_idx)
+        if sparse_apply == "sparse":
+            apply_fn = sparse_update_nrows
+        elif cfg.lookup_impl == "psum":
+            apply_fn = sparse_update_shardmap
+        else:
+            apply_fn = sparse_update
+        new_mega, new_accum = apply_fn(
+            params["emb"]["mega"], state["accum"], idx, g_pooled)
+        new_params = {**new_dense, "emb": {"mega": new_mega}}
+        new_state = {"dense": new_dense_state, "accum": new_accum}
+        lookups = jnp.sum(batch["idx"] >= 0).astype(jnp.float32)
+        return new_params, new_state, {"loss": loss, "lookups": lookups}
+
+    return step
+
+
+def dlrm_init_state(ebc: EmbeddingBagCollection, dense_opt: Optimizer,
+                    params: Dict) -> Dict:
+    return {
+        "dense": dense_opt.init({"bottom": params["bottom"],
+                                 "top": params["top"]}),
+        "accum": jnp.zeros((ebc.plan.total_rows,), jnp.float32),
+    }

@@ -1,0 +1,18 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here on purpose — smoke tests and
+benches must see 1 CPU device (the 512-device flag belongs ONLY to
+launch/dryrun.py, which always runs as its own process)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(0)

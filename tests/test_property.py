@@ -1,0 +1,181 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.placement import plan_placement
+from repro.kernels import ref
+from repro.nn.layers import blockwise_attention, blockwise_attention_skip, \
+    full_attention
+from repro.nn.mamba2 import ssd_chunked, ssd_decode_step
+
+# ---------------------------------------------------------------------------
+# placement planner invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 24),
+    n_shards=st.sampled_from([2, 4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+    strategy=st.sampled_from(["auto", "table_wise", "row_wise",
+                              "column_wise", "replicated"]),
+)
+def test_placement_invariants(n, n_shards, seed, strategy):
+    rng = np.random.RandomState(seed)
+    hashes = [int(h) for h in rng.randint(30, 200_000, size=n)]
+    loads = [float(l) for l in rng.uniform(1, 60, size=n)]
+    budget = max(hashes) * 64 * 4 * 2 + 1     # every table fits one shard
+    plan = plan_placement(hashes, loads, 64, n_shards, budget,
+                          strategy=strategy)
+    # 1. every table has a slot; offsets are non-overlapping
+    spans = sorted(zip(plan.table_offsets, hashes))
+    for (o1, h1), (o2, _) in zip(spans, spans[1:]):
+        assert o1 + h1 <= o2, "tables overlap"
+    assert spans[-1][0] + spans[-1][1] <= plan.total_rows
+    # 2. table_wise: no table straddles a shard boundary
+    if plan.strategy == "table_wise":
+        shard_rows = plan.total_rows // n_shards
+        for off, h in zip(plan.table_offsets, hashes):
+            assert off // shard_rows == (off + h - 1) // shard_rows
+        # 3. each table assigned exactly one shard
+        assert len(plan.shard_of_table) == n
+        assert all(0 <= s < n_shards for s in plan.shard_of_table)
+    # 4. row_wise total rows divide evenly
+    if plan.strategy == "row_wise":
+        assert plan.total_rows % n_shards == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_placement_load_balance_beats_naive(seed):
+    """Bin-packing on load should not be worse than contiguous assignment."""
+    rng = np.random.RandomState(seed)
+    n, n_shards = 32, 8
+    hashes = [int(h) for h in rng.randint(1000, 100_000, size=n)]
+    loads = [float(l) for l in np.sort(rng.pareto(1.2, size=n) * 10 + 1)]
+    budget = sum(hashes) * 64 * 4.0          # capacity not binding
+    plan = plan_placement(hashes, loads, 64, n_shards, budget,
+                          strategy="table_wise")
+    naive = np.zeros(n_shards)
+    for t in range(n):
+        naive[t % n_shards] += loads[t]
+    naive_imbalance = naive.max() / naive.mean()
+    assert plan.load_imbalance <= naive_imbalance + 1e-6
+
+# ---------------------------------------------------------------------------
+# embedding bag / rowwise adagrad algebra
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), b=st.integers(1, 8),
+       l=st.integers(1, 9))
+def test_embedding_bag_linearity(seed, b, l):
+    """sum-pooled lookup is linear in the table."""
+    rng = np.random.RandomState(seed)
+    t1 = jnp.asarray(rng.randn(20, 12), jnp.float32)
+    t2 = jnp.asarray(rng.randn(20, 12), jnp.float32)
+    idx = jnp.asarray(rng.randint(-1, 20, size=(b, l)), jnp.int32)
+    lhs = ref.embedding_bag_ref(t1 + t2, idx)
+    rhs = ref.embedding_bag_ref(t1, idx) + ref.embedding_bag_ref(t2, idx)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_rowwise_adagrad_untouched_rows_frozen(seed):
+    rng = np.random.RandomState(seed)
+    h = 30
+    table = jnp.asarray(rng.randn(h, 8), jnp.float32)
+    accum = jnp.asarray(np.abs(rng.randn(h)), jnp.float32)
+    idx = jnp.asarray(rng.randint(0, 10, size=(6,)), jnp.int32)  # rows < 10
+    grads = jnp.asarray(rng.randn(6, 8), jnp.float32)
+    t2, a2 = ref.rowwise_adagrad_ref(table, accum, idx, grads, 0.1)
+    np.testing.assert_array_equal(np.asarray(t2)[10:], np.asarray(table)[10:])
+    np.testing.assert_array_equal(np.asarray(a2)[10:], np.asarray(accum)[10:])
+    assert np.all(np.asarray(a2)[np.unique(np.asarray(idx))]
+                  >= np.asarray(accum)[np.unique(np.asarray(idx))])
+
+# ---------------------------------------------------------------------------
+# attention invariances
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_blockwise_attention_matches_full(seed):
+    rng = np.random.RandomState(seed)
+    b, s, h, dh = 2, 64, 2, 16
+    q = jnp.asarray(rng.randn(b, s, h, dh), jnp.float32) * 0.3
+    k = jnp.asarray(rng.randn(b, s, h, dh), jnp.float32) * 0.3
+    v = jnp.asarray(rng.randn(b, s, h, dh), jnp.float32)
+    o_full = full_attention(q, k, v, causal=True)
+    o_blk = blockwise_attention(q, k, v, block_q=16, block_k=16)
+    o_skip = blockwise_attention_skip(q, k, v, block_q=16, block_k=16)
+    np.testing.assert_allclose(o_blk, o_full, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(o_skip, o_full, rtol=2e-4, atol=2e-4)
+
+
+def test_attention_is_causal(rng):
+    """Future tokens must not influence past outputs."""
+    b, s, h, dh = 1, 32, 2, 8
+    q = jnp.asarray(rng.randn(b, s, h, dh), jnp.float32)
+    k = jnp.asarray(rng.randn(b, s, h, dh), jnp.float32)
+    v = jnp.asarray(rng.randn(b, s, h, dh), jnp.float32)
+    base = full_attention(q, k, v, causal=True)
+    k2 = k.at[:, 20:].set(99.0)
+    v2 = v.at[:, 20:].set(-99.0)
+    pert = full_attention(q, k2, v2, causal=True)
+    np.testing.assert_allclose(base[:, :20], pert[:, :20], rtol=1e-5,
+                               atol=1e-5)
+    assert not np.allclose(base[:, 21:], pert[:, 21:])
+
+# ---------------------------------------------------------------------------
+# mamba2 SSD: chunked == recurrent
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), chunk=st.sampled_from([4, 8, 16]))
+def test_ssd_chunked_matches_recurrence(seed, chunk):
+    rng = np.random.RandomState(seed)
+    b, s, h, p, g, n = 2, 16, 4, 8, 2, 6
+    x = jnp.asarray(rng.randn(b, s, h, p), jnp.float32) * 0.5
+    dt = jnp.asarray(np.abs(rng.randn(b, s, h)) * 0.5 + 0.1, jnp.float32)
+    A = -jnp.asarray(np.abs(rng.randn(h)) + 0.2, jnp.float32)
+    B = jnp.asarray(rng.randn(b, s, g, n), jnp.float32) * 0.5
+    C = jnp.asarray(rng.randn(b, s, g, n), jnp.float32) * 0.5
+
+    y_chunk, final = ssd_chunked(x, dt, A, B, C, chunk)
+
+    state = jnp.zeros((b, h, p, n), jnp.float32)
+    ys = []
+    for t in range(s):
+        y_t, state = ssd_decode_step(state, x[:, t], dt[:, t], A,
+                                     B[:, t], C[:, t])
+        ys.append(y_t)
+    y_rec = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(y_chunk, y_rec, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(final, state, rtol=2e-3, atol=2e-3)
+
+# ---------------------------------------------------------------------------
+# int8 KV cache quantization error bound
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_int8_kv_quantization_bounded(seed):
+    from repro.nn.layers import _quantize_i8
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(2, 4, 3, 16) * rng.uniform(0.01, 10),
+                    jnp.float32)
+    q, scale = _quantize_i8(x)
+    err = np.abs(np.asarray(q, np.float32) * np.asarray(scale)
+                 - np.asarray(x))
+    # max error is half a quantization step per (token, head)
+    step = np.asarray(scale)
+    assert np.all(err <= step[..., 0][..., None] * 0.5 + 1e-7)

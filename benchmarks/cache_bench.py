@@ -1,0 +1,140 @@
+"""Cached embedding tier: cache-size x access-skew sweep + end-to-end step.
+
+Reproduces the paper's caching observation (Figs. 6/7: per-row access
+frequency is highly skewed and uncorrelated with table size) as a measured
+claim: under Zipf(alpha=1.05) synthetic traffic, a device cache holding 10%
+of the rows captures >= 80% of lookup traffic (`cache/hit..` rows, derived =
+steady-state hit rate measured AFTER the warm-up window).
+
+Second part: the cached end-to-end train step vs the uncached O(table)
+baseline on a reduced production config — per-step device cost scales with
+cache_rows, not table height (the same property behind the paper's flat CPU
+hash-size curve, Fig. 12).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.configs import get_config
+from repro.core.cache import CachedEmbeddingBagCollection
+from repro.core.design_space import reduced, test_suite_config
+from repro.core.dlrm import dlrm_param_specs
+from repro.core.embedding import EmbeddingBagCollection
+from repro.data.synthetic import bounded_zipf_rows, make_dlrm_batch
+from repro.nn.params import init_params
+from repro.optim.optimizers import adagrad
+from repro.train.steps import (build_cached_dlrm_train_step,
+                               build_dlrm_train_step, cached_dlrm_init_state,
+                               dlrm_init_state)
+
+WARM_STEPS = 40
+MEASURE_STEPS = 40
+BATCH, LOOKUPS = 256, 8
+
+
+def _traffic(cfg, ebc, alpha: float, step: int) -> np.ndarray:
+    """(B, F, L) OFFSET global rows under bounded Zipf(alpha) per table."""
+    rng = np.random.RandomState(1000 + step)
+    f = cfg.n_sparse_features
+    idx = np.empty((BATCH, f, LOOKUPS), np.int32)
+    for t in range(f):
+        idx[:, t, :] = bounded_zipf_rows(
+            rng, cfg.hash_sizes[t], BATCH * LOOKUPS, alpha
+        ).reshape(BATCH, LOOKUPS)
+    off = np.asarray(ebc.plan.table_offsets, np.int32)
+    return idx + off[None, :, None]
+
+
+def hit_rate_sweep():
+    """derived = measured steady-state hit rate; us = prepare+lookup time."""
+    cfg = test_suite_config(n_dense=64, n_sparse=2, hash_size=25_000,
+                            mlp_width=64, mlp_layers=1, embed_dim=32)
+    ebc = EmbeddingBagCollection.build(cfg, n_shards=1,
+                                      strategy="cached_host")
+    total = ebc.plan.total_rows
+    mega = jnp.zeros((total, cfg.embed_dim), jnp.float32)
+    for alpha in (1.05, 1.2, 1.5):
+        # 5% is the floor: the cache must at least hold one batch's unique
+        # working set (~1.8k rows at alpha=1.05), or prepare() thrashes
+        for frac in (0.05, 0.10, 0.25):
+            cc = CachedEmbeddingBagCollection.build(
+                cfg, cache_rows=max(64, int(total * frac)))
+            state = cc.init_state(mega)
+            t_total = 0.0
+            for step in range(WARM_STEPS + MEASURE_STEPS):
+                idx = _traffic(cfg, ebc, alpha, step)
+                if step == WARM_STEPS:
+                    h0, m0 = state.stats.hits, state.stats.misses
+                t0 = time.perf_counter()
+                out = cc.lookup(state, idx, train=False)
+                jax.block_until_ready(out)
+                t_total += time.perf_counter() - t0
+            hits = state.stats.hits - h0
+            misses = state.stats.misses - m0
+            rate = hits / max(hits + misses, 1)
+            us = t_total / (WARM_STEPS + MEASURE_STEPS) * 1e6
+            emit(f"cache/hit_a{alpha}_c{int(frac * 100)}pct", us, rate)
+
+
+def step_bench():
+    """Cached vs uncached train step on a reduced production config."""
+    cfg = reduced(get_config("dlrm-m1"), 64)
+    batch = 64
+
+    # uncached O(unique-rows) baseline (same as fig14/step_* benches)
+    ebc = EmbeddingBagCollection.build(cfg, n_shards=1, strategy="replicated")
+    params = init_params(dlrm_param_specs(cfg, ebc), jax.random.PRNGKey(0))
+    opt = adagrad(0.01)
+    state = dlrm_init_state(ebc, opt, params)
+    step = jax.jit(build_dlrm_train_step(cfg, ebc, opt,
+                                         sparse_apply="sparse"),
+                   donate_argnums=(0, 1))
+    raw = make_dlrm_batch(cfg, batch, zipf_alpha=1.05)
+    b = {"dense": jnp.asarray(raw["dense"]),
+         "idx": ebc.offset_indices(jnp.asarray(raw["idx"])),
+         "label": jnp.asarray(raw["label"])}
+    cell = [params, state]
+
+    def run_uncached(b):
+        p, s, m = cell[0], cell[1], None
+        p, s, m = step(p, s, b, jnp.asarray(0, jnp.int32))
+        cell[0], cell[1] = p, s
+        return m["loss"]
+
+    us = time_fn(run_uncached, b)
+    emit("cache/step_uncached", us, batch / (us / 1e6))
+
+    # cached tier: cache sized to ~10% of rows (>= the batch working set)
+    cc = CachedEmbeddingBagCollection.build(
+        cfg, cache_rows=max(4096, ebc.plan.total_rows // 10))
+    params_c = init_params(dlrm_param_specs(cfg, ebc), jax.random.PRNGKey(0))
+    dense = {"bottom": params_c["bottom"], "top": params_c["top"]}
+    cstate = cached_dlrm_init_state(cc, opt, params_c)
+    cache_state = cc.init_state(params_c["emb"]["mega"])
+    step_c = build_cached_dlrm_train_step(cfg, cc, opt)
+    bc = dict(b, idx=np.asarray(b["idx"]))
+    cell_c = [dense, cstate]
+
+    def run_cached(bc):
+        p, s, m = step_c(cell_c[0], cell_c[1], cache_state, bc,
+                         jnp.asarray(0, jnp.int32))
+        cell_c[0], cell_c[1] = p, s
+        return m["loss"]
+
+    us = time_fn(run_cached, bc)
+    emit("cache/step_cached_10pct", us, batch / (us / 1e6))
+    emit("cache/step_cached_hit_rate", us, cache_state.stats.hit_rate)
+
+
+def main():
+    hit_rate_sweep()
+    step_bench()
+
+
+if __name__ == "__main__":
+    main()

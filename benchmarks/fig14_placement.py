@@ -22,13 +22,21 @@ def main():
                    reduce_factor=32, strategy=strategy)
     for name in ("dlrm-m1", "dlrm-m2", "dlrm-m3"):
         cfg = get_config(name)
-        for strategy in ("table_wise", "row_wise", "column_wise"):
+        for strategy in ("table_wise", "row_wise", "column_wise",
+                         "cached_host"):
             plan = plan_placement(cfg.hash_sizes, cfg.mean_lookups,
                                   cfg.embed_dim, 16, 9.6e9,
                                   strategy=strategy)
             emit(f"fig14/{name}_{strategy}_imbalance",
                  plan.load_imbalance * 1e6,     # pseudo-us for CSV shape
                  max(plan.bytes_per_shard) / 1e9)
+        # the cached tier's capacity story: device bytes vs full-table bytes
+        plan = plan_placement(cfg.hash_sizes, cfg.mean_lookups,
+                              cfg.embed_dim, 16, 9.6e9,
+                              strategy="cached_host")
+        emit(f"fig14/{name}_cached_host_cache_frac",
+             plan.cache_rows / plan.total_rows * 1e6,   # pseudo-us
+             plan.cache_rows / plan.total_rows)
 
 
 if __name__ == "__main__":

@@ -2,21 +2,31 @@
 
 `PYTHONPATH=src python -m benchmarks.run`
 prints ``name,us_per_call,derived`` CSV (derived = examples/s unless noted).
+
+`--only SUBSTR` (repeatable) filters sections by name — the CI benchmark
+smoke runs `--only cache --only kernels`. `--json PATH` additionally dumps
+the collected rows as JSON (the `BENCH_*.json` perf-trajectory artifacts).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
-from benchmarks import (fig6_access, fig10_features, fig11_batch, fig12_hash,
-                        fig13_mlp, fig14_placement, kernels_bench,
+from benchmarks import (cache_bench, fig6_access, fig10_features, fig11_batch,
+                        fig12_hash, fig13_mlp, fig14_placement, kernels_bench,
                         table3_prod)
-from benchmarks.common import header
+from benchmarks.common import ROWS, header
 
 
 def main() -> None:
-    argparse.ArgumentParser().parse_known_args()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", action="append", default=None,
+                    help="run only sections whose name contains SUBSTR")
+    ap.add_argument("--json", default=None,
+                    help="also write rows to this JSON file")
+    args, _ = ap.parse_known_args()
     header()
     sections = [
         ("fig6/7 access distributions", fig6_access.main),
@@ -27,7 +37,11 @@ def main() -> None:
         ("fig13 mlp dims", fig13_mlp.main),
         ("table III production models", table3_prod.main),
         ("fig1/14 placement", fig14_placement.main),
+        ("cache tier (section IV-B)", cache_bench.main),
     ]
+    if args.only:
+        sections = [(n, f) for n, f in sections
+                    if any(sub in n for sub in args.only)]
     failures = 0
     for name, fn in sections:
         print(f"# --- {name} ---", flush=True)
@@ -44,6 +58,12 @@ def main() -> None:
             print(roofline_report.markdown(recs))
     except Exception:  # noqa: BLE001
         traceback.print_exc()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": [{"name": n, "us_per_call": u, "derived": d}
+                                for n, u, d in ROWS],
+                       "failures": failures}, f, indent=1)
+        print(f"# wrote {len(ROWS)} rows to {args.json}", flush=True)
     if failures:
         sys.exit(1)
 

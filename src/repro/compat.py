@@ -1,0 +1,56 @@
+"""jax API-drift shims (see also kernels/compat.py for the Pallas side).
+
+The tree targets current jax; these helpers keep it running on older
+toolchains where a handful of names moved:
+
+  shard_map       jax.shard_map            <- jax.experimental.shard_map
+  pcast           jax.lax.pcast            <- no-op (old shard_map has no
+                                              varying-marking; harmless)
+  make_mesh       axis_types=Auto kwarg    <- dropped when unsupported
+  cost_analysis   dict                     <- [dict] on old jax
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    from jax import shard_map as _shard_map
+    _CHECK_KW = "check_vma"
+except ImportError:  # pragma: no cover — exercised on old toolchains
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f=None, **kwargs):
+    """jax.shard_map with the rep/vma-check kwarg translated: callers pass
+    the current name (check_vma); old jax called it check_rep."""
+    if "check_vma" in kwargs and _CHECK_KW != "check_vma":
+        kwargs[_CHECK_KW] = kwargs.pop("check_vma")
+    if f is None:
+        return lambda g: _shard_map(g, **kwargs)
+    return _shard_map(f, **kwargs)
+
+
+def pcast(x, axes, to: str = "varying"):
+    """Mark a value device-varying inside shard_map. Old jax has no notion
+    of varying-ness (no rep-checking of scan carries) — identity there."""
+    if hasattr(jax.lax, "pcast"):
+        return jax.lax.pcast(x, axes, to=to)
+    return x
+
+
+def make_mesh(shape, axis_names):
+    """jax.make_mesh with Auto axis types where the concept exists."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axis_names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
+    return jax.make_mesh(shape, axis_names)
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """compiled.cost_analysis() as a flat dict (old jax returned [dict])."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost or {})

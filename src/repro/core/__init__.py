@@ -10,11 +10,19 @@
                    -> top MLP, loss, and the split dense/sparse train step
   design_space.py  the section-V parameterized test suite (feature counts,
                    batch size, hash size, MLP dims sweeps)
+  cache.py         CachedEmbeddingBagCollection — the "system memory" tier
+                   realized: host-resident capacity array + LFU-managed
+                   device hot-row cache (Figs. 6-8 access skew)
 """
 from repro.core.dlrm import (  # noqa: F401
     dlrm_forward,
     dlrm_loss,
     dlrm_param_specs,
+)
+from repro.core.cache import (  # noqa: F401
+    CachedEmbeddingBagCollection,
+    CacheState,
+    CacheStats,
 )
 from repro.core.embedding import EmbeddingBagCollection  # noqa: F401
 from repro.core.placement import PlacementPlan, plan_placement  # noqa: F401

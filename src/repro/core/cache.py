@@ -1,0 +1,308 @@
+"""Software-managed cached embedding tier (paper section IV-B, Figs. 6-8).
+
+The paper's central capacity problem: production embedding tables exceed
+device memory, and its Fig. 6/7 show per-row access frequency is highly
+skewed AND uncorrelated with table size — exactly the regime where a
+software-managed hot-row cache beats static sharding. This module realizes
+the "system memory" placement tier as two arrays:
+
+  capacity tier  (total_rows, d)  the full mega table + row-wise AdaGrad
+                 accumulator, host-resident / pooled-HBM, slow to touch;
+  device cache   (cache_rows, d)  hot rows + their accumulators + an LFU
+                 score per slot, sized by plan_placement("cached_host")
+                 from the per-chip HBM budget.
+
+`CachedEmbeddingBagCollection` wraps an EmbeddingBagCollection: each step the
+host manager extracts the batch's unique global rows, remaps them to cache
+slots (fetch-on-miss through the kernels/cache_ops.py exchange, which moves
+row + accumulator together), and the device-side lookup/update then runs
+entirely against the small cache array — so per-step cost scales with the
+cache, not the table. Eviction is frequency-aware (LFU with decay): victims
+are the coldest slots outside the current working set; dirty victims write
+back to the capacity tier on the way out. Hit/miss/eviction/writeback
+counters are first-class metrics (CacheStats).
+
+State handling is split the only way JAX allows: payload arrays (capacity,
+cache, accumulators, LFU scores) are jax Arrays updated functionally;
+the slot maps (row<->slot, dirty bits) are host numpy, mutated in place —
+eviction choice is data-dependent and lives on the host anyway (the same
+split as CacheEmbedding's ChunkParamMgr and MTrainS's tier manager).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import DLRMConfig
+from repro.core.embedding import EmbeddingBagCollection
+from repro.kernels import cache_ops
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """First-class cache metrics. A miss is a CAPACITY-TIER FETCH: one per
+    unique missing row per batch — that row's further accesses in the same
+    batch are served from the just-filled slot and count as hits, like every
+    other access (the FBGEMM/UVM-cache convention: hit_rate = 1 -
+    unique_misses / accesses). fetches/evictions/writebacks count rows."""
+    hits: int = 0
+    misses: int = 0
+    fetches: int = 0           # unique rows pulled from the capacity tier
+    evictions: int = 0         # slots whose resident row was displaced
+    writebacks: int = 0        # dirty evictions flushed to capacity
+    prefetched: int = 0        # rows admitted ahead of use (pipeline hook)
+    steps: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def snapshot(self) -> Dict[str, float]:
+        return {"cache_hits": float(self.hits),
+                "cache_misses": float(self.misses),
+                "cache_hit_rate": self.hit_rate,
+                "cache_fetches": float(self.fetches),
+                "cache_evictions": float(self.evictions),
+                "cache_writebacks": float(self.writebacks),
+                "cache_prefetched": float(self.prefetched)}
+
+
+@dataclasses.dataclass
+class CacheState:
+    capacity: jax.Array        # (R, d) slow tier — the full mega table
+    cap_accum: jax.Array       # (R,) fp32 AdaGrad accumulator, slow tier
+    cache: jax.Array           # (C, d) device tier — hot rows
+    cache_accum: jax.Array     # (C,) fp32 accumulators of cached rows
+    freq: jax.Array            # (C,) fp32 LFU-with-decay score per slot
+    slot_row: np.ndarray       # (C,) int64: global row held by slot, -1 free
+    row_slot: np.ndarray       # (R,) int32: slot holding row, -1 uncached
+    dirty: np.ndarray          # (C,) bool: slot updated since fetch
+    stats: CacheStats
+
+    @property
+    def cache_rows(self) -> int:
+        return int(self.cache.shape[0])
+
+    @property
+    def resident(self) -> int:
+        return int((self.slot_row >= 0).sum())
+
+
+@dataclasses.dataclass(frozen=True)
+class CachedEmbeddingBagCollection:
+    """EmbeddingBagCollection whose device working set is a hot-row cache.
+
+    The wrapped collection's `mega` param IS the capacity tier; `lookup`
+    results are numerically identical to the uncached collection (rows are
+    moved bit-exactly and pooled by the same code path).
+    """
+    ebc: EmbeddingBagCollection
+    cache_rows: int
+    decay: float = 0.98        # LFU decay per step (1.0 = pure LFU; lower
+                               # adapts faster but churns the tail more)
+    use_kernel: Optional[bool] = None
+    interpret: bool = False
+
+    @classmethod
+    def build(cls, cfg: DLRMConfig, cache_rows: Optional[int] = None,
+              strategy: str = "cached_host", decay: float = 0.98,
+              use_kernel: Optional[bool] = None,
+              interpret: bool = False) -> "CachedEmbeddingBagCollection":
+        ebc = EmbeddingBagCollection.build(cfg, n_shards=1, strategy=strategy)
+        rows = cache_rows if cache_rows is not None else ebc.plan.cache_rows
+        assert rows > 0, "cached_host plan produced an empty cache"
+        return cls(ebc, int(rows), decay, use_kernel, interpret)
+
+    # -- state ---------------------------------------------------------------
+
+    def init_state(self, mega: jax.Array,
+                   accum: Optional[jax.Array] = None) -> CacheState:
+        """mega: (total_rows, d) capacity-tier table (e.g. params["emb"]
+        ["mega"]); accum: optional (total_rows,) AdaGrad accumulator.
+
+        The state COPIES mega/accum once and owns its buffers from then on:
+        every subsequent exchange donates them to XLA so the swap updates
+        rows in place instead of moving the whole tier (the caller's arrays
+        stay valid; arrays handed out by `materialize` may be donated again
+        by later flushes)."""
+        r, d = mega.shape
+        assert r == self.ebc.plan.total_rows, (r, self.ebc.plan.total_rows)
+        c = self.cache_rows
+        if accum is None:
+            accum = jnp.zeros((r,), jnp.float32)
+        return CacheState(
+            capacity=jnp.array(mega, copy=True),
+            cap_accum=jnp.array(accum, jnp.float32, copy=True),
+            cache=jnp.zeros((c, d), mega.dtype),
+            cache_accum=jnp.zeros((c,), jnp.float32),
+            freq=jnp.zeros((c,), jnp.float32),
+            slot_row=np.full((c,), -1, np.int64),
+            row_slot=np.full((r,), -1, np.int32),
+            dirty=np.zeros((c,), bool),
+            stats=CacheStats())
+
+    # -- admission -----------------------------------------------------------
+
+    def _admit(self, state: CacheState, missing: np.ndarray,
+               counts: np.ndarray, protect: np.ndarray) -> int:
+        """Bring `missing` global rows into cache slots, evicting the coldest
+        unprotected slots. `protect` is a (C,) bool mask of slots that must
+        survive (the current working set). Returns rows written back."""
+        n = len(missing)
+        if n == 0:
+            return 0
+        free = np.flatnonzero(state.slot_row < 0)
+        need = n - len(free)
+        victims = np.empty((0,), np.int64)
+        if need > 0:
+            evictable = np.flatnonzero((state.slot_row >= 0) & ~protect)
+            if len(evictable) < need:
+                raise ValueError(
+                    f"cache thrash: need {need} evictions but only "
+                    f"{len(evictable)} unprotected slots — the batch working "
+                    f"set exceeds cache_rows={state.cache_rows}; raise the "
+                    "HBM budget or shrink the batch")
+            freq_host = np.asarray(state.freq)
+            order = np.argsort(freq_host[evictable], kind="stable")
+            victims = evictable[order[:need]]
+        slots = np.concatenate([free[:min(n, len(free))], victims])[:n]
+        evicted_rows = state.slot_row[victims]
+        wb_mask = state.dirty[victims]
+        # worklist: dirty victims write back; every admitted slot fetches
+        evict_rows = np.full((n,), -1, np.int64)
+        evict_rows[len(slots) - len(victims):] = np.where(
+            wb_mask, evicted_rows, -1)
+        (state.capacity, state.cache, state.cap_accum, state.cache_accum,
+         state.freq) = cache_ops.cache_exchange(
+            state.capacity, state.cache, state.cap_accum, state.cache_accum,
+            state.freq, jnp.asarray(slots, jnp.int32),
+            jnp.asarray(evict_rows, jnp.int32),
+            jnp.asarray(missing, jnp.int32),
+            jnp.asarray(counts, jnp.float32),
+            use_kernel=self.use_kernel, interpret=self.interpret)
+        # host maps
+        state.row_slot[evicted_rows] = -1
+        state.slot_row[slots] = missing
+        state.row_slot[missing] = slots.astype(np.int32)
+        state.dirty[slots] = False
+        state.stats.fetches += n
+        state.stats.evictions += len(victims)
+        state.stats.writebacks += int(wb_mask.sum())
+        return int(wb_mask.sum())
+
+    def prepare(self, state: CacheState, idx, train: bool = True
+                ) -> np.ndarray:
+        """Make every row of `idx` cache-resident and remap to slot space.
+
+        idx: (B, F, L) OFFSET global rows (-1 pads), host or device array.
+        Returns (B, F, L) int32 cache-slot indices (-1 pads preserved) —
+        feed these to `lookup_cached` / the cached train step. When `train`,
+        the working set's slots are marked dirty (they will receive sparse
+        updates) so eviction writes them back.
+        """
+        idx = np.asarray(idx)
+        valid = idx >= 0
+        rows, counts = np.unique(idx[valid], return_counts=True)
+        if len(rows) > state.cache_rows:
+            raise ValueError(
+                f"batch touches {len(rows)} unique rows > cache_rows="
+                f"{state.cache_rows}; raise the HBM budget or shrink the "
+                "batch")
+        resident = state.row_slot[rows] >= 0
+        hit_slots = state.row_slot[rows[resident]]
+        hit_counts = counts[resident]
+        missing = rows[~resident]
+        # LFU accounting: decay everything, bump hit slots; admitted slots
+        # are seeded with their batch counts by the exchange below.
+        state.freq = cache_ops.lfu_touch(
+            state.freq, jnp.asarray(hit_slots, jnp.int32),
+            jnp.asarray(hit_counts, jnp.float32), decay=self.decay)
+        protect = np.zeros((state.cache_rows,), bool)
+        protect[hit_slots] = True
+        self._admit(state, missing, counts[~resident], protect)
+        state.stats.hits += int(counts.sum()) - len(missing)
+        state.stats.misses += len(missing)
+        state.stats.steps += 1
+        if train:
+            state.dirty[state.row_slot[rows]] = True
+        # remap global rows -> slots (-1 pads preserved)
+        local = state.row_slot[np.where(valid, idx, 0)]
+        return np.where(valid, local, -1).astype(np.int32)
+
+    def prefetch(self, state: CacheState, rows) -> int:
+        """Best-effort admission of `rows` (unique global rows, e.g. the
+        NEXT batch's deduplicated indices from the pipeline hook) so the
+        capacity-tier fetch overlaps the current step's compute. Does not
+        touch hit/miss accounting and never evicts the rows it brings in;
+        overflow beyond free+evictable space is dropped. Returns the number
+        of rows admitted."""
+        rows = np.unique(np.asarray(rows))
+        rows = rows[rows >= 0]
+        missing = rows[state.row_slot[rows] < 0]
+        protect = np.zeros((state.cache_rows,), bool)
+        keep = state.row_slot[rows[state.row_slot[rows] >= 0]]
+        protect[keep] = True
+        evictable = int(((state.slot_row >= 0) & ~protect).sum())
+        free = int((state.slot_row < 0).sum())
+        missing = missing[:free + evictable]
+        self._admit(state, missing, np.ones((len(missing),), np.float32),
+                    protect)
+        state.stats.prefetched += len(missing)
+        return len(missing)
+
+    # -- lookup --------------------------------------------------------------
+
+    def lookup_cached(self, state: CacheState, local_idx,
+                      rules=None) -> jax.Array:
+        """Pooled lookup against the device cache. local_idx: (B, F, L)
+        slot indices from `prepare`. Pure device function — jit-friendly."""
+        return self.ebc.lookup({"mega": state.cache},
+                               jnp.asarray(local_idx), rules)
+
+    def lookup(self, state: CacheState, idx, train: bool = False,
+               rules=None) -> jax.Array:
+        """prepare + lookup_cached: numerically identical to
+        `EmbeddingBagCollection.lookup` on the same (global) indices."""
+        return self.lookup_cached(state, self.prepare(state, idx, train),
+                                  rules)
+
+    # -- training ------------------------------------------------------------
+
+    def mark_updated(self, state: CacheState, new_cache: jax.Array,
+                     new_cache_accum: jax.Array) -> None:
+        """Install post-update cache arrays (dirty bits were already set by
+        `prepare(train=True)`)."""
+        state.cache = new_cache
+        state.cache_accum = new_cache_accum
+
+    # -- writeback -----------------------------------------------------------
+
+    def flush(self, state: CacheState) -> int:
+        """Write every dirty slot back to the capacity tier (rows stay
+        cached, now clean). Returns rows written back."""
+        slots = np.flatnonzero(state.dirty)
+        if len(slots) == 0:
+            return 0
+        (state.capacity, state.cache, state.cap_accum, state.cache_accum,
+         state.freq) = cache_ops.cache_exchange(
+            state.capacity, state.cache, state.cap_accum, state.cache_accum,
+            state.freq, jnp.asarray(slots, jnp.int32),
+            jnp.asarray(state.slot_row[slots], jnp.int32),
+            jnp.full((len(slots),), -1, jnp.int32),
+            jnp.zeros((len(slots),), jnp.float32),
+            use_kernel=self.use_kernel, interpret=self.interpret)
+        state.dirty[slots] = False
+        state.stats.writebacks += len(slots)
+        return len(slots)
+
+    def materialize(self, state: CacheState
+                    ) -> Tuple[jax.Array, jax.Array]:
+        """Flush and return the up-to-date (mega, accum) capacity arrays —
+        what a checkpoint or an uncached evaluator should read."""
+        self.flush(state)
+        return state.capacity, state.cap_accum

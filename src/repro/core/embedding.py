@@ -120,8 +120,9 @@ class EmbeddingBagCollection:
         bytes; the paper's PS architecture pools at the PS for exactly this
         reason). Requires plan.pspec == P(model_axis, None) and the batch
         sharded over the remaining axes."""
-        from jax import shard_map
         from jax.sharding import PartitionSpec as P
+
+        from repro.compat import shard_map
         assert self.plan.pspec == P(model_axis, None), self.plan.pspec
         batch_axes = tuple(a for a in mesh.axis_names if a != model_axis)
         rows_local = self.plan.total_rows // mesh.shape[model_axis]

@@ -18,10 +18,13 @@ plan fixes each table's row offset and the mega table's PartitionSpec:
                (follow-up work to the paper; included as a beyond-paper
                option)
 
-The paper's "system memory" / "remote PS" tiers have no dry-run analogue
-(no host DRAM tier on the target); the pod's pooled HBM plays that role —
-see DESIGN.md section 7. A `host_offload` strategy string is accepted and
-mapped to row_wise with a note, to keep configs portable.
+  cached_host  the paper's "system memory" tier, realized: the mega table
+               lives replicated in a slow capacity tier (host-resident /
+               pooled-HBM array) and a fixed-size device cache holds hot
+               rows (core/cache.py). `cache_rows` is sized from the HBM
+               budget; Fig. 6/7's skewed, size-uncorrelated access makes a
+               small cache capture most traffic. The legacy `host_offload`
+               strategy string maps here, keeping configs portable.
 """
 from __future__ import annotations
 
@@ -32,9 +35,14 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 
+#: device-side HBM overhead per CACHED row beyond the row payload:
+#: row-wise AdaGrad accumulator (fp32) + LFU frequency score (fp32)
+CACHED_ROW_META_BYTES = 8
+
+
 @dataclasses.dataclass(frozen=True)
 class PlacementPlan:
-    strategy: str                    # replicated|table_wise|row_wise|column_wise
+    strategy: str   # replicated|table_wise|row_wise|column_wise|cached_host
     table_offsets: Tuple[int, ...]   # row offset of each table in the mega table
     total_rows: int                  # padded row count of the mega table
     pspec: P                         # sharding of the (rows, d) mega table
@@ -43,6 +51,8 @@ class PlacementPlan:
     # diagnostics
     bytes_per_shard: Tuple[int, ...] = ()
     load_per_shard: Tuple[float, ...] = ()
+    # cached_host only: device-cache slots backing the host-resident table
+    cache_rows: int = 0
 
     @property
     def load_imbalance(self) -> float:
@@ -74,8 +84,8 @@ def plan_placement(hash_sizes: Sequence[int],
     hash_sizes = [int(h) for h in hash_sizes]
     loads = [float(l) for l in mean_lookups]
     total_bytes = sum(h * embed_dim * itemsize for h in hash_sizes)
-    if strategy == "host_offload":  # no host tier on target: DESIGN.md section 7
-        strategy = "row_wise"
+    if strategy == "host_offload":  # legacy alias for the realized tier
+        strategy = "cached_host"
     if strategy == "auto":
         if total_bytes <= hbm_budget_bytes:
             strategy = "replicated"
@@ -125,6 +135,22 @@ def plan_placement(hash_sizes: Sequence[int],
     if strategy == "table_wise":
         return _table_wise(hash_sizes, loads, embed_dim, n_shards,
                            hbm_budget_bytes, itemsize, model_axis)
+
+    if strategy == "cached_host":
+        # capacity tier: the whole mega table, replicated in slow memory
+        # (host DRAM / pooled HBM — no model-axis sharding to plan). The
+        # device tier is a hot-row cache sized so payload + per-row AdaGrad
+        # accumulator + LFU score fit the per-chip budget.
+        offsets, rows = _contiguous(hash_sizes, pad_mult=8)
+        row_bytes = embed_dim * itemsize + CACHED_ROW_META_BYTES
+        cache_rows = int(hbm_budget_bytes // row_bytes)
+        cache_rows = max(8, min(cache_rows // 8 * 8, rows))
+        return PlacementPlan("cached_host", offsets, rows, P(None, None),
+                             None, n_shards,
+                             bytes_per_shard=(cache_rows * row_bytes,)
+                             * n_shards,
+                             load_per_shard=(sum(loads),) * n_shards,
+                             cache_rows=cache_rows)
 
     raise ValueError(f"unknown placement strategy {strategy!r}")
 

@@ -1,7 +1,12 @@
 from repro.data.synthetic import (  # noqa: F401
+    bounded_zipf_rows,
     dlrm_batch_specs,
     lm_batch_specs,
     make_dlrm_batch,
     make_lm_batch,
 )
-from repro.data.pipeline import DataPipeline, ShardedLoader  # noqa: F401
+from repro.data.pipeline import (  # noqa: F401
+    DataPipeline,
+    ShardedLoader,
+    dedup_indices_hook,
+)

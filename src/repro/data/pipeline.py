@@ -12,17 +12,32 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Callable, Dict, Iterator, Optional
+from typing import Callable, Dict, Iterator, Optional, Sequence
 
 import numpy as np
 
 
+class _WorkerError:
+    """Marker riding the batch queue: the generator/transform raised."""
+
+    def __init__(self, error: BaseException):
+        self.error = error
+
+
 class DataPipeline:
-    """Prefetching wrapper: gen(step) -> batch, produced ahead of use."""
+    """Prefetching wrapper: gen(step) -> batch, produced ahead of use.
+
+    `transform` runs on each batch INSIDE the worker thread — host-side
+    preprocessing (e.g. the cached-tier dedup hook below) overlaps device
+    compute for free, the reader-tier decoupling of section IV-B.2.
+    """
 
     def __init__(self, gen: Callable[[int], Dict[str, np.ndarray]],
-                 prefetch: int = 2, start_step: int = 0):
+                 prefetch: int = 2, start_step: int = 0,
+                 transform: Optional[Callable[[Dict[str, np.ndarray]],
+                                              Dict[str, np.ndarray]]] = None):
         self._gen = gen
+        self._transform = transform
         self._q: "queue.Queue" = queue.Queue(maxsize=prefetch)
         self._stop = threading.Event()
         self._step = start_step
@@ -31,15 +46,27 @@ class DataPipeline:
 
     def _worker(self):
         step = self._step
-        while not self._stop.is_set():
-            batch = self._gen(step)
+        try:
+            while not self._stop.is_set():
+                batch = self._gen(step)
+                if self._transform is not None:
+                    batch = self._transform(batch)
+                while not self._stop.is_set():
+                    try:
+                        self._q.put((step, batch), timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+                step += 1
+        except Exception as e:  # noqa: BLE001 — surface in the consumer
+            # a dead reader must fail the trainer loudly, not starve it:
+            # park the error where __next__ will re-raise it
             while not self._stop.is_set():
                 try:
-                    self._q.put((step, batch), timeout=0.1)
+                    self._q.put((step, _WorkerError(e)), timeout=0.1)
                     break
                 except queue.Full:
                     continue
-            step += 1
 
     def __iter__(self) -> Iterator:
         return self
@@ -47,7 +74,13 @@ class DataPipeline:
     def __next__(self):
         if self._stop.is_set():
             raise StopIteration
-        return self._q.get()
+        step, batch = self._q.get()
+        if isinstance(batch, _WorkerError):
+            self._stop.set()
+            raise RuntimeError(
+                f"data pipeline worker failed at step {step}"
+            ) from batch.error
+        return step, batch
 
     def close(self):
         self._stop.set()
@@ -85,5 +118,35 @@ class ShardedLoader:
         hi = lo + self.host_batch
         return {k: v[lo:hi] for k, v in full.items()}
 
-    def pipeline(self, prefetch: int = 2, start_step: int = 0) -> DataPipeline:
-        return DataPipeline(self.host_slice, prefetch, start_step)
+    def pipeline(self, prefetch: int = 2, start_step: int = 0,
+                 transform: Optional[Callable] = None) -> DataPipeline:
+        return DataPipeline(self.host_slice, prefetch, start_step, transform)
+
+
+def dedup_indices_hook(table_offsets: Sequence[int], key: str = "idx",
+                       out_key: str = "uniq_rows"
+                       ) -> Callable[[Dict[str, np.ndarray]],
+                                     Dict[str, np.ndarray]]:
+    """Prefetch hook for the cached embedding tier (core/cache.py).
+
+    Returns a transform that REWRITES batch[key] from (B, F, L) per-table
+    indices to OFFSET global mega-table rows (what every EmbeddingBag lookup
+    and the cached train step consume — no second offset_indices pass
+    downstream) and attaches the DEDUPLICATED row set as batch[out_key].
+    Both run in the pipeline worker thread, so when the trainer calls
+    `CachedEmbeddingBagCollection.prefetch(state, batch["uniq_rows"])` the
+    capacity-tier fetch overlaps the previous step's device compute instead
+    of serializing with it.
+    """
+    offsets = np.asarray(table_offsets, np.int64)
+
+    def hook(batch: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        idx = batch[key]
+        glob = np.where(idx >= 0, idx + offsets[None, :, None],
+                        -1).astype(np.int32)
+        out = dict(batch)
+        out[key] = glob
+        out[out_key] = np.unique(glob[glob >= 0]).astype(np.int64)
+        return out
+
+    return hook

@@ -32,10 +32,41 @@ def _zipf_indices(rng: np.random.RandomState, hash_size: int, n: int,
     return (raw % max(hash_size, 1)).astype(np.int32)
 
 
+_ZIPF_CDF_CACHE: Dict = {}
+
+
+def _bounded_zipf_cdf(hash_size: int, alpha: float) -> np.ndarray:
+    """CDF of the rank-probability Zipf p(r) ∝ (r+1)^-alpha over
+    [0, hash_size) — unlike numpy's unbounded rng.zipf + mod-wrap, the head
+    stays hot and the tail mass is NOT folded back uniformly, so measured
+    cache hit rates reflect the true skew (paper Fig. 6)."""
+    key = (hash_size, round(alpha, 6))
+    cdf = _ZIPF_CDF_CACHE.get(key)
+    if cdf is None:
+        p = (np.arange(1, hash_size + 1, dtype=np.float64)) ** (-alpha)
+        cdf = np.cumsum(p / p.sum())
+        _ZIPF_CDF_CACHE[key] = cdf
+    return cdf
+
+
+def bounded_zipf_rows(rng: np.random.RandomState, hash_size: int, n: int,
+                      alpha: float) -> np.ndarray:
+    """n draws from the bounded Zipf(alpha) over [0, hash_size): row 0 is
+    the hottest. Inverse-CDF sampling; the CDF is cached per (size, alpha)."""
+    cdf = _bounded_zipf_cdf(hash_size, alpha)
+    return np.searchsorted(cdf, rng.rand(n)).astype(np.int32)
+
+
 def make_dlrm_batch(cfg: DLRMConfig, batch: int, step: int = 0,
-                    seed: int = 0) -> Dict[str, np.ndarray]:
+                    seed: int = 0,
+                    zipf_alpha: Optional[float] = None
+                    ) -> Dict[str, np.ndarray]:
     """Returns {dense (B, n_dense) f32, idx (B, F, L) i32 (-1 pads, already
-    in-table — NOT offset), label (B,) f32}."""
+    in-table — NOT offset), label (B,) f32}.
+
+    zipf_alpha=None keeps the historical per-example rng.zipf(1.3) draw
+    (bitwise-stable for existing tests); setting it switches index values to
+    the bounded Zipf above — the knob benchmarks/cache_bench.py sweeps."""
     rng = np.random.RandomState(seed * 1_000_003 + step)
     f, trunc = cfg.n_sparse_features, cfg.truncation
     dense = rng.randn(batch, cfg.n_dense_features).astype(np.float32)
@@ -45,9 +76,15 @@ def make_dlrm_batch(cfg: DLRMConfig, batch: int, step: int = 0,
     for t in range(f):
         mean_len = min(cfg.mean_lookups[t], trunc)
         lens = np.clip(rng.poisson(mean_len, size=batch), 1, trunc)
-        for b in range(batch):
-            vals = _zipf_indices(rng, cfg.hash_sizes[t], lens[b])
-            idx[b, t, :lens[b]] = vals
+        if zipf_alpha is not None:
+            vals = bounded_zipf_rows(rng, cfg.hash_sizes[t], batch * trunc,
+                                     zipf_alpha).reshape(batch, trunc)
+            mask = np.arange(trunc)[None, :] < lens[:, None]
+            idx[:, t, :] = np.where(mask, vals, -1)
+        else:
+            for b in range(batch):
+                vals = _zipf_indices(rng, cfg.hash_sizes[t], lens[b])
+                idx[b, t, :lens[b]] = vals
         planted = planted + (idx[:, t, 0] % 7 - 3)
 
     # planted logistic labels: depend on dense mean + a hash of first indices

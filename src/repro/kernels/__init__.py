@@ -9,6 +9,9 @@ three kernels here cover exactly that path:
   dot_interaction  pairwise-dot feature interaction (section III-A.3), MXU-shaped
   rowwise_adagrad  deduplicated sparse gradient aggregation + row-wise
                    AdaGrad apply — the EMB backward/update
+  cache_ops        capacity<->cache row exchange (eviction-writeback +
+                   fetch-on-miss) with fused LFU counter updates — the
+                   swap engine of the cached embedding tier (core/cache.py)
   flash_attention  causal streaming attention with static triangle
                    skipping — the prefill_32k hot spot of the LM family
 
@@ -17,6 +20,7 @@ tests sweep shapes/dtypes with interpret=True. On non-TPU backends the
 wrappers transparently fall back to the oracle so the full system trains on
 CPU; `interpret=True` executes the real kernel body for validation.
 """
+from repro.kernels.cache_ops import cache_exchange, lfu_touch  # noqa: F401
 from repro.kernels.ops import (  # noqa: F401
     dot_interaction,
     embedding_bag,

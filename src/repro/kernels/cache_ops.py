@@ -1,0 +1,219 @@
+"""Pallas TPU kernel: batched capacity<->cache row exchange + LFU counters.
+
+The cached embedding tier (core/cache.py) keeps the mega table in a slow
+"capacity" tier (host-resident / pooled-HBM) and a fixed-size hot-row cache
+on device. Each step the manager emits a per-slot WORKLIST: slot i may first
+write its dirty victim row back to capacity (eviction-writeback) and then be
+refilled from a missed capacity row (fetch-on-miss), seeding the slot's LFU
+score. This kernel executes that worklist as an explicitly scheduled DMA
+pipeline — the TPU analogue of the UVM/CacheEmbedding swap-in/swap-out path —
+moving the embedding row AND its row-wise AdaGrad accumulator together so an
+evicted row can resume training after a later re-fetch.
+
+Grid step i = worklist entry i; `pl.when` guards skip -1 entries, so one
+lowered kernel serves any hit/miss pattern. Rows ride HBM->VMEM->HBM through
+a (1, D) scratch; the accumulator and LFU scalar through (1, 1) scratches.
+
+The `cache_exchange` / `lfu_touch` wrappers dispatch: Pallas kernel on TPU
+(or `interpret=True` for tests), pure-jnp oracle (kernels/ref.py) otherwise.
+D is padded to the 128-lane width here; real deployments keep D lane-aligned
+so the pad is a no-op.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import MemorySpace, SemaphoreType
+
+from repro.kernels import ref
+
+LANE = 128
+
+
+def _use_pallas(force: Optional[bool]) -> bool:
+    if force is not None:
+        return force
+    return jax.default_backend() == "tpu"
+
+
+def _pad_lane(x: jax.Array) -> jax.Array:
+    pad = (-x.shape[1]) % LANE
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, 0), (0, pad)))
+
+
+def _exchange_kernel(slots_ref, evict_ref, fetch_ref, counts_ref,
+                     capacity_ref, cache_ref, cap_acc_ref, cache_acc_ref,
+                     freq_ref, capacity_out, cache_out, cap_acc_out,
+                     cache_acc_out, freq_out, row_vmem, acc_vmem, frq_vmem,
+                     sems):
+    """Grid step i executes worklist entry i (see module docstring).
+
+    slots/evict/fetch/counts: (N,) SMEM scalar-prefetch; capacity/(R, D),
+    cache/(C, D), cap_acc/(R, 1), cache_acc/(C, 1), freq/(C, 1) all HBM and
+    io-aliased in->out; row_vmem: (1, D); acc_vmem/frq_vmem: (1, 1)."""
+    i = pl.program_id(0)
+    s = slots_ref[i]
+    ev = evict_ref[i]
+    ft = fetch_ref[i]
+
+    @pl.when((s >= 0) & (ev >= 0))
+    def _writeback():
+        cp_r = pltpu.make_async_copy(cache_ref.at[pl.ds(s, 1)], row_vmem,
+                                     sems.at[0])
+        cp_a = pltpu.make_async_copy(cache_acc_ref.at[pl.ds(s, 1)], acc_vmem,
+                                     sems.at[1])
+        cp_r.start()
+        cp_a.start()
+        cp_r.wait()
+        cp_a.wait()
+        cp_wr = pltpu.make_async_copy(row_vmem, capacity_out.at[pl.ds(ev, 1)],
+                                      sems.at[0])
+        cp_wa = pltpu.make_async_copy(acc_vmem, cap_acc_out.at[pl.ds(ev, 1)],
+                                      sems.at[1])
+        cp_wr.start()
+        cp_wa.start()
+        cp_wr.wait()
+        cp_wa.wait()
+
+    @pl.when((s >= 0) & (ft >= 0))
+    def _fetch():
+        cp_r = pltpu.make_async_copy(capacity_ref.at[pl.ds(ft, 1)], row_vmem,
+                                     sems.at[0])
+        cp_a = pltpu.make_async_copy(cap_acc_ref.at[pl.ds(ft, 1)], acc_vmem,
+                                     sems.at[1])
+        cp_r.start()
+        cp_a.start()
+        cp_r.wait()
+        cp_a.wait()
+        frq_vmem[...] = jnp.full((1, 1), counts_ref[i], jnp.float32)
+        cp_wr = pltpu.make_async_copy(row_vmem, cache_out.at[pl.ds(s, 1)],
+                                      sems.at[0])
+        cp_wa = pltpu.make_async_copy(acc_vmem, cache_acc_out.at[pl.ds(s, 1)],
+                                      sems.at[1])
+        cp_wf = pltpu.make_async_copy(frq_vmem, freq_out.at[pl.ds(s, 1)],
+                                      sems.at[2])
+        cp_wr.start()
+        cp_wa.start()
+        cp_wf.start()
+        cp_wr.wait()
+        cp_wa.wait()
+        cp_wf.wait()
+
+
+# only the (·, D) payloads are donated: the 1-D accum/freq args are
+# reshaped to (·, 1) before the pallas_call, so their input buffers cannot
+# alias the outputs anyway (and they are 64x smaller than the payload)
+@functools.partial(jax.jit, static_argnames=("interpret",),
+                   donate_argnums=(0, 1))
+def cache_exchange_kernel(capacity: jax.Array, cache: jax.Array,
+                          cap_accum: jax.Array, cache_accum: jax.Array,
+                          freq: jax.Array, slots: jax.Array,
+                          evict_rows: jax.Array, fetch_rows: jax.Array,
+                          counts: jax.Array, interpret: bool = False):
+    """capacity: (R, D), cache: (C, D) with D % 128 == 0; cap_accum: (R, 1),
+    cache_accum: (C, 1), freq: (C, 1) fp32; worklist slots/evict_rows/
+    fetch_rows: (N,) int32 (-1 = skip); counts: (N,) fp32 LFU seeds.
+    Returns the five arrays updated in place (io aliasing)."""
+    r, d = capacity.shape
+    c = cache.shape[0]
+    n = slots.shape[0]
+    return pl.pallas_call(
+        _exchange_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=(n,),
+            in_specs=[
+                pl.BlockSpec(memory_space=MemorySpace.ANY),  # capacity
+                pl.BlockSpec(memory_space=MemorySpace.ANY),  # cache
+                pl.BlockSpec(memory_space=MemorySpace.ANY),  # cap_acc
+                pl.BlockSpec(memory_space=MemorySpace.ANY),  # cache_acc
+                pl.BlockSpec(memory_space=MemorySpace.ANY),  # freq
+            ],
+            out_specs=[
+                pl.BlockSpec(memory_space=MemorySpace.ANY),
+                pl.BlockSpec(memory_space=MemorySpace.ANY),
+                pl.BlockSpec(memory_space=MemorySpace.ANY),
+                pl.BlockSpec(memory_space=MemorySpace.ANY),
+                pl.BlockSpec(memory_space=MemorySpace.ANY),
+            ],
+            scratch_shapes=[
+                MemorySpace.VMEM((1, d), capacity.dtype),
+                MemorySpace.VMEM((1, 1), jnp.float32),
+                MemorySpace.VMEM((1, 1), jnp.float32),
+                SemaphoreType.DMA((3,)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((r, d), capacity.dtype),
+            jax.ShapeDtypeStruct((c, d), cache.dtype),
+            jax.ShapeDtypeStruct((r, 1), jnp.float32),
+            jax.ShapeDtypeStruct((c, 1), jnp.float32),
+            jax.ShapeDtypeStruct((c, 1), jnp.float32),
+        ],
+        input_output_aliases={4: 0, 5: 1, 6: 2, 7: 3, 8: 4},
+        interpret=interpret,
+    )(slots, evict_rows, fetch_rows, counts, capacity, cache,
+      cap_accum.reshape(r, 1).astype(jnp.float32),
+      cache_accum.reshape(c, 1).astype(jnp.float32),
+      freq.reshape(c, 1).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# public wrappers (kernel on TPU / interpret, jnp oracle on CPU)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3, 4))
+def _exchange_ref_jit(capacity, cache, cap_accum, cache_accum, freq,
+                      slots, evict_rows, fetch_rows, counts):
+    return ref.cache_exchange_ref(capacity, cache, cap_accum, cache_accum,
+                                  freq, slots, evict_rows, fetch_rows, counts)
+
+
+def cache_exchange(capacity: jax.Array, cache: jax.Array,
+                   cap_accum: jax.Array, cache_accum: jax.Array,
+                   freq: jax.Array, slots: jax.Array, evict_rows: jax.Array,
+                   fetch_rows: jax.Array, counts: jax.Array,
+                   use_kernel: Optional[bool] = None,
+                   interpret: bool = False
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array,
+                              jax.Array]:
+    """Batched eviction-writeback + fetch-on-miss between the capacity tier
+    and the device cache. See cache_exchange_kernel / ref.cache_exchange_ref
+    for the worklist contract. Returns (capacity', cache', cap_accum',
+    cache_accum', freq').
+
+    ALL FIVE ARRAYS ARE DONATED: the swap must update a few rows in place,
+    not move the whole capacity tier through memory — callers (core/cache.py
+    owns its buffers, see init_state) must use the returned arrays."""
+    slots = slots.astype(jnp.int32)
+    evict_rows = evict_rows.astype(jnp.int32)
+    fetch_rows = fetch_rows.astype(jnp.int32)
+    counts = counts.astype(jnp.float32)
+    if _use_pallas(use_kernel) or interpret:
+        d = capacity.shape[1]
+        new_cap, new_cache, new_ca, new_cc, new_f = cache_exchange_kernel(
+            _pad_lane(capacity), _pad_lane(cache), cap_accum, cache_accum,
+            freq, slots, evict_rows, fetch_rows, counts, interpret=interpret)
+        return (new_cap[:, :d], new_cache[:, :d], new_ca[:, 0], new_cc[:, 0],
+                new_f[:, 0])
+    return _exchange_ref_jit(capacity, cache, cap_accum, cache_accum,
+                             freq, slots, evict_rows, fetch_rows, counts)
+
+
+@functools.partial(jax.jit, static_argnames=("decay",))
+def lfu_touch(freq: jax.Array, slots: jax.Array, counts: jax.Array,
+              decay: float = 0.8) -> jax.Array:
+    """LFU-with-decay hit accounting: freq' = decay * freq then
+    freq'[slots] += counts. Dense decay + sparse scatter-add lower to
+    efficient XLA on every backend, so there is one path (ref)."""
+    return ref.lfu_touch_ref(freq, slots.astype(jnp.int32),
+                             counts.astype(jnp.float32), decay)

@@ -1,0 +1,13 @@
+"""Pallas API-drift shim.
+
+jax renamed `pltpu.TPUMemorySpace` to `pltpu.MemorySpace` (and kept the
+semantics: enum members double as scratch-shape constructors). The kernels
+import the name from here so one tree runs on both the pinned CI jax and
+older container toolchains.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+MemorySpace = getattr(pltpu, "MemorySpace", None) or pltpu.TPUMemorySpace
+SemaphoreType = pltpu.SemaphoreType

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import MemorySpace, SemaphoreType
+
 
 def _bag_kernel(idx_ref, table_ref, out_ref, rows_vmem, sems, *,
                 max_len: int, mode: str):
@@ -73,11 +75,11 @@ def embedding_bag_kernel(table: jax.Array, indices: jax.Array,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(b,),
-            in_specs=[pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY)],
+            in_specs=[pl.BlockSpec(memory_space=MemorySpace.ANY)],
             out_specs=pl.BlockSpec((1, d), lambda i, idx_ref: (i, 0)),
             scratch_shapes=[
-                pltpu.MemorySpace.VMEM((2, 1, d), table.dtype),
-                pltpu.SemaphoreType.DMA((2,)),
+                MemorySpace.VMEM((2, 1, d), table.dtype),
+                SemaphoreType.DMA((2,)),
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((b, d), table.dtype),

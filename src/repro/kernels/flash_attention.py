@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import MemorySpace, SemaphoreType
+
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, kbuf, vbuf, sems, *,
                   block_q: int, block_k: int, sk: int, causal: bool,
@@ -110,16 +112,16 @@ def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array,
         in_specs=[
             pl.BlockSpec((1, 1, block_q, dh),
                          lambda bi, hi, qi: (bi, hi, qi, 0)),
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+            pl.BlockSpec(memory_space=MemorySpace.ANY),
+            pl.BlockSpec(memory_space=MemorySpace.ANY),
         ],
         out_specs=pl.BlockSpec((1, 1, block_q, dh),
                                lambda bi, hi, qi: (bi, hi, qi, 0)),
         out_shape=jax.ShapeDtypeStruct((b, h, sq, dh), q.dtype),
         scratch_shapes=[
-            pltpu.MemorySpace.VMEM((2, block_k, dh), k.dtype),
-            pltpu.MemorySpace.VMEM((2, block_k, dh), v.dtype),
-            pltpu.SemaphoreType.DMA((2, 2)),
+            MemorySpace.VMEM((2, block_k, dh), k.dtype),
+            MemorySpace.VMEM((2, block_k, dh), v.dtype),
+            SemaphoreType.DMA((2, 2)),
         ],
         interpret=interpret,
     )(q, k, v)

@@ -95,6 +95,54 @@ def dedup_grads_ref(indices: jax.Array, grads: jax.Array, num_rows: int):
     return uniq, gsum
 
 
+def cache_exchange_ref(capacity: jax.Array, cache: jax.Array,
+                       cap_accum: jax.Array, cache_accum: jax.Array,
+                       freq: jax.Array, slots: jax.Array,
+                       evict_rows: jax.Array, fetch_rows: jax.Array,
+                       counts: jax.Array):
+    """Oracle for the cache_exchange kernel (cache_ops.py): one batched
+    swap between the capacity tier and the device cache.
+
+    capacity: (R, D) slow tier; cache: (C, D) device tier; cap_accum: (R,)
+    and cache_accum: (C,) row-wise AdaGrad accumulators riding along;
+    freq: (C,) LFU scores. The worklist is per-slot: entry i touches cache
+    slot slots[i] (-1 = no-op pad) and
+      * writes the slot back to capacity row evict_rows[i] if >= 0
+        (dirty-victim writeback), then
+      * fills it from capacity row fetch_rows[i] if >= 0 (fetch-on-miss),
+        seeding its LFU score with counts[i].
+    Worklist slots are distinct and evict/fetch row sets are disjoint
+    (the manager's working-set protection guarantees this), so entry
+    order does not matter. Returns all five arrays updated.
+    """
+    r = capacity.shape[0]
+    c = cache.shape[0]
+    safe_slot = jnp.where(slots >= 0, slots, 0)
+    # 1) dirty-victim writeback: cache -> capacity
+    wb = jnp.where(evict_rows >= 0, evict_rows, r)          # r drops
+    capacity = capacity.at[wb].set(cache[safe_slot], mode="drop")
+    cap_accum = cap_accum.at[wb].set(cache_accum[safe_slot], mode="drop")
+    # 2) fetch-on-miss: capacity -> cache (+ seed the slot's LFU counter)
+    take = jnp.where(fetch_rows >= 0, fetch_rows, 0)
+    dst = jnp.where((fetch_rows >= 0) & (slots >= 0), slots, c)  # c drops
+    cache = cache.at[dst].set(capacity[take], mode="drop")
+    cache_accum = cache_accum.at[dst].set(cap_accum[take], mode="drop")
+    freq = freq.at[dst].set(counts.astype(freq.dtype), mode="drop")
+    return capacity, cache, cap_accum, cache_accum, freq
+
+
+def lfu_touch_ref(freq: jax.Array, slots: jax.Array, counts: jax.Array,
+                  decay: float) -> jax.Array:
+    """Decay-then-bump LFU counter update: freq' = decay * freq, then
+    freq'[slots[i]] += counts[i] for every valid (>= 0) slot. Dense decay +
+    sparse scatter-add — the frequency half of the paper's observation that
+    access skew, not table size, decides cacheability (Fig. 6/7)."""
+    c = freq.shape[0]
+    dst = jnp.where(slots >= 0, slots, c)                   # c drops
+    return (freq * decay).at[dst].add(counts.astype(freq.dtype),
+                                      mode="drop")
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                         causal: bool = True) -> jax.Array:
     """Oracle for the flash_attention kernel. q,k,v: (b, h, s, dh)."""

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import MemorySpace, SemaphoreType
+
 
 def _rwadagrad_kernel(idx_ref, gsum_ref, lr_ref, table_ref, accum_ref,
                       table_out, accum_out, row_vmem, acc_vmem, sems,
@@ -85,18 +87,18 @@ def rowwise_adagrad_kernel(table: jax.Array, accum: jax.Array,
             grid=(n,),
             in_specs=[
                 pl.BlockSpec((1, d), lambda i, idx_ref: (i, 0)),   # gsum
-                pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),  # lr
-                pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),   # table
-                pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),   # accum
+                pl.BlockSpec(memory_space=MemorySpace.SMEM),  # lr
+                pl.BlockSpec(memory_space=MemorySpace.ANY),   # table
+                pl.BlockSpec(memory_space=MemorySpace.ANY),   # accum
             ],
             out_specs=[
-                pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
-                pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+                pl.BlockSpec(memory_space=MemorySpace.ANY),
+                pl.BlockSpec(memory_space=MemorySpace.ANY),
             ],
             scratch_shapes=[
-                pltpu.MemorySpace.VMEM((1, d), table.dtype),
-                pltpu.MemorySpace.VMEM((1, 1), jnp.float32),
-                pltpu.SemaphoreType.DMA((2,)),
+                MemorySpace.VMEM((1, d), table.dtype),
+                MemorySpace.VMEM((1, 1), jnp.float32),
+                SemaphoreType.DMA((2,)),
             ],
         ),
         out_shape=[jax.ShapeDtypeStruct((h, d), table.dtype),

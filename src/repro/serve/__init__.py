@@ -1,1 +1,1 @@
-from repro.serve.engine import ServeEngine, Request  # noqa: F401
+from repro.serve.engine import DLRMEngine, Request, ServeEngine  # noqa: F401

@@ -132,3 +132,56 @@ def _merge_slot(old_caches, new_caches, slot: int):
     def merge(o, n):
         return o.at[:, slot].set(n[:, slot])
     return jax.tree.map(merge, old_caches, new_caches)
+
+
+# ---------------------------------------------------------------------------
+# DLRM serving over the cached embedding tier
+# ---------------------------------------------------------------------------
+
+
+class DLRMEngine:
+    """Batched CTR inference with the cached embedding tier in READ-ONLY
+    mode: the full mega table stays in the capacity tier, hot rows are
+    served from the device cache, misses fetch on demand, and eviction
+    never writes back (no row is ever dirtied) — the serving-side analogue
+    of the paper's system-memory placement, where the same access skew
+    (Figs. 6/7) lets a small device cache absorb most lookup traffic.
+    """
+
+    def __init__(self, params, cfg, cc, rules: LogicalRules = SERVE_RULES):
+        from repro.core.dlrm import dlrm_forward_dense
+        self.cfg = cfg
+        self.cc = cc
+        self.rules = rules
+        self.dense = {"bottom": params["bottom"], "top": params["top"]}
+        self.state = cc.init_state(params["emb"]["mega"])
+        self.requests_served = 0
+
+        def fwd(dense_params, cache, dense_x, local_idx):
+            pooled = cc.lookup_cached(
+                _StateView(cache), local_idx, rules)
+            logits = dlrm_forward_dense({**dense_params, "emb": None},
+                                        dense_x, pooled, cfg)
+            return jax.nn.sigmoid(logits)
+
+        self._fwd = jax.jit(fwd)
+
+    def predict(self, batch: Dict) -> np.ndarray:
+        """batch: {"dense" (B, n_dense), "idx" (B, F, L) OFFSET global rows}.
+        Returns (B,) click probabilities."""
+        local = self.cc.prepare(self.state, batch["idx"], train=False)
+        probs = self._fwd(self.dense, self.state.cache,
+                          jnp.asarray(batch["dense"]), jnp.asarray(local))
+        self.requests_served += int(local.shape[0])
+        return np.asarray(probs, np.float32)
+
+    @property
+    def cache_stats(self):
+        return self.state.stats
+
+
+@dataclasses.dataclass
+class _StateView:
+    """Duck-typed CacheState carrying only what lookup_cached reads, so the
+    jitted serve forward closes over no host-side cache metadata."""
+    cache: jax.Array

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from repro.configs.base import DLRMConfig, ModelConfig
 from repro.core.dlrm import dlrm_grads
 from repro.core.embedding import EmbeddingBagCollection
+from repro.kernels import ops as kernel_ops
 from repro.kernels import ref as kref
 from repro.models.lm import lm_loss
 from repro.nn.sharding import (TRAIN_RULES, LogicalRules,
@@ -145,9 +146,10 @@ def build_dlrm_train_step(cfg: DLRMConfig, ebc: EmbeddingBagCollection,
         merges partials. The pjit scatter-in-scan alternative re-all-reduces
         the whole gsum buffer per feature (measured 127x the traffic —
         EXPERIMENTS.md Perf, dlrm-m3)."""
-        from repro.nn.sharding import _live_mesh
-        from jax import shard_map
         from jax.sharding import PartitionSpec as SP
+
+        from repro.compat import pcast, shard_map
+        from repro.nn.sharding import _live_mesh
         mesh = _live_mesh()
         h, d = mega.shape
         model_axis = "model"
@@ -168,7 +170,7 @@ def build_dlrm_train_step(cfg: DLRMConfig, ebc: EmbeddingBagCollection,
                 return gsum.at[loc.reshape(-1)].add(
                     upd.reshape(b * l, d), mode="drop"), None
 
-            gsum0 = jax.lax.pcast(                 # mark device-varying for
+            gsum0 = pcast(                         # mark device-varying for
                 jnp.zeros((rows_local, d), jnp.float32),
                 tuple(mesh.axis_names), to="varying")  # the shard_map scan
             gsum, _ = jax.lax.scan(
@@ -259,3 +261,72 @@ def dlrm_init_state(ebc: EmbeddingBagCollection, dense_opt: Optimizer,
                                  "top": params["top"]}),
         "accum": jnp.zeros((ebc.plan.total_rows,), jnp.float32),
     }
+
+# ---------------------------------------------------------------------------
+# DLRM with the cached embedding tier (core/cache.py)
+# ---------------------------------------------------------------------------
+
+
+def build_cached_dlrm_train_step(cfg: DLRMConfig, cc, dense_opt: Optimizer,
+                                 sparse_lr: float = 0.05,
+                                 sparse_eps: float = 1e-8,
+                                 interpret: bool = False,
+                                 rules: LogicalRules = TRAIN_RULES
+                                 ) -> Callable:
+    """Train step for `CachedEmbeddingBagCollection` (the cached_host tier).
+
+    Split execution: the HOST half (cc.prepare) makes the batch's rows
+    cache-resident and remaps indices to slot space; the jitted DEVICE half
+    then runs forward/backward/update entirely against the small cache
+    array — per-step device cost scales with cache_rows, not table height.
+    Row-wise AdaGrad updates land on cached rows (slots were marked dirty
+    by prepare) and reach the capacity tier on eviction or flush.
+
+    Returns step(params, state, cache_state, batch, step_idx,
+    next_batch=None) -> (params, state, metrics) where params = {"bottom",
+    "top"} (dense only — the embedding lives in cache_state), state =
+    {"dense": ...}, and batch carries OFFSET global indices. Pass the
+    pipeline's upcoming batch as `next_batch`: its "uniq_rows" (attached by
+    data.dedup_indices_hook in the reader thread) are admitted AFTER the
+    device work is dispatched, so the capacity-tier fetch overlaps compute.
+    """
+
+    def inner(dense_params, dense_state, cache, cache_accum, batch, step_idx):
+        params = {**dense_params, "emb": {"mega": cache}}
+        loss, g_dense, (idx, g_pooled) = dlrm_grads(
+            params, batch, cfg, cc.ebc, interpret, rules)
+        new_dense, new_dense_state = dense_opt.apply(
+            dense_params, g_dense, dense_state, step_idx)
+        flat_idx, flat_g = cc.ebc.per_lookup_grads(idx, g_pooled)
+        new_cache, new_accum = kernel_ops.rowwise_adagrad_update(
+            cache, cache_accum, flat_idx, flat_g, sparse_lr, sparse_eps,
+            use_kernel=cc.use_kernel, interpret=interpret)
+        lookups = jnp.sum(batch["idx"] >= 0).astype(jnp.float32)
+        return (new_dense, new_dense_state, new_cache, new_accum,
+                {"loss": loss, "lookups": lookups})
+
+    inner_jit = jax.jit(inner, donate_argnums=(2, 3))
+
+    def step(params, state, cache_state, batch, step_idx, next_batch=None):
+        local = cc.prepare(cache_state, batch["idx"], train=True)
+        dev_batch = {**batch, "idx": jnp.asarray(local)}
+        dev_batch.pop("uniq_rows", None)
+        new_dense, new_dense_state, new_cache, new_accum, metrics = inner_jit(
+            params, state["dense"], cache_state.cache,
+            cache_state.cache_accum, dev_batch, step_idx)
+        cc.mark_updated(cache_state, new_cache, new_accum)
+        if next_batch is not None and "uniq_rows" in next_batch:
+            # the jitted step above is dispatched asynchronously — admitting
+            # the next batch's rows here overlaps fetch with device compute
+            cc.prefetch(cache_state, next_batch["uniq_rows"])
+        metrics = {**metrics, **cache_state.stats.snapshot()}
+        return new_dense, {"dense": new_dense_state}, metrics
+
+    return step
+
+
+def cached_dlrm_init_state(cc, dense_opt: Optimizer, params: Dict) -> Dict:
+    """Dense-only optimizer state; the sparse accumulator lives in the
+    CacheState tiers (cap_accum / cache_accum)."""
+    return {"dense": dense_opt.init({"bottom": params["bottom"],
+                                     "top": params["top"]})}

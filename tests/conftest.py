@@ -12,6 +12,17 @@ import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
 
+# hypothesis is a [dev] extra — property tests must skip, not error, when it
+# is absent (bare `pip install .` environments still run the suite)
+try:
+    import hypothesis  # noqa: F401
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+requires_hypothesis = pytest.mark.skipif(
+    not HAS_HYPOTHESIS, reason="hypothesis not installed (pip install .[dev])")
+
 
 @pytest.fixture(scope="session")
 def rng():

@@ -31,8 +31,8 @@ from repro.configs import get_smoke_config
 from repro.core.embedding import EmbeddingBagCollection
 from repro.nn.params import init_params
 cfg = dataclasses.replace(get_smoke_config("dlrm-m1"), placement="row_wise")
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 ebc = EmbeddingBagCollection.build(cfg, n_shards=4)
 params = init_params(ebc.param_specs(), jax.random.PRNGKey(0))
 rng = np.random.RandomState(0)
@@ -60,8 +60,8 @@ from repro.data import make_dlrm_batch
 cfg = dataclasses.replace(get_smoke_config("dlrm-m1"),
                           placement="row_wise", lookup_impl="psum")
 cfg_ref = dataclasses.replace(cfg, lookup_impl="gather")
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 ebc = EmbeddingBagCollection.build(cfg, n_shards=4)
 params = init_params(dlrm_param_specs(cfg, ebc), jax.random.PRNGKey(0))
 opt = adagrad(0.05)
@@ -99,8 +99,8 @@ from repro.train.steps import build_lm_train_step
 from repro.data.synthetic import lm_batch_specs
 
 cfg = get_smoke_config("stablelm-1.6b")
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 for name, rules in [("train", TRAIN_RULES), ("fsdp", FSDP_RULES),
                     ("zero_dp", ZERO_DP_RULES)]:
     specs = lm_param_specs(cfg)
@@ -130,8 +130,8 @@ def test_easgd_pod_axis_semantics():
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.optim.easgd import easgd_init, easgd_sync
-mesh = jax.make_mesh((4, 2), ("pod", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.compat import make_mesh
+mesh = make_mesh((4, 2), ("pod", "model"))
 state = easgd_init({"w": jnp.arange(6.0)}, n_replicas=4)
 state = state._replace(replicas={"w": jnp.stack(
     [jnp.arange(6.0) + i for i in range(4)])})
@@ -159,10 +159,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.train.checkpoint import CheckpointManager
 
 tmp = tempfile.mkdtemp()
-mesh_a = jax.make_mesh((4, 2), ("data", "model"),
-                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
-mesh_b = jax.make_mesh((2, 4), ("data", "model"),
-                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.compat import make_mesh
+mesh_a = make_mesh((4, 2), ("data", "model"))
+mesh_b = make_mesh((2, 4), ("data", "model"))
 w = jnp.arange(64.0).reshape(8, 8)
 tree = {"w": jax.device_put(w, NamedSharding(mesh_a, P("data", "model"))),
         "b": jnp.arange(8.0, dtype=jnp.bfloat16)}
@@ -186,12 +185,12 @@ def test_pallas_embedding_bag_inside_shard_map():
     the per-shard PS lookup path on real TPUs."""
     out = _run("""
 import jax, jax.numpy as jnp, numpy as np
-from jax import shard_map
+from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 from repro.kernels import ops, ref
 
-mesh = jax.make_mesh((4,), ("model",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh
+mesh = make_mesh((4,), ("model",))
 H, D, B, L = 64, 16, 8, 5          # 16 rows per shard
 rng = np.random.RandomState(0)
 table = jnp.asarray(rng.randn(H, D), jnp.float32)

@@ -2,7 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="hypothesis not installed (pip install .[dev])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.placement import plan_placement
 from repro.kernels import ref
@@ -21,7 +25,7 @@ from repro.nn.mamba2 import ssd_chunked, ssd_decode_step
     n_shards=st.sampled_from([2, 4, 8, 16]),
     seed=st.integers(0, 2**31 - 1),
     strategy=st.sampled_from(["auto", "table_wise", "row_wise",
-                              "column_wise", "replicated"]),
+                              "column_wise", "replicated", "cached_host"]),
 )
 def test_placement_invariants(n, n_shards, seed, strategy):
     rng = np.random.RandomState(seed)
@@ -46,6 +50,10 @@ def test_placement_invariants(n, n_shards, seed, strategy):
     # 4. row_wise total rows divide evenly
     if plan.strategy == "row_wise":
         assert plan.total_rows % n_shards == 0
+    # 5. cached_host: device cache is aligned, non-empty, within the table
+    if plan.strategy == "cached_host":
+        assert 0 < plan.cache_rows <= plan.total_rows
+        assert plan.cache_rows % 8 == 0
 
 
 @settings(max_examples=20, deadline=None)

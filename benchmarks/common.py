@@ -9,11 +9,11 @@ the dry-run roofline instead.
 from __future__ import annotations
 
 import time
-from typing import Callable, List, Tuple
+from collections.abc import Callable
 
 import jax
 
-ROWS: List[Tuple[str, float, float]] = []
+ROWS: list[tuple[str, float, float]] = []
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:

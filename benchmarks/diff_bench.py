@@ -1,0 +1,106 @@
+"""Diff derived columns across accumulated BENCH_*.json artifacts and flag
+regressions (the ROADMAP perf-trajectory item).
+
+    PYTHONPATH=src python -m benchmarks.diff_bench BASELINE.json CURRENT.json
+
+Rules (per row, matched by name across the two files):
+  * hit-rate rows — name contains "hit" (deterministic under seeded
+    traffic; higher is better) — regress when `derived` drops by more
+    than --hit-threshold (default 10%), relative.
+  * overlap rows — name contains "overlap" (higher is better, but the
+    derived value is a RATIO OF WALL-CLOCK TIMES, so it inherits runner
+    noise) — regress when `derived` drops by more than --time-threshold.
+  * step-time rows — every matched row — regress when `us_per_call` rises
+    by more than --time-threshold (default 10%), relative. Rows faster
+    than --min-us (default 50us) are skipped: timer noise, not signal.
+Rows present on one side only are reported as warnings, never failures
+(benchmarks come and go across PRs). Exit code 1 iff any regression.
+
+CI runs this against the previous run's artifact (restored via
+actions/cache) with a relaxed --time-threshold: hosted-runner wall times
+are noisy, hit rates are deterministic.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+HIT_MARKER = "hit"
+OVERLAP_MARKER = "overlap"
+
+
+def load_rows(path: str) -> dict[str, tuple[float, float]]:
+    """BENCH json -> {name: (us_per_call, derived)}. Later duplicates win
+    (a rerun section replaces its earlier rows)."""
+    with open(path) as f:
+        data = json.load(f)
+    return {r["name"]: (float(r["us_per_call"]), float(r["derived"]))
+            for r in data["rows"]}
+
+
+def diff(base: dict[str, tuple[float, float]],
+         cur: dict[str, tuple[float, float]],
+         hit_threshold: float = 0.10, time_threshold: float = 0.10,
+         min_us: float = 50.0) -> tuple[list[str], list[str]]:
+    """Returns (regressions, warnings), each a list of human-readable
+    lines. See module docstring for the rules."""
+    regressions, warnings = [], []
+    for name in sorted(set(base) | set(cur)):
+        if name not in cur:
+            warnings.append(f"row vanished: {name}")
+            continue
+        if name not in base:
+            warnings.append(f"new row (no baseline): {name}")
+            continue
+        b_us, b_drv = base[name]
+        c_us, c_drv = cur[name]
+        is_hit = HIT_MARKER in name
+        is_overlap = OVERLAP_MARKER in name
+        if (is_hit or is_overlap) and b_drv > 0:
+            # overlap efficiency is timing-derived — gate it at the noisy
+            # wall-clock threshold, not the deterministic hit-rate one
+            threshold = time_threshold if is_overlap else hit_threshold
+            drop = (b_drv - c_drv) / b_drv
+            if drop > threshold:
+                regressions.append(
+                    f"{name}: derived {b_drv:.4g} -> {c_drv:.4g} "
+                    f"({drop:+.1%} drop > {threshold:.0%})")
+        if b_us >= min_us:
+            rise = (c_us - b_us) / b_us
+            if rise > time_threshold:
+                regressions.append(
+                    f"{name}: us_per_call {b_us:.1f} -> {c_us:.1f} "
+                    f"({rise:+.1%} slower > {time_threshold:.0%})")
+    return regressions, warnings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail on >threshold regressions between bench artifacts")
+    ap.add_argument("baseline", help="older BENCH_*.json")
+    ap.add_argument("current", help="newer BENCH_*.json")
+    ap.add_argument("--hit-threshold", type=float, default=0.10,
+                    help="max relative drop in hit-rate/overlap derived "
+                         "columns (default 0.10)")
+    ap.add_argument("--time-threshold", type=float, default=0.10,
+                    help="max relative rise in us_per_call (default 0.10)")
+    ap.add_argument("--min-us", type=float, default=50.0,
+                    help="ignore time regressions on rows faster than this "
+                         "(timer noise floor, default 50us)")
+    args = ap.parse_args(argv)
+    base = load_rows(args.baseline)
+    cur = load_rows(args.current)
+    regressions, warnings = diff(base, cur, args.hit_threshold,
+                                 args.time_threshold, args.min_us)
+    for w in warnings:
+        print(f"WARN  {w}")
+    for r in regressions:
+        print(f"REGRESSION  {r}")
+    print(f"# compared {len(set(base) & set(cur))} shared rows: "
+          f"{len(regressions)} regressions, {len(warnings)} warnings")
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

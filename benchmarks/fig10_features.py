@@ -4,7 +4,6 @@ Expected reproduction: throughput drops as either feature count grows;
 sparse features cost more than dense at equal count (embedding lookups +
 interaction dominate) — the paper's section V-A claim.
 """
-from benchmarks.common import emit
 from benchmarks.dlrm_bench import bench_dlrm
 from repro.core.design_space import test_suite_config
 

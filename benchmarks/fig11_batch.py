@@ -3,9 +3,8 @@
 Expected reproduction: examples/s rises with batch until compute saturates,
 then flattens — the paper's saturation curve (section V-B).
 """
-from benchmarks.common import emit
 from benchmarks.dlrm_bench import bench_dlrm
-from repro.core.design_space import sweep_fig11_batch, test_suite_config
+from repro.core.design_space import test_suite_config
 
 
 def main():

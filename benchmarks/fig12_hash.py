@@ -6,7 +6,6 @@ depend on table height; only capacity does. The GPU-side cliff in the paper
 comes from spilling HBM — reproduced in the dry-run placement study
 (fig14) instead, where the planner switches strategy with table size.
 """
-from benchmarks.common import emit
 from benchmarks.dlrm_bench import bench_dlrm
 from repro.core.design_space import test_suite_config
 

@@ -3,7 +3,6 @@
 Expected reproduction: flat until the MLP dominates the embedding work,
 then throughput decays with width^2 (section V-D).
 """
-from benchmarks.common import emit
 from benchmarks.dlrm_bench import bench_dlrm
 from repro.core.design_space import test_suite_config
 

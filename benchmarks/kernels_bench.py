@@ -13,12 +13,12 @@ from repro.kernels import ops, ref
 
 def main():
     rng = np.random.RandomState(0)
-    h, d, b, l = 100_000, 64, 4096, 32
+    h, d, b, lk = 100_000, 64, 4096, 32
     table = jnp.asarray(rng.randn(h, d), jnp.float32)
-    idx = jnp.asarray(rng.randint(-1, h, size=(b, l)), jnp.int32)
+    idx = jnp.asarray(rng.randint(-1, h, size=(b, lk)), jnp.int32)
     f = jax.jit(lambda t, i: ref.embedding_bag_ref(t, i, "sum"))
     us = time_fn(f, table, idx)
-    emit("kernels/embedding_bag_ref", us, b * l / (us / 1e6))
+    emit("kernels/embedding_bag_ref", us, b * lk / (us / 1e6))
 
     z = jnp.asarray(rng.randn(2048, 33, 64), jnp.float32)
     g = jax.jit(ref.dot_interaction_ref)

@@ -9,10 +9,9 @@ import argparse
 import glob
 import json
 import os
-from typing import Dict, List
 
 
-def load(dirname: str) -> List[Dict]:
+def load(dirname: str) -> list[dict]:
     recs = []
     for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
         recs.append(json.load(open(f)))
@@ -29,7 +28,7 @@ def _fmt_s(x) -> str:
     return f"{x * 1e6:.0f}u"
 
 
-def markdown(recs: List[Dict], mesh: str = "single") -> str:
+def markdown(recs: list[dict], mesh: str = "single") -> str:
     rows = [r for r in recs if r.get("mesh") ==
             ("2x16x16" if mesh == "multi" else "16x16")]
     out = ["| arch | shape | compute_s | per-chip | memory_s | "

@@ -4,7 +4,6 @@ Reports training examples/s for M1/M2/M3. Expected reproduction: M3 (127
 sparse features, 49 mean lookups) is the slowest per example by a wide
 margin — the embedding-dominant regime that motivated Zion.
 """
-from benchmarks.common import emit
 from benchmarks.dlrm_bench import bench_dlrm
 from repro.configs import get_config
 

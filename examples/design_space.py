@@ -4,6 +4,8 @@ throughput matrix (the CPU analogue of Figs. 10/11).
 
     PYTHONPATH=src python examples/design_space.py
 """
+import time
+
 import jax
 import jax.numpy as jnp
 
@@ -14,7 +16,6 @@ from repro.data import make_dlrm_batch
 from repro.nn.params import init_params
 from repro.optim import adagrad
 from repro.train.steps import build_dlrm_train_step, dlrm_init_state
-import time
 
 
 def throughput(cfg, batch: int) -> float:

@@ -1,7 +1,9 @@
 """Cached embedding tier end-to-end: train a DLRM whose mega table lives in
 the slow capacity tier with a small device hot-row cache (docs/cache.md),
-fed by a pipeline that dedups the next batch's rows in the reader thread so
-fetch overlaps compute. Finishes with read-only cached serving.
+driven by the ASYNC exchange stream — each batch's miss rows are fetched
+into a shadow slab while the previous batch's dense compute runs, with a
+2-step pipeline lookahead feeding the fetch queue. Finishes with read-only
+cached serving.
 
     PYTHONPATH=src python examples/train_cached.py
 """
@@ -12,17 +14,18 @@ import numpy as np
 from repro.configs import get_smoke_config
 from repro.core import CachedEmbeddingBagCollection, dlrm_param_specs
 from repro.data import make_dlrm_batch
-from repro.data.pipeline import DataPipeline, dedup_indices_hook
+from repro.data.pipeline import (DataPipeline, dedup_indices_hook,
+                                 lookahead_rows)
 from repro.nn.params import init_params
 from repro.optim import adagrad
 from repro.serve.engine import DLRMEngine
-from repro.train.steps import (build_cached_dlrm_train_step,
+from repro.train.steps import (build_async_cached_dlrm_train_step,
                                cached_dlrm_init_state)
 
 
 def main():
     cfg = get_smoke_config("dlrm-m1")
-    cc = CachedEmbeddingBagCollection.build(cfg, cache_rows=512)
+    cc = CachedEmbeddingBagCollection.build(cfg, cache_rows=1024)
     ebc = cc.ebc
     print(f"placement: {ebc.plan.strategy} — {ebc.plan.total_rows} rows in "
           f"the capacity tier, {cc.cache_rows} hot-row slots on device")
@@ -31,34 +34,36 @@ def main():
     dense = {"bottom": params["bottom"], "top": params["top"]}
     opt = adagrad(0.05)
     state = cached_dlrm_init_state(cc, opt, params)
-    cache_state = cc.init_state(params["emb"]["mega"])
-    step = build_cached_dlrm_train_step(cfg, cc, opt, sparse_lr=0.1)
+    astate = cc.init_async_state(params["emb"]["mega"])
+    step = build_async_cached_dlrm_train_step(cfg, cc, opt, sparse_lr=0.1)
 
     hook = dedup_indices_hook(ebc.plan.table_offsets)
     pipe = DataPipeline(lambda s: make_dlrm_batch(cfg, 64, step=s),
-                        prefetch=2, transform=hook)
-    _, nxt = next(pipe)
+                        prefetch=4, transform=hook)
     for i in range(40):
-        batch, (_, nxt) = nxt, next(pipe)
-        # the hook already rewrote "idx" to offset global rows
+        _, batch = next(pipe)
+        # the hook already rewrote "idx" to offset global rows; peek(0) is
+        # the upcoming batch (staged fetch), lookahead_rows the k-step union
         b = {"dense": jnp.asarray(batch["dense"]),
              "idx": batch["idx"],
              "label": jnp.asarray(batch["label"]),
              }
-        dense, state, m = step(dense, state, cache_state, b,
-                               jnp.asarray(i, jnp.int32), next_batch=nxt)
+        dense, state, m = step(dense, state, astate, b,
+                               jnp.asarray(i, jnp.int32),
+                               next_batch=pipe.peek(0),
+                               prefetch_rows=lookahead_rows(pipe, 2))
         if i % 10 == 0:
             print(f"step {i:3d}  loss {float(m['loss']):.4f}  "
                   f"hit-rate {m['cache_hit_rate']:.3f}  "
                   f"writebacks {int(m['cache_writebacks'])}")
     pipe.close()
-    s = cache_state.stats
+    s = astate.stats
     print(f"train done: {s.hits} hits / {s.misses} fetches "
           f"({s.hit_rate:.3f} hit rate), {s.evictions} evictions, "
           f"{s.writebacks} writebacks, {s.prefetched} prefetched")
 
     # checkpoint-ready capacity tier, then read-only cached serving
-    mega, _ = cc.materialize(cache_state)
+    mega, _ = cc.materialize_async(astate)
     serve_params = {**dense, "emb": {"mega": mega}}
     engine = DLRMEngine(serve_params, cfg,
                         CachedEmbeddingBagCollection.build(cfg,

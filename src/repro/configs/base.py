@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,11 +46,11 @@ class ModelConfig:
     ssm_ngroups: int = 1
     ssm_chunk: int = 256
     # hybrid layout: per-layer kind over one repeating period ("a"/"m")
-    layer_pattern: Optional[Tuple[str, ...]] = None
+    layer_pattern: tuple[str, ...] | None = None
     # embeddings / head
     tie_embeddings: bool = True
     # modality frontend stub: None | "vision" | "audio"
-    frontend: Optional[str] = None
+    frontend: str | None = None
     n_codebooks: int = 1             # musicgen: parallel codebook heads
     # numerics & memory policy
     param_dtype: str = "float32"
@@ -68,7 +67,7 @@ class ModelConfig:
             object.__setattr__(self, "d_head", self.d_model // self.n_heads)
 
     @property
-    def pattern(self) -> Tuple[str, ...]:
+    def pattern(self) -> tuple[str, ...]:
         """Per-period layer kinds; homogeneous models use a period of 1."""
         if self.layer_pattern is not None:
             return self.layer_pattern
@@ -121,11 +120,11 @@ class DLRMConfig:
     n_dense_features: int = 512
     n_sparse_features: int = 32
     embed_dim: int = 64                       # d in the paper
-    hash_sizes: Tuple[int, ...] = ()          # per-table; len == n_sparse
-    mean_lookups: Tuple[int, ...] = ()        # per-table pooling lengths
+    hash_sizes: tuple[int, ...] = ()          # per-table; len == n_sparse
+    mean_lookups: tuple[int, ...] = ()        # per-table pooling lengths
     truncation: int = 32                      # paper section V lookup cap
-    bottom_mlp: Tuple[int, ...] = (512, 256, 64)
-    top_mlp: Tuple[int, ...] = (512, 512, 256, 1)
+    bottom_mlp: tuple[int, ...] = (512, 256, 64)
+    top_mlp: tuple[int, ...] = (512, 512, 256, 1)
     interaction: str = "dot"                  # dot|cat (paper section III-A.3)
     # numerics / placement
     param_dtype: str = "float32"
@@ -141,7 +140,7 @@ class DLRMConfig:
         assert len(self.hash_sizes) == self.n_sparse_features
         assert len(self.mean_lookups) == self.n_sparse_features
 
-    def table_bytes(self) -> Tuple[int, ...]:
+    def table_bytes(self) -> tuple[int, ...]:
         item = 4 if self.param_dtype == "float32" else 2
         return tuple(h * self.embed_dim * item for h in self.hash_sizes)
 
@@ -154,7 +153,7 @@ class Shape:
     global_batch: int = 0
 
 
-LM_SHAPES: Dict[str, Shape] = {
+LM_SHAPES: dict[str, Shape] = {
     "train_4k": Shape("train_4k", "train", seq_len=4096, global_batch=256),
     "prefill_32k": Shape("prefill_32k", "prefill", seq_len=32768,
                          global_batch=32),
@@ -163,7 +162,7 @@ LM_SHAPES: Dict[str, Shape] = {
     "long_500k": Shape("long_500k", "decode", seq_len=524288, global_batch=1),
 }
 
-DLRM_SHAPES: Dict[str, Shape] = {
+DLRM_SHAPES: dict[str, Shape] = {
     "train_b64k": Shape("train_b64k", "dlrm_train", global_batch=65536),
     "infer_b8k": Shape("infer_b8k", "dlrm_infer", global_batch=8192),
 }
@@ -172,7 +171,7 @@ DLRM_SHAPES: Dict[str, Shape] = {
 SUBQUADRATIC = ("mamba2-780m", "jamba-v0.1-52b")
 
 
-def shapes_for(arch: str) -> Dict[str, Shape]:
+def shapes_for(arch: str) -> dict[str, Shape]:
     if arch.startswith("dlrm"):
         return dict(DLRM_SHAPES)
     out = dict(LM_SHAPES)

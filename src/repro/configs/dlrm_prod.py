@@ -8,13 +8,12 @@ features, section III-A.1); truncation 32 (section V).
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
 
 from repro.configs.base import DLRMConfig
 
 
 def _powerlaw(n: int, mean: float, lo: float, hi: float, alpha: float,
-              seed: int) -> Tuple[int, ...]:
+              seed: int) -> tuple[int, ...]:
     """Deterministic power-law sample rescaled to the requested mean."""
     import numpy as np
     rng = np.random.RandomState(seed)
@@ -25,8 +24,8 @@ def _powerlaw(n: int, mean: float, lo: float, hi: float, alpha: float,
 
 
 def _dlrm(name: str, n_sparse: int, n_dense: int, hash_mean: float,
-          lookups_mean: float, bottom: Tuple[int, ...],
-          top: Tuple[int, ...], seed: int, notes: str) -> DLRMConfig:
+          lookups_mean: float, bottom: tuple[int, ...],
+          top: tuple[int, ...], seed: int, notes: str) -> DLRMConfig:
     return DLRMConfig(
         name=name, n_dense_features=n_dense, n_sparse_features=n_sparse,
         embed_dim=64,
@@ -37,7 +36,7 @@ def _dlrm(name: str, n_sparse: int, n_dense: int, hash_mean: float,
         interaction="dot", notes=notes)
 
 
-DLRMS: Dict[str, DLRMConfig] = {
+DLRMS: dict[str, DLRMConfig] = {
     # Table II: 30 sparse / 800 dense, EMB tens of GB, 28 mean lookups
     "dlrm-m1": _dlrm("dlrm-m1", 30, 800, 5.7e6, 28, (512,),
                      (512, 512, 512), 11, "M1_prod (Table II)"),

@@ -5,7 +5,6 @@ of the same family for CPU tests."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
 
 from repro.configs import (chatglm3_6b, granite_moe_1b_a400m,
                            granite_moe_3b_a800m, internvl2_26b,
@@ -20,10 +19,10 @@ _ARCH_MODULES = (
     musicgen_large, jamba_v0_1_52b,
 )
 
-ARCHS: Dict[str, ModelConfig] = {m.CONFIG.name: m.CONFIG
+ARCHS: dict[str, ModelConfig] = {m.CONFIG.name: m.CONFIG
                                  for m in _ARCH_MODULES}
 
-ARCH_NAMES: List[str] = list(ARCHS) + list(DLRMS)
+ARCH_NAMES: list[str] = list(ARCHS) + list(DLRMS)
 
 # ---------------------------------------------------------------------------
 # Reduced smoke configs: same family, tiny dims.
@@ -80,7 +79,7 @@ def get_smoke_config(name: str):
     return _smoke_dlrm(cfg) if isinstance(cfg, DLRMConfig) else _smoke(cfg)
 
 
-def list_cells(include_dlrm: bool = True) -> List[Tuple[str, Shape]]:
+def list_cells(include_dlrm: bool = True) -> list[tuple[str, Shape]]:
     """Every (arch x shape) dry-run cell."""
     cells = []
     for name in ARCHS:

@@ -14,15 +14,16 @@
                    realized: host-resident capacity array + LFU-managed
                    device hot-row cache (Figs. 6-8 access skew)
 """
+from repro.core.cache import (  # noqa: F401
+    AsyncCacheState,
+    CachedEmbeddingBagCollection,
+    CacheState,
+    CacheStats,
+)
 from repro.core.dlrm import (  # noqa: F401
     dlrm_forward,
     dlrm_loss,
     dlrm_param_specs,
-)
-from repro.core.cache import (  # noqa: F401
-    CachedEmbeddingBagCollection,
-    CacheState,
-    CacheStats,
 )
 from repro.core.embedding import EmbeddingBagCollection  # noqa: F401
 from repro.core.placement import PlacementPlan, plan_placement  # noqa: F401

@@ -31,7 +31,6 @@ split as CacheEmbedding's ChunkParamMgr and MTrainS's tier manager).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -62,7 +61,7 @@ class CacheStats:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
 
-    def snapshot(self) -> Dict[str, float]:
+    def snapshot(self) -> dict[str, float]:
         return {"cache_hits": float(self.hits),
                 "cache_misses": float(self.misses),
                 "cache_hit_rate": self.hit_rate,
@@ -93,6 +92,80 @@ class CacheState:
         return int((self.slot_row >= 0).sum())
 
 
+@dataclasses.dataclass
+class PendingCommit:
+    """One staged admission waiting for its step-boundary commit.
+
+    The shadow slab holds the fetched capacity rows (dispatched while the
+    in-flight batch computes); slots/evict_rows are the commit worklist
+    (evict_rows[i] >= 0 means slot i's dirty victim writes back first).
+    This is the pending-eviction writeback queue entry of the async design
+    (docs/cache.md)."""
+    epoch: int
+    slots: np.ndarray          # (n,) cache slots to fill at commit
+    evict_rows: np.ndarray     # (n,) capacity row for dirty writeback, -1 none
+    rows: np.ndarray           # (n,) global rows being admitted
+    victim_slots: np.ndarray   # (v,) slots whose resident was displaced
+    ws_mask: np.ndarray        # (C,) bool: staged batch's full working set
+    shadow: jax.Array | None        # (n, d) fetched rows
+    shadow_accum: jax.Array | None  # (n,) fetched accumulators
+
+
+@dataclasses.dataclass
+class StagedBatch:
+    """A batch whose admission has been staged ahead of use: the remapped
+    slot indices + the idx fingerprint `take` uses to match it. hits/misses
+    record the plan's stat contribution so a discarded (mismatched) plan
+    can be re-booked as a prefetch instead of a phantom step."""
+    epoch: int
+    idx_key: np.ndarray        # (B, F, L) global idx the plan was made for
+    local: np.ndarray          # (B, F, L) slot-space remap
+    ws_mask: np.ndarray        # (C,) bool working-set slots
+    hits: int                  # stat delta booked at plan time
+    misses: int
+
+
+@dataclasses.dataclass
+class AsyncCacheState:
+    """Double-buffered cache state for the async exchange stream.
+
+    Differences vs CacheState:
+      * `freq` lives on the HOST (np.float32): victim selection must never
+        block the planner on device work — the whole point of the stream is
+        that planning + fetch overlap the in-flight batch's compute.
+      * `slot_epoch` tags each slot with the epoch at which its resident
+        row was admitted. Together with working-set protection it enforces
+        the pipeline invariant: a slot admitted at epoch k+1 (pending) is
+        never read or written by the in-flight epoch-k batch, so in-flight
+        gradients always land in the slab their remap was planned against.
+      * `pending` is the ordered commit queue (fetches in flight); host
+        maps are flipped EAGERLY at plan time (the cheap slot-map swap), so
+        later plans see the post-commit view while the device catches up.
+    """
+    capacity: jax.Array        # (R, d) slow tier — the full mega table
+    cap_accum: jax.Array       # (R,) fp32 AdaGrad accumulator, slow tier
+    cache: jax.Array           # (C, d) device tier — hot rows
+    cache_accum: jax.Array     # (C,) fp32 accumulators of cached rows
+    freq: np.ndarray           # (C,) HOST fp32 LFU-with-decay scores
+    slot_row: np.ndarray       # (C,) int64: global row held by slot, -1 free
+    row_slot: np.ndarray       # (R,) int32: slot holding row, -1 uncached
+    dirty: np.ndarray          # (C,) bool: slot updated since fetch
+    slot_epoch: np.ndarray     # (C,) int64: admission epoch per slot
+    epoch: int                 # last epoch issued
+    pending: list[PendingCommit]
+    inflight_mask: np.ndarray | None   # (C,) bool: in-flight working set
+    staged: StagedBatch | None
+    stats: CacheStats
+
+    @property
+    def cache_rows(self) -> int:
+        return int(self.cache.shape[0])
+
+    @property
+    def resident(self) -> int:
+        return int((self.slot_row >= 0).sum())
+
+
 @dataclasses.dataclass(frozen=True)
 class CachedEmbeddingBagCollection:
     """EmbeddingBagCollection whose device working set is a hot-row cache.
@@ -105,14 +178,14 @@ class CachedEmbeddingBagCollection:
     cache_rows: int
     decay: float = 0.98        # LFU decay per step (1.0 = pure LFU; lower
                                # adapts faster but churns the tail more)
-    use_kernel: Optional[bool] = None
+    use_kernel: bool | None = None
     interpret: bool = False
 
     @classmethod
-    def build(cls, cfg: DLRMConfig, cache_rows: Optional[int] = None,
+    def build(cls, cfg: DLRMConfig, cache_rows: int | None = None,
               strategy: str = "cached_host", decay: float = 0.98,
-              use_kernel: Optional[bool] = None,
-              interpret: bool = False) -> "CachedEmbeddingBagCollection":
+              use_kernel: bool | None = None,
+              interpret: bool = False) -> CachedEmbeddingBagCollection:
         ebc = EmbeddingBagCollection.build(cfg, n_shards=1, strategy=strategy)
         rows = cache_rows if cache_rows is not None else ebc.plan.cache_rows
         assert rows > 0, "cached_host plan produced an empty cache"
@@ -121,7 +194,7 @@ class CachedEmbeddingBagCollection:
     # -- state ---------------------------------------------------------------
 
     def init_state(self, mega: jax.Array,
-                   accum: Optional[jax.Array] = None) -> CacheState:
+                   accum: jax.Array | None = None) -> CacheState:
         """mega: (total_rows, d) capacity-tier table (e.g. params["emb"]
         ["mega"]); accum: optional (total_rows,) AdaGrad accumulator.
 
@@ -147,6 +220,32 @@ class CachedEmbeddingBagCollection:
             stats=CacheStats())
 
     # -- admission -----------------------------------------------------------
+
+    @staticmethod
+    def _split_batch(idx, row_slot: np.ndarray, cache_rows: int):
+        """Shared batch parsing for the sync and async planners (their
+        behavioural equality is the bit-exactness contract): pad mask,
+        unique rows with counts, thrash guard, resident/missing split.
+        Returns (idx, valid, rows, counts, hit_slots, hit_counts, missing,
+        miss_counts)."""
+        idx = np.asarray(idx)
+        valid = idx >= 0
+        rows, counts = np.unique(idx[valid], return_counts=True)
+        if len(rows) > cache_rows:
+            raise ValueError(
+                f"batch touches {len(rows)} unique rows > cache_rows="
+                f"{cache_rows}; raise the HBM budget or shrink the "
+                "batch")
+        resident = row_slot[rows] >= 0
+        return (idx, valid, rows, counts, row_slot[rows[resident]],
+                counts[resident], rows[~resident], counts[~resident])
+
+    @staticmethod
+    def _remap(row_slot: np.ndarray, idx: np.ndarray,
+               valid: np.ndarray) -> np.ndarray:
+        """Global rows -> cache slots (-1 pads preserved)."""
+        local = row_slot[np.where(valid, idx, 0)]
+        return np.where(valid, local, -1).astype(np.int32)
 
     def _admit(self, state: CacheState, missing: np.ndarray,
                counts: np.ndarray, protect: np.ndarray) -> int:
@@ -205,18 +304,9 @@ class CachedEmbeddingBagCollection:
         the working set's slots are marked dirty (they will receive sparse
         updates) so eviction writes them back.
         """
-        idx = np.asarray(idx)
-        valid = idx >= 0
-        rows, counts = np.unique(idx[valid], return_counts=True)
-        if len(rows) > state.cache_rows:
-            raise ValueError(
-                f"batch touches {len(rows)} unique rows > cache_rows="
-                f"{state.cache_rows}; raise the HBM budget or shrink the "
-                "batch")
-        resident = state.row_slot[rows] >= 0
-        hit_slots = state.row_slot[rows[resident]]
-        hit_counts = counts[resident]
-        missing = rows[~resident]
+        (idx, valid, rows, counts, hit_slots, hit_counts, missing,
+         miss_counts) = self._split_batch(idx, state.row_slot,
+                                          state.cache_rows)
         # LFU accounting: decay everything, bump hit slots; admitted slots
         # are seeded with their batch counts by the exchange below.
         state.freq = cache_ops.lfu_touch(
@@ -224,15 +314,13 @@ class CachedEmbeddingBagCollection:
             jnp.asarray(hit_counts, jnp.float32), decay=self.decay)
         protect = np.zeros((state.cache_rows,), bool)
         protect[hit_slots] = True
-        self._admit(state, missing, counts[~resident], protect)
+        self._admit(state, missing, miss_counts, protect)
         state.stats.hits += int(counts.sum()) - len(missing)
         state.stats.misses += len(missing)
         state.stats.steps += 1
         if train:
             state.dirty[state.row_slot[rows]] = True
-        # remap global rows -> slots (-1 pads preserved)
-        local = state.row_slot[np.where(valid, idx, 0)]
-        return np.where(valid, local, -1).astype(np.int32)
+        return self._remap(state.row_slot, idx, valid)
 
     def prefetch(self, state: CacheState, rows) -> int:
         """Best-effort admission of `rows` (unique global rows, e.g. the
@@ -273,10 +361,11 @@ class CachedEmbeddingBagCollection:
 
     # -- training ------------------------------------------------------------
 
-    def mark_updated(self, state: CacheState, new_cache: jax.Array,
+    def mark_updated(self, state, new_cache: jax.Array,
                      new_cache_accum: jax.Array) -> None:
         """Install post-update cache arrays (dirty bits were already set by
-        `prepare(train=True)`)."""
+        `prepare(train=True)` / the async plan). Accepts CacheState or
+        AsyncCacheState."""
         state.cache = new_cache
         state.cache_accum = new_cache_accum
 
@@ -301,8 +390,299 @@ class CachedEmbeddingBagCollection:
         return len(slots)
 
     def materialize(self, state: CacheState
-                    ) -> Tuple[jax.Array, jax.Array]:
+                    ) -> tuple[jax.Array, jax.Array]:
         """Flush and return the up-to-date (mega, accum) capacity arrays —
         what a checkpoint or an uncached evaluator should read."""
         self.flush(state)
         return state.capacity, state.cap_accum
+
+    # -- async exchange stream (docs/cache.md "Async fetch stream") ----------
+    #
+    # Per-step protocol (k = in-flight batch):
+    #
+    #   take_async(k)      pop the staged plan for batch k (or plan now on a
+    #                      cold start / strict-sync fallback), mark its
+    #                      working set in-flight, then COMMIT every pending
+    #                      fetch — dispatched after batch k-1's update, so
+    #                      dirty-victim writebacks read post-update rows.
+    #   <device step k dispatched against the committed cache slab>
+    #   stage_async(k+1)   plan batch k+1's admission on the host, dispatch
+    #                      the capacity-tier fetch into a fresh shadow slab
+    #                      (reads tiers only — overlaps step k's compute),
+    #                      flip the host slot maps eagerly, queue the commit.
+    #
+    # Victim selection protects the union of the in-flight working set and
+    # every queued plan's working set, so a slot admitted at epoch k+1 is
+    # never one batch k still reads/writes (the slot_epoch invariant).
+
+    def init_async_state(self, mega: jax.Array,
+                         accum: jax.Array | None = None) -> AsyncCacheState:
+        """Async twin of init_state: same owned-buffer contract (exchange
+        kernels donate the tiers), host-resident LFU scores, empty commit
+        queue at epoch 0."""
+        r, d = mega.shape
+        assert r == self.ebc.plan.total_rows, (r, self.ebc.plan.total_rows)
+        c = self.cache_rows
+        if accum is None:
+            accum = jnp.zeros((r,), jnp.float32)
+        return AsyncCacheState(
+            capacity=jnp.array(mega, copy=True),
+            cap_accum=jnp.array(accum, jnp.float32, copy=True),
+            cache=jnp.zeros((c, d), mega.dtype),
+            cache_accum=jnp.zeros((c,), jnp.float32),
+            freq=np.zeros((c,), np.float32),
+            slot_row=np.full((c,), -1, np.int64),
+            row_slot=np.full((r,), -1, np.int32),
+            dirty=np.zeros((c,), bool),
+            slot_epoch=np.zeros((c,), np.int64),
+            epoch=0,
+            pending=[],
+            inflight_mask=None,
+            staged=None,
+            stats=CacheStats())
+
+    def _protected_mask(self, astate: AsyncCacheState) -> np.ndarray:
+        """Slots no plan may evict: the in-flight batch's working set,
+        every queued (uncommitted) plan's working set, AND the staged
+        batch's working set. The staged mask must be carried independently
+        of the queue: a drain (below) commits and clears the staged plan's
+        pending entry while its remap is still outstanding — evicting its
+        slots then would silently invalidate `StagedBatch.local`."""
+        protect = np.zeros((astate.cache_rows,), bool)
+        if astate.inflight_mask is not None:
+            protect |= astate.inflight_mask
+        if astate.staged is not None:
+            protect |= astate.staged.ws_mask
+        for p in astate.pending:
+            protect |= p.ws_mask
+        return protect
+
+    def _drain_if_fetching_queued_victims(self, astate: AsyncCacheState,
+                                          missing: np.ndarray) -> None:
+        """A row being fetched whose DIRTY eviction is still queued would
+        read a stale capacity value (its latest value lives in the victim
+        slot until that writeback commits). Drain the queue first in that
+        case — committing early is always safe: the queued writebacks
+        consume `astate.cache`, which already carries every dispatched
+        update, so ordering is preserved by data dependency. Only the
+        fetch-ahead overlap of the drained entries is lost."""
+        if not len(missing) or not astate.pending:
+            return
+        queued = [p.evict_rows[p.evict_rows >= 0] for p in astate.pending]
+        queued_wb = np.concatenate(queued) if queued else queued
+        if len(queued_wb) and np.intersect1d(missing, queued_wb).size:
+            self.commit_async(astate)
+
+    def _admit_async(self, astate: AsyncCacheState, missing: np.ndarray,
+                     extra_protect: np.ndarray, seed: np.ndarray,
+                     strict: bool) -> PendingCommit:
+        """Shared admission core of `_plan_async` and `stage_rows`: drain
+        the queue if a missing row's dirty eviction is still pending,
+        choose free slots then coldest unprotected victims, dispatch the
+        shadow fetch, flip the host maps eagerly, and queue the commit.
+
+        `seed` holds per-missing-row LFU seeds (batch counts for plans,
+        1.0 for prefetch). `strict=True` raises on overflow (a planned
+        batch MUST become resident); `strict=False` truncates `missing`
+        (best-effort prefetch). Returns the queued PendingCommit, whose
+        ws_mask covers the admitted slots (callers widen it for full
+        batch working sets)."""
+        self._drain_if_fetching_queued_victims(astate, missing)
+        protect = self._protected_mask(astate) | extra_protect
+        free = np.flatnonzero(astate.slot_row < 0)
+        evictable = np.flatnonzero((astate.slot_row >= 0) & ~protect)
+        if not strict:
+            missing = missing[:len(free) + len(evictable)]
+            seed = seed[:len(missing)]
+        n = len(missing)
+        need = n - len(free)
+        victims = np.empty((0,), np.int64)
+        if need > 0:
+            if len(evictable) < need:
+                raise ValueError(
+                    f"cache thrash: need {need} evictions but only "
+                    f"{len(evictable)} unprotected slots — the staged + "
+                    "in-flight working sets exceed cache_rows="
+                    f"{astate.cache_rows}; raise the HBM budget, shrink the "
+                    "batch, or reduce the lookahead depth")
+            order = np.argsort(astate.freq[evictable], kind="stable")
+            victims = evictable[order[:need]]
+        slots = np.concatenate([free[:min(n, len(free))], victims])[:n]
+        evicted_rows = astate.slot_row[victims]
+        wb_mask = astate.dirty[victims]
+        evict_rows = np.full((n,), -1, np.int64)
+        evict_rows[len(slots) - len(victims):] = np.where(
+            wb_mask, evicted_rows, -1)
+        if n:
+            # fetch into a fresh shadow slab — reads the tiers only, so it
+            # overlaps the in-flight batch's device compute
+            shadow, shadow_accum = cache_ops.cache_fetch(
+                astate.capacity, astate.cap_accum,
+                jnp.asarray(missing, jnp.int32),
+                use_kernel=self.use_kernel, interpret=self.interpret)
+        else:
+            shadow = shadow_accum = None
+        epoch = astate.epoch + 1
+        astate.epoch = epoch
+        # eagerly flip the host maps to the post-commit view (the cheap
+        # slot-map swap): later plans see these admissions as resident
+        astate.row_slot[evicted_rows] = -1
+        astate.slot_row[slots] = missing
+        astate.row_slot[missing] = slots.astype(np.int32)
+        astate.dirty[slots] = False
+        astate.freq[slots] = seed.astype(np.float32)
+        astate.slot_epoch[slots] = epoch
+        ws_mask = np.zeros((astate.cache_rows,), bool)
+        ws_mask[slots] = True
+        astate.stats.fetches += n
+        astate.stats.evictions += len(victims)
+        astate.stats.writebacks += int(wb_mask.sum())
+        pending = PendingCommit(epoch, slots.astype(np.int64), evict_rows,
+                                missing, victims, ws_mask, shadow,
+                                shadow_accum)
+        if n:                                  # nothing to commit for all-hit
+            astate.pending.append(pending)
+        return pending
+
+    def _plan_async(self, astate: AsyncCacheState, idx: np.ndarray,
+                    train: bool) -> StagedBatch:
+        """Plan one batch's admission: host-side LFU accounting + victim
+        choice, dispatch the shadow fetch, flip the maps, queue the commit.
+        Never blocks on device work."""
+        (idx, valid, rows, counts, hit_slots, hit_counts, missing,
+         miss_counts) = self._split_batch(idx, astate.row_slot,
+                                          astate.cache_rows)
+        # host LFU (same math as kernels/ref.lfu_touch_ref, in np.float32):
+        # decay everything, bump hit slots; admitted slots seeded by admit
+        astate.freq *= np.float32(self.decay)
+        astate.freq[hit_slots] += hit_counts.astype(np.float32)
+        extra = np.zeros((astate.cache_rows,), bool)
+        extra[hit_slots] = True
+        n = len(missing)
+        pending = self._admit_async(astate, missing, extra, miss_counts,
+                                    strict=True)
+        ws_slots = astate.row_slot[rows]
+        pending.ws_mask[ws_slots] = True       # widen: full batch working set
+        if train:
+            astate.dirty[ws_slots] = True
+        hits = int(counts.sum()) - n
+        astate.stats.hits += hits
+        astate.stats.misses += n
+        astate.stats.steps += 1
+        return StagedBatch(pending.epoch, idx.copy(),
+                           self._remap(astate.row_slot, idx, valid),
+                           pending.ws_mask, hits, n)
+
+    def stage_async(self, astate: AsyncCacheState, idx,
+                    train: bool = True) -> np.ndarray:
+        """Stage the NEXT batch: plan + dispatch its shadow fetch while the
+        in-flight batch computes. Returns the slot-space remap, which
+        `take_async` hands back when the batch becomes current."""
+        staged = self._plan_async(astate, idx, train)
+        astate.staged = staged
+        return staged.local
+
+    def stage_rows(self, astate: AsyncCacheState, rows) -> int:
+        """Best-effort k-step-lookahead admission (the async twin of
+        `prefetch`): queue a fetch for `rows` without hit/miss accounting
+        and without evicting any protected slot; overflow beyond
+        free+evictable space is dropped. Returns rows admitted."""
+        rows = np.unique(np.asarray(rows))
+        rows = rows[rows >= 0]
+        missing = rows[astate.row_slot[rows] < 0]
+        if len(missing) == 0:
+            return 0
+        extra = np.zeros((astate.cache_rows,), bool)
+        keep = astate.row_slot[rows[astate.row_slot[rows] >= 0]]
+        extra[keep] = True                     # requested residents survive
+        pending = self._admit_async(astate, missing,
+                                    extra, np.ones((len(missing),),
+                                                   np.float32),
+                                    strict=False)
+        n = len(pending.rows)
+        astate.stats.prefetched += n
+        return n
+
+    def take_async(self, astate: AsyncCacheState, idx,
+                   train: bool = True) -> np.ndarray:
+        """Make `idx`'s batch current: reuse its staged plan when one
+        matches (the overlapped path), else plan it now (cold start /
+        strict-sync fallback). Marks the working set in-flight and commits
+        every pending fetch — the commit is dispatched after the previous
+        batch's update, so dirty-victim writebacks read post-update rows.
+        Returns the (B, F, L) slot-space indices."""
+        idx = np.asarray(idx)
+        st = astate.staged
+        astate.staged = None
+        if st is None or st.idx_key.shape != idx.shape or \
+                not np.array_equal(st.idx_key, idx):
+            if st is not None:
+                # the discarded plan degrades to a prefetch: its rows were
+                # admitted, but its batch never runs — re-book its stat
+                # contribution so steps/hit-rate reflect real batches only
+                astate.stats.hits -= st.hits
+                astate.stats.misses -= st.misses
+                astate.stats.steps -= 1
+                astate.stats.prefetched += st.misses
+            st = self._plan_async(astate, idx, train)
+        astate.inflight_mask = st.ws_mask
+        self.commit_async(astate)
+        return st.local
+
+    def commit_async(self, astate: AsyncCacheState) -> int:
+        """Drain the pending queue in order: each entry's dirty victims
+        write back (post-update values) and its shadow rows install into
+        their slots. Cheap device-side row copies — the slow capacity fetch
+        already happened off the critical path. Returns entries committed."""
+        done = 0
+        for p in astate.pending:
+            if len(p.slots) == 0:
+                continue
+            (astate.capacity, astate.cache, astate.cap_accum,
+             astate.cache_accum) = cache_ops.cache_commit(
+                astate.capacity, astate.cache, astate.cap_accum,
+                astate.cache_accum, p.shadow, p.shadow_accum,
+                jnp.asarray(p.slots, jnp.int32),
+                jnp.asarray(p.evict_rows, jnp.int32),
+                jnp.asarray(p.rows, jnp.int32),
+                use_kernel=self.use_kernel, interpret=self.interpret)
+            done += 1
+        astate.pending.clear()
+        return done
+
+    def lookup_async(self, astate: AsyncCacheState, idx,
+                     train: bool = False, rules=None) -> jax.Array:
+        """take_async + cache lookup: numerically identical to the sync
+        `lookup` and to the uncached collection on the same indices."""
+        local = self.take_async(astate, idx, train)
+        return self.ebc.lookup({"mega": astate.cache},
+                               jnp.asarray(local), rules)
+
+    def flush_async(self, astate: AsyncCacheState) -> int:
+        """Commit all pending fetches, then write every dirty slot back to
+        the capacity tier (rows stay cached, now clean). Returns rows
+        written back."""
+        self.commit_async(astate)
+        slots = np.flatnonzero(astate.dirty)
+        if len(slots) == 0:
+            return 0
+        (astate.capacity, astate.cache, astate.cap_accum, astate.cache_accum,
+         _) = cache_ops.cache_exchange(
+            astate.capacity, astate.cache, astate.cap_accum,
+            astate.cache_accum, jnp.asarray(astate.freq),
+            jnp.asarray(slots, jnp.int32),
+            jnp.asarray(astate.slot_row[slots], jnp.int32),
+            jnp.full((len(slots),), -1, jnp.int32),
+            jnp.zeros((len(slots),), jnp.float32),
+            use_kernel=self.use_kernel, interpret=self.interpret)
+        astate.dirty[slots] = False
+        astate.stats.writebacks += len(slots)
+        return len(slots)
+
+    def materialize_async(self, astate: AsyncCacheState
+                          ) -> tuple[jax.Array, jax.Array]:
+        """flush_async and return the up-to-date (mega, accum) capacity
+        arrays — bit-identical to the sync path's `materialize` after the
+        same batch sequence (asserted in tests/test_cache_async.py)."""
+        self.flush_async(astate)
+        return astate.capacity, astate.cap_accum

@@ -12,7 +12,6 @@ benchmarks/fig*.py files run them.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
 
 from repro.configs.base import DLRMConfig
 
@@ -39,7 +38,7 @@ def test_suite_config(n_dense: int = 512, n_sparse: int = 32,
         notes="section V test suite")
 
 
-def sweep_fig10() -> List[Tuple[str, DLRMConfig]]:
+def sweep_fig10() -> list[tuple[str, DLRMConfig]]:
     """Fig. 10: dense x sparse feature grid (MLP 512^3, hash 100k)."""
     out = []
     for n_dense in (64, 256, 1024, 4096):
@@ -49,12 +48,12 @@ def sweep_fig10() -> List[Tuple[str, DLRMConfig]]:
     return out
 
 
-def sweep_fig11_batch() -> List[int]:
+def sweep_fig11_batch() -> list[int]:
     """Fig. 11: batch-size scaling (model fixed; batch is the x-axis)."""
     return [128, 256, 512, 1024, 2048, 4096, 8192]
 
 
-def sweep_fig12_hash() -> List[Tuple[str, DLRMConfig]]:
+def sweep_fig12_hash() -> list[tuple[str, DLRMConfig]]:
     """Fig. 12: hash-size scaling (table capacity grows, lookups constant)."""
     out = []
     for h in (10_000, 100_000, 1_000_000, 5_000_000, 10_000_000):
@@ -62,7 +61,7 @@ def sweep_fig12_hash() -> List[Tuple[str, DLRMConfig]]:
     return out
 
 
-def sweep_fig13_mlp() -> List[Tuple[str, DLRMConfig]]:
+def sweep_fig13_mlp() -> list[tuple[str, DLRMConfig]]:
     """Fig. 13: MLP dimension sweep width^layers."""
     out = []
     for width, layers in ((64, 2), (128, 2), (256, 3), (512, 3),

@@ -14,7 +14,6 @@ of section VII.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +40,7 @@ def _mlp_specs(dims, in_dim: int, in_ax: str, out_ax: str):
     return specs, d
 
 
-def dlrm_param_specs(cfg: DLRMConfig, ebc: EmbeddingBagCollection) -> Dict:
+def dlrm_param_specs(cfg: DLRMConfig, ebc: EmbeddingBagCollection) -> dict:
     bottom, bot_out = _mlp_specs(cfg.bottom_mlp, cfg.n_dense_features,
                                  None, "dense_ff")
     assert bot_out == cfg.embed_dim, (
@@ -69,7 +68,7 @@ def _mlp_apply(layers, x, dtype):
     return x
 
 
-def dlrm_forward_dense(params: Dict, dense_x: jax.Array, pooled: jax.Array,
+def dlrm_forward_dense(params: dict, dense_x: jax.Array, pooled: jax.Array,
                        cfg: DLRMConfig, interpret: bool = False) -> jax.Array:
     """Everything downstream of the embedding lookup (autodiff runs here).
 
@@ -92,14 +91,14 @@ def _lookup(params, batch, cfg, ebc, rules):
     return ebc.lookup(params["emb"], batch["idx"], rules)
 
 
-def dlrm_forward(params: Dict, batch: Dict, cfg: DLRMConfig,
+def dlrm_forward(params: dict, batch: dict, cfg: DLRMConfig,
                  ebc: EmbeddingBagCollection,
                  interpret: bool = False, rules=None) -> jax.Array:
     pooled = _lookup(params, batch, cfg, ebc, rules)
     return dlrm_forward_dense(params, batch["dense"], pooled, cfg, interpret)
 
 
-def dlrm_loss(params: Dict, batch: Dict, cfg: DLRMConfig,
+def dlrm_loss(params: dict, batch: dict, cfg: DLRMConfig,
               ebc: EmbeddingBagCollection,
               interpret: bool = False, rules=None) -> jax.Array:
     """Binary cross-entropy (CTR) — the paper's NE metric is normalized BCE."""
@@ -126,10 +125,10 @@ def normalized_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def dlrm_grads(params: Dict, batch: Dict, cfg: DLRMConfig,
+def dlrm_grads(params: dict, batch: dict, cfg: DLRMConfig,
                ebc: EmbeddingBagCollection, interpret: bool = False,
                rules=None
-               ) -> Tuple[jax.Array, Dict, Tuple[jax.Array, jax.Array]]:
+               ) -> tuple[jax.Array, dict, tuple[jax.Array, jax.Array]]:
     """Returns (loss, dense_grads, (idx (B,F,L), pooled_grads (B,F,d))).
 
     The mega table only ever sees sparse gradients: autodiff treats the

@@ -19,7 +19,6 @@ Two lookup paths:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,8 +37,8 @@ class EmbeddingBagCollection:
 
     @classmethod
     def build(cls, cfg: DLRMConfig, n_shards: int,
-              strategy: Optional[str] = None,
-              second_axis_size: int = 1) -> "EmbeddingBagCollection":
+              strategy: str | None = None,
+              second_axis_size: int = 1) -> EmbeddingBagCollection:
         plan = plan_placement(
             cfg.hash_sizes, cfg.mean_lookups, cfg.embed_dim, n_shards,
             hbm_budget_bytes=cfg.hbm_budget_gb * 1e9,
@@ -86,18 +85,18 @@ class EmbeddingBagCollection:
         the cross-shard reduce — the paper's PS pull."""
         from repro.nn.sharding import shard_activation
         mega = params["mega"]
-        b, f, l = idx.shape
+        b, f, lk = idx.shape
 
         def pool_one(_, idx_f):
-            # idx_f: (b, l) one feature's bags
+            # idx_f: (b, lk) one feature's bags
             valid = idx_f >= 0
             rows = jnp.take(mega, jnp.maximum(idx_f, 0).reshape(-1), axis=0)
-            rows = rows.reshape(b, l, -1)
+            rows = rows.reshape(b, lk, -1)
             rows = jnp.where(valid[..., None], rows.astype(jnp.float32), 0.0)
             return None, rows.sum(axis=1).astype(mega.dtype)
 
         if f > 8:
-            # scan over features: bounds the (b, l, d) gather transient to
+            # scan over features: bounds the (b, lk, d) gather transient to
             # one feature at a time (m3 has 127 tables x 32 lookups)
             _, pooled = jax.lax.scan(pool_one, None,
                                      jnp.swapaxes(idx, 0, 1))
@@ -105,7 +104,7 @@ class EmbeddingBagCollection:
         else:
             valid = idx >= 0
             rows = jnp.take(mega, jnp.maximum(idx, 0).reshape(-1), axis=0)
-            rows = rows.reshape(b, f, l, -1)
+            rows = rows.reshape(b, f, lk, -1)
             rows = jnp.where(valid[..., None], rows.astype(jnp.float32), 0.0)
             pooled = rows.sum(axis=2).astype(mega.dtype)
         return shard_activation(pooled, ("act_batch", None, None),
@@ -134,10 +133,10 @@ class EmbeddingBagCollection:
             loc = jnp.where((idx_local >= lo)
                             & (idx_local < lo + rows_local),
                             idx_local - lo, -1)
-            b, f, l = loc.shape
+            b, f, lk = loc.shape
             valid = loc >= 0
             rows = jnp.take(mega_shard, jnp.maximum(loc, 0).reshape(-1),
-                            axis=0).reshape(b, f, l, d)
+                            axis=0).reshape(b, f, lk, d)
             rows = jnp.where(valid[..., None], rows.astype(jnp.float32),
                              0.0)
             pooled = rows.sum(axis=2)          # POOL BEFORE the collective
@@ -154,27 +153,27 @@ class EmbeddingBagCollection:
                      interpret: bool = False) -> jax.Array:
         """Per-shard lookup for shard_map/serving: gather only rows owned by
         this shard ([row_lo, row_hi)); callers all-reduce partial pools."""
-        b, f, l = idx.shape
+        b, f, lk = idx.shape
         local = jnp.where((idx >= row_lo) & (idx < row_hi),
                           idx - row_lo, -1)
-        out = ops.embedding_bag(mega_shard, local.reshape(b * f, l),
+        out = ops.embedding_bag(mega_shard, local.reshape(b * f, lk),
                                 "sum", None, interpret)
         return out.reshape(b, f, -1)
 
     # -- gradient layout for the sparse optimizer ---------------------------
 
     def per_lookup_grads(self, idx: jax.Array, pooled_grad: jax.Array
-                         ) -> Tuple[jax.Array, jax.Array]:
+                         ) -> tuple[jax.Array, jax.Array]:
         """Sum pooling => each valid lookup slot inherits its bag's grad.
 
         idx: (B, F, L); pooled_grad: (B, F, d).
         Returns (flat_idx (B*F*L,), flat_grads (B*F*L, d)) for
         rowwise_adagrad_update.
         """
-        b, f, l = idx.shape
+        b, f, lk = idx.shape
         g = jnp.broadcast_to(pooled_grad[:, :, None, :],
-                             (b, f, l, pooled_grad.shape[-1]))
-        return idx.reshape(-1), g.reshape(b * f * l, -1)
+                             (b, f, lk, pooled_grad.shape[-1]))
+        return idx.reshape(-1), g.reshape(b * f * lk, -1)
 
     # -- stats ---------------------------------------------------------------
 

@@ -29,7 +29,7 @@ plan fixes each table's row offset and the mega table's PartitionSpec:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from collections.abc import Sequence
 
 import numpy as np
 from jax.sharding import PartitionSpec as P
@@ -43,14 +43,14 @@ CACHED_ROW_META_BYTES = 8
 @dataclasses.dataclass(frozen=True)
 class PlacementPlan:
     strategy: str   # replicated|table_wise|row_wise|column_wise|cached_host
-    table_offsets: Tuple[int, ...]   # row offset of each table in the mega table
+    table_offsets: tuple[int, ...]   # row offset of each table in the mega table
     total_rows: int                  # padded row count of the mega table
     pspec: P                         # sharding of the (rows, d) mega table
-    shard_of_table: Optional[Tuple[int, ...]]  # table_wise only
+    shard_of_table: tuple[int, ...] | None  # table_wise only
     n_shards: int
     # diagnostics
-    bytes_per_shard: Tuple[int, ...] = ()
-    load_per_shard: Tuple[float, ...] = ()
+    bytes_per_shard: tuple[int, ...] = ()
+    load_per_shard: tuple[float, ...] = ()
     # cached_host only: device-cache slots backing the host-resident table
     cache_rows: int = 0
 
@@ -82,7 +82,7 @@ def plan_placement(hash_sizes: Sequence[int],
     (chip HBM minus activations/MLP budget — the caller decides).
     """
     hash_sizes = [int(h) for h in hash_sizes]
-    loads = [float(l) for l in mean_lookups]
+    loads = [float(ld) for ld in mean_lookups]
     total_bytes = sum(h * embed_dim * itemsize for h in hash_sizes)
     if strategy == "host_offload":  # legacy alias for the realized tier
         strategy = "cached_host"
@@ -167,13 +167,13 @@ def _rowwise_load(hash_sizes, loads, offsets, rows, n_shards):
     """Expected lookups hitting each shard under uniform row access."""
     shard_rows = rows // n_shards
     per = np.zeros(n_shards)
-    for h, l, o in zip(hash_sizes, loads, offsets):
+    for h, ld, o in zip(hash_sizes, loads, offsets):
         lo, hi = o, o + h
         for s in range(n_shards):
             a, b = s * shard_rows, (s + 1) * shard_rows
             overlap = max(0, min(hi, b) - max(lo, a))
             if h:
-                per[s] += l * overlap / h
+                per[s] += ld * overlap / h
     return tuple(float(x) for x in per)
 
 
@@ -186,7 +186,7 @@ def _table_wise(hash_sizes, loads, embed_dim, n_shards, budget, itemsize,
     bytes as the hard constraint.
     """
     n = len(hash_sizes)
-    order = np.argsort([-l for l in loads])      # heaviest load first
+    order = np.argsort([-ld for ld in loads])      # heaviest load first
     shard_bytes = np.zeros(n_shards)
     shard_load = np.zeros(n_shards)
     shard_tables = [[] for _ in range(n_shards)]

@@ -1,12 +1,13 @@
+from repro.data.pipeline import (  # noqa: F401
+    DataPipeline,
+    ShardedLoader,
+    dedup_indices_hook,
+    lookahead_rows,
+)
 from repro.data.synthetic import (  # noqa: F401
     bounded_zipf_rows,
     dlrm_batch_specs,
     lm_batch_specs,
     make_dlrm_batch,
     make_lm_batch,
-)
-from repro.data.pipeline import (  # noqa: F401
-    DataPipeline,
-    ShardedLoader,
-    dedup_indices_hook,
 )

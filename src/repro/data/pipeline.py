@@ -10,9 +10,10 @@ data-state checkpoints.
 """
 from __future__ import annotations
 
+import collections
 import queue
 import threading
-from typing import Callable, Dict, Iterator, Optional, Sequence
+from collections.abc import Callable, Iterator, Sequence
 
 import numpy as np
 
@@ -30,15 +31,31 @@ class DataPipeline:
     `transform` runs on each batch INSIDE the worker thread — host-side
     preprocessing (e.g. the cached-tier dedup hook below) overlaps device
     compute for free, the reader-tier decoupling of section IV-B.2.
+
+    Failure contract (tests/test_train_runtime.py fault injection): any
+    exception in the reader thread — including BaseExceptions like a
+    simulated kill — surfaces in the consumer as a RuntimeError within one
+    step; a worker that dies without parking an error (or is killed
+    mid-put) is detected by a liveness check instead of deadlocking the
+    consumer on an empty queue.
+
+    `peek(i)` exposes the i-th UPCOMING batch without consuming it — the
+    k-step lookahead feeding the cached tier's async fetch stream
+    (`lookahead_rows` below). Peeked batches are buffered consumer-side and
+    are still returned, in order, by `__next__`.
     """
 
-    def __init__(self, gen: Callable[[int], Dict[str, np.ndarray]],
+    _POLL_S = 0.05             # liveness-check poll while waiting on the queue
+
+    def __init__(self, gen: Callable[[int], dict[str, np.ndarray]],
                  prefetch: int = 2, start_step: int = 0,
-                 transform: Optional[Callable[[Dict[str, np.ndarray]],
-                                              Dict[str, np.ndarray]]] = None):
+                 transform: Callable[[dict[str, np.ndarray]],
+                                              dict[str, np.ndarray]] | None = None):
         self._gen = gen
         self._transform = transform
-        self._q: "queue.Queue" = queue.Queue(maxsize=prefetch)
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._buf: collections.deque = collections.deque()   # peeked batches
+        self._failed: BaseException | None = None   # sticky failure for next()
         self._stop = threading.Event()
         self._step = start_step
         self._thread = threading.Thread(target=self._worker, daemon=True)
@@ -58,9 +75,11 @@ class DataPipeline:
                     except queue.Full:
                         continue
                 step += 1
-        except Exception as e:  # noqa: BLE001 — surface in the consumer
+        except BaseException as e:  # noqa: BLE001 — surface in the consumer
             # a dead reader must fail the trainer loudly, not starve it:
-            # park the error where __next__ will re-raise it
+            # park the error where __next__ will re-raise it (BaseException
+            # too: a SystemExit/KeyboardInterrupt "kill" of the reader must
+            # not strand the trainer)
             while not self._stop.is_set():
                 try:
                     self._q.put((step, _WorkerError(e)), timeout=0.1)
@@ -68,23 +87,74 @@ class DataPipeline:
                 except queue.Full:
                     continue
 
+    def _pull(self):
+        """Blocking queue get with worker-liveness checks: never deadlocks
+        on a dead reader. Returns the (step, batch-or-error) tuple."""
+        while True:
+            try:
+                return self._q.get(timeout=self._POLL_S)
+            except queue.Empty:
+                if self._stop.is_set():
+                    raise StopIteration from None
+                if not self._thread.is_alive():
+                    # one last non-blocking look: the worker may have parked
+                    # its error between our get() and is_alive()
+                    try:
+                        return self._q.get_nowait()
+                    except queue.Empty:
+                        # sticky: even if this raise is swallowed by peek(),
+                        # the next __next__ must re-raise, not StopIteration
+                        self._failed = RuntimeError(
+                            "data pipeline worker died without reporting an "
+                            "error (reader thread no longer alive)")
+                        self._stop.set()
+                        raise self._failed from None
+
     def __iter__(self) -> Iterator:
         return self
 
     def __next__(self):
-        if self._stop.is_set():
-            raise StopIteration
-        step, batch = self._q.get()
+        if self._buf:
+            # good batches peeked before a failure was observed are still
+            # delivered, in order, before the failure raises — same degrade
+            # path as a parked _WorkerError riding behind them in the queue
+            step, batch = self._buf.popleft()
+        else:
+            if self._stop.is_set():
+                if self._failed is not None:
+                    raise self._failed      # stream FAILED, didn't just end
+                raise StopIteration
+            step, batch = self._pull()
         if isinstance(batch, _WorkerError):
+            self._failed = RuntimeError(
+                f"data pipeline worker failed at step {step}")
             self._stop.set()
-            raise RuntimeError(
-                f"data pipeline worker failed at step {step}"
-            ) from batch.error
+            raise self._failed from batch.error
         return step, batch
+
+    def peek(self, i: int = 0) -> dict[str, np.ndarray] | None:
+        """The i-th upcoming batch (0 = what the next `__next__` returns)
+        WITHOUT consuming it. Returns None once the stream has failed or
+        closed at or before that position — the error itself is raised by
+        the next `__next__`, so a prefetching trainer degrades to the
+        strict-sync path for its final step instead of crashing early."""
+        if self._stop.is_set():
+            return None
+        while len(self._buf) <= i:
+            if self._buf and isinstance(self._buf[-1][1], _WorkerError):
+                return None                    # stream already known-dead
+            try:
+                self._buf.append(self._pull())
+            except (StopIteration, RuntimeError):
+                return None
+        batch = self._buf[i][1]
+        return None if isinstance(batch, _WorkerError) else batch
 
     def close(self):
         self._stop.set()
-        # drain so the worker unblocks
+        self._failed = None                 # explicit shutdown is not failure
+        self._buf.clear()
+        # drain so a worker blocked in put() unblocks promptly
         try:
             while True:
                 self._q.get_nowait()
@@ -100,7 +170,7 @@ class ShardedLoader:
     deployment; injectable here for tests.
     """
 
-    def __init__(self, gen: Callable[[int, int], Dict[str, np.ndarray]],
+    def __init__(self, gen: Callable[[int, int], dict[str, np.ndarray]],
                  global_batch: int, host_index: int = 0, num_hosts: int = 1,
                  seed: int = 0):
         assert global_batch % num_hosts == 0
@@ -111,7 +181,7 @@ class ShardedLoader:
         self.seed = seed
         self._gen = gen
 
-    def host_slice(self, step: int) -> Dict[str, np.ndarray]:
+    def host_slice(self, step: int) -> dict[str, np.ndarray]:
         """Generate ONLY this host's rows (readers scale out per host)."""
         full = self._gen(step, self.seed)
         lo = self.host_index * self.host_batch
@@ -119,14 +189,14 @@ class ShardedLoader:
         return {k: v[lo:hi] for k, v in full.items()}
 
     def pipeline(self, prefetch: int = 2, start_step: int = 0,
-                 transform: Optional[Callable] = None) -> DataPipeline:
+                 transform: Callable | None = None) -> DataPipeline:
         return DataPipeline(self.host_slice, prefetch, start_step, transform)
 
 
 def dedup_indices_hook(table_offsets: Sequence[int], key: str = "idx",
                        out_key: str = "uniq_rows"
-                       ) -> Callable[[Dict[str, np.ndarray]],
-                                     Dict[str, np.ndarray]]:
+                       ) -> Callable[[dict[str, np.ndarray]],
+                                     dict[str, np.ndarray]]:
     """Prefetch hook for the cached embedding tier (core/cache.py).
 
     Returns a transform that REWRITES batch[key] from (B, F, L) per-table
@@ -140,7 +210,7 @@ def dedup_indices_hook(table_offsets: Sequence[int], key: str = "idx",
     """
     offsets = np.asarray(table_offsets, np.int64)
 
-    def hook(batch: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    def hook(batch: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
         idx = batch[key]
         glob = np.where(idx >= 0, idx + offsets[None, :, None],
                         -1).astype(np.int32)
@@ -150,3 +220,27 @@ def dedup_indices_hook(table_offsets: Sequence[int], key: str = "idx",
         return out
 
     return hook
+
+
+def lookahead_rows(pipe: DataPipeline, k: int,
+                   key: str = "uniq_rows") -> np.ndarray:
+    """K-step lookahead for the async fetch stream: the union of the next
+    `k` upcoming batches' deduplicated row sets (attached per batch by
+    `dedup_indices_hook`), peeked without consuming. Feed the result to the
+    overlapped cached train step's `prefetch_rows` (or directly to
+    `CachedEmbeddingBagCollection.stage_rows`) so rows needed several steps
+    out start their capacity-tier fetch behind the current batch's compute.
+
+    Stops early (returning the union so far) when the stream ends or fails
+    before position k — the failure itself surfaces on the next `next()`.
+    """
+    rows = []
+    for i in range(k):
+        batch = pipe.peek(i)
+        if batch is None or key not in batch:
+            break
+        rows.append(np.asarray(batch[key]).ravel())
+    if not rows:
+        return np.empty((0,), np.int64)
+    cat = np.concatenate(rows)
+    return np.unique(cat[cat >= 0]).astype(np.int64)

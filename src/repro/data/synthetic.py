@@ -13,12 +13,11 @@ reader-server decoupling of section IV-B.2 without materializing storage.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
 
 import jax
 import numpy as np
 
-from repro.configs.base import DLRMConfig, ModelConfig, Shape
+from repro.configs.base import DLRMConfig, ModelConfig
 
 # ---------------------------------------------------------------------------
 # DLRM
@@ -32,7 +31,7 @@ def _zipf_indices(rng: np.random.RandomState, hash_size: int, n: int,
     return (raw % max(hash_size, 1)).astype(np.int32)
 
 
-_ZIPF_CDF_CACHE: Dict = {}
+_ZIPF_CDF_CACHE: dict = {}
 
 
 def _bounded_zipf_cdf(hash_size: int, alpha: float) -> np.ndarray:
@@ -59,8 +58,8 @@ def bounded_zipf_rows(rng: np.random.RandomState, hash_size: int, n: int,
 
 def make_dlrm_batch(cfg: DLRMConfig, batch: int, step: int = 0,
                     seed: int = 0,
-                    zipf_alpha: Optional[float] = None
-                    ) -> Dict[str, np.ndarray]:
+                    zipf_alpha: float | None = None
+                    ) -> dict[str, np.ndarray]:
     """Returns {dense (B, n_dense) f32, idx (B, F, L) i32 (-1 pads, already
     in-table — NOT offset), label (B,) f32}.
 
@@ -94,7 +93,7 @@ def make_dlrm_batch(cfg: DLRMConfig, batch: int, step: int = 0,
     return {"dense": dense, "idx": idx, "label": label}
 
 
-def dlrm_batch_specs(cfg: DLRMConfig, batch: int) -> Dict:
+def dlrm_batch_specs(cfg: DLRMConfig, batch: int) -> dict:
     """ShapeDtypeStruct stand-ins for the dry-run (indices already offset)."""
     import jax.numpy as jnp
     return {
@@ -116,9 +115,9 @@ def vlm_prefix(seq_len: int) -> int:
 
 
 def make_lm_batch(cfg: ModelConfig, batch: int, seq_len: int, step: int = 0,
-                  seed: int = 0) -> Dict[str, np.ndarray]:
+                  seed: int = 0) -> dict[str, np.ndarray]:
     rng = np.random.RandomState(seed * 7_777_777 + step + 1)
-    out: Dict[str, np.ndarray] = {}
+    out: dict[str, np.ndarray] = {}
     if cfg.frontend == "vision":
         prefix = vlm_prefix(seq_len)
         text = seq_len - prefix
@@ -150,9 +149,9 @@ def make_lm_batch(cfg: ModelConfig, batch: int, seq_len: int, step: int = 0,
     return out
 
 
-def lm_batch_specs(cfg: ModelConfig, batch: int, seq_len: int) -> Dict:
+def lm_batch_specs(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
     import jax.numpy as jnp
-    out: Dict = {}
+    out: dict = {}
     if cfg.frontend == "vision":
         prefix = vlm_prefix(seq_len)
         text = seq_len - prefix

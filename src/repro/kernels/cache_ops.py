@@ -22,21 +22,19 @@ so the pad is a no-op.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.compat import MemorySpace, SemaphoreType
-
 from repro.kernels import ref
+from repro.kernels.compat import MemorySpace, SemaphoreType
 
 LANE = 128
 
 
-def _use_pallas(force: Optional[bool]) -> bool:
+def _use_pallas(force: bool | None) -> bool:
     if force is not None:
         return force
     return jax.default_backend() == "tpu"
@@ -167,6 +165,210 @@ def cache_exchange_kernel(capacity: jax.Array, cache: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# split async exchange: fetch (capacity -> shadow) / commit (shadow -> cache)
+# ---------------------------------------------------------------------------
+#
+# The synchronous cache_exchange above blocks the step on its worklist: the
+# fetch DMA sits on the critical path between batch k's update and batch
+# k+1's forward. The async stream (core/cache.py AsyncCacheState) splits it:
+#
+#   fetch   capacity rows -> a fresh SHADOW slab. No cache/capacity output,
+#           no donation — it only READS the tiers, so it runs concurrently
+#           with the in-flight batch's dense compute.
+#   commit  at the step boundary: dirty-victim writeback (cache -> capacity,
+#           reading the POST-update cache) + shadow row -> cache slot. Only
+#           device-resident row copies — the slow capacity fetch already
+#           happened off the critical path.
+#
+# fetch + commit over one worklist == one cache_exchange (asserted in
+# tests/test_cache_async.py against kernels/ref.py oracles).
+
+
+def _fetch_kernel(fetch_ref, capacity_ref, cap_acc_ref, shadow_out,
+                  shadow_acc_out, row_vmem, acc_vmem, sems):
+    """Grid step i gathers capacity row fetch_ref[i] into shadow row i.
+
+    fetch: (N,) SMEM scalar-prefetch (-1 = pad, zero-fills the shadow row);
+    capacity: (R, D), cap_acc: (R, 1) HBM read-only; shadow_out: (N, D),
+    shadow_acc_out: (N, 1) HBM; row_vmem: (1, D); acc_vmem: (1, 1)."""
+    i = pl.program_id(0)
+    ft = fetch_ref[i]
+
+    @pl.when(ft >= 0)
+    def _gather():
+        cp_r = pltpu.make_async_copy(capacity_ref.at[pl.ds(ft, 1)], row_vmem,
+                                     sems.at[0])
+        cp_a = pltpu.make_async_copy(cap_acc_ref.at[pl.ds(ft, 1)], acc_vmem,
+                                     sems.at[1])
+        cp_r.start()
+        cp_a.start()
+        cp_r.wait()
+        cp_a.wait()
+
+    @pl.when(ft < 0)
+    def _zero():
+        row_vmem[...] = jnp.zeros(row_vmem.shape, row_vmem.dtype)
+        acc_vmem[...] = jnp.zeros(acc_vmem.shape, acc_vmem.dtype)
+
+    cp_wr = pltpu.make_async_copy(row_vmem, shadow_out.at[pl.ds(i, 1)],
+                                  sems.at[0])
+    cp_wa = pltpu.make_async_copy(acc_vmem, shadow_acc_out.at[pl.ds(i, 1)],
+                                  sems.at[1])
+    cp_wr.start()
+    cp_wa.start()
+    cp_wr.wait()
+    cp_wa.wait()
+
+
+# NO donation: fetch only reads the tiers — the caller's capacity array and
+# the in-flight batch's cache stay live while the DMA is in flight.
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cache_fetch_kernel(capacity: jax.Array, cap_accum: jax.Array,
+                       fetch_rows: jax.Array, interpret: bool = False):
+    """capacity: (R, D) with D % 128 == 0; cap_accum: (R,) fp32;
+    fetch_rows: (N,) int32 (-1 = pad). Returns (shadow (N, D),
+    shadow_accum (N, 1)) — a fresh slab, the tiers are untouched."""
+    r, d = capacity.shape
+    n = fetch_rows.shape[0]
+    return pl.pallas_call(
+        _fetch_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n,),
+            in_specs=[
+                pl.BlockSpec(memory_space=MemorySpace.ANY),  # capacity
+                pl.BlockSpec(memory_space=MemorySpace.ANY),  # cap_acc
+            ],
+            out_specs=[
+                pl.BlockSpec(memory_space=MemorySpace.ANY),
+                pl.BlockSpec(memory_space=MemorySpace.ANY),
+            ],
+            scratch_shapes=[
+                MemorySpace.VMEM((1, d), capacity.dtype),
+                MemorySpace.VMEM((1, 1), jnp.float32),
+                SemaphoreType.DMA((2,)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), capacity.dtype),
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(fetch_rows, capacity, cap_accum.reshape(r, 1).astype(jnp.float32))
+
+
+def _commit_kernel(slots_ref, evict_ref, fetch_ref, shadow_ref,
+                   shadow_acc_ref, capacity_ref, cache_ref, cap_acc_ref,
+                   cache_acc_ref, capacity_out, cache_out, cap_acc_out,
+                   cache_acc_out, row_vmem, acc_vmem, sems):
+    """Grid step i installs shadow row i into cache slot slots_ref[i],
+    writing the slot's dirty victim back to capacity row evict_ref[i] first.
+
+    slots/evict/fetch: (N,) SMEM scalar-prefetch (-1 = skip; fetch gates the
+    install — pure-writeback entries keep the slot); shadow: (N, D),
+    shadow_acc: (N, 1) HBM read-only; capacity/(R, D), cache/(C, D),
+    cap_acc/(R, 1), cache_acc/(C, 1) HBM io-aliased in->out."""
+    i = pl.program_id(0)
+    s = slots_ref[i]
+    ev = evict_ref[i]
+    ft = fetch_ref[i]
+
+    @pl.when((s >= 0) & (ev >= 0))
+    def _writeback():
+        cp_r = pltpu.make_async_copy(cache_ref.at[pl.ds(s, 1)], row_vmem,
+                                     sems.at[0])
+        cp_a = pltpu.make_async_copy(cache_acc_ref.at[pl.ds(s, 1)], acc_vmem,
+                                     sems.at[1])
+        cp_r.start()
+        cp_a.start()
+        cp_r.wait()
+        cp_a.wait()
+        cp_wr = pltpu.make_async_copy(row_vmem, capacity_out.at[pl.ds(ev, 1)],
+                                      sems.at[0])
+        cp_wa = pltpu.make_async_copy(acc_vmem, cap_acc_out.at[pl.ds(ev, 1)],
+                                      sems.at[1])
+        cp_wr.start()
+        cp_wa.start()
+        cp_wr.wait()
+        cp_wa.wait()
+
+    @pl.when((s >= 0) & (ft >= 0))
+    def _install():
+        cp_r = pltpu.make_async_copy(shadow_ref.at[pl.ds(i, 1)], row_vmem,
+                                     sems.at[0])
+        cp_a = pltpu.make_async_copy(shadow_acc_ref.at[pl.ds(i, 1)], acc_vmem,
+                                     sems.at[1])
+        cp_r.start()
+        cp_a.start()
+        cp_r.wait()
+        cp_a.wait()
+        cp_wr = pltpu.make_async_copy(row_vmem, cache_out.at[pl.ds(s, 1)],
+                                      sems.at[0])
+        cp_wa = pltpu.make_async_copy(acc_vmem, cache_acc_out.at[pl.ds(s, 1)],
+                                      sems.at[1])
+        cp_wr.start()
+        cp_wa.start()
+        cp_wr.wait()
+        cp_wa.wait()
+
+
+# the four tier arrays are donated/io-aliased (in-place row swap); the
+# shadow slab is consumed by this call but NOT aliased (different height)
+@functools.partial(jax.jit, static_argnames=("interpret",),
+                   donate_argnums=(0, 1))
+def cache_commit_kernel(capacity: jax.Array, cache: jax.Array,
+                        cap_accum: jax.Array, cache_accum: jax.Array,
+                        shadow: jax.Array, shadow_accum: jax.Array,
+                        slots: jax.Array, evict_rows: jax.Array,
+                        fetch_rows: jax.Array, interpret: bool = False):
+    """capacity: (R, D), cache: (C, D), shadow: (N, D) with D % 128 == 0;
+    cap_accum: (R, 1), cache_accum: (C, 1), shadow_accum: (N, 1) fp32;
+    slots/evict_rows/fetch_rows: (N,) int32 (-1 = skip; fetch gates the
+    shadow install). Returns (capacity', cache', cap_accum', cache_accum')
+    updated in place (io aliasing)."""
+    r, d = capacity.shape
+    c = cache.shape[0]
+    n = slots.shape[0]
+    return pl.pallas_call(
+        _commit_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(n,),
+            in_specs=[
+                pl.BlockSpec(memory_space=MemorySpace.ANY),  # shadow
+                pl.BlockSpec(memory_space=MemorySpace.ANY),  # shadow_acc
+                pl.BlockSpec(memory_space=MemorySpace.ANY),  # capacity
+                pl.BlockSpec(memory_space=MemorySpace.ANY),  # cache
+                pl.BlockSpec(memory_space=MemorySpace.ANY),  # cap_acc
+                pl.BlockSpec(memory_space=MemorySpace.ANY),  # cache_acc
+            ],
+            out_specs=[
+                pl.BlockSpec(memory_space=MemorySpace.ANY),
+                pl.BlockSpec(memory_space=MemorySpace.ANY),
+                pl.BlockSpec(memory_space=MemorySpace.ANY),
+                pl.BlockSpec(memory_space=MemorySpace.ANY),
+            ],
+            scratch_shapes=[
+                MemorySpace.VMEM((1, d), capacity.dtype),
+                MemorySpace.VMEM((1, 1), jnp.float32),
+                SemaphoreType.DMA((2,)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((r, d), capacity.dtype),
+            jax.ShapeDtypeStruct((c, d), cache.dtype),
+            jax.ShapeDtypeStruct((r, 1), jnp.float32),
+            jax.ShapeDtypeStruct((c, 1), jnp.float32),
+        ],
+        input_output_aliases={5: 0, 6: 1, 7: 2, 8: 3},
+        interpret=interpret,
+    )(slots, evict_rows, fetch_rows, shadow, shadow_accum.reshape(n, 1),
+      capacity, cache,
+      cap_accum.reshape(r, 1).astype(jnp.float32),
+      cache_accum.reshape(c, 1).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
 # public wrappers (kernel on TPU / interpret, jnp oracle on CPU)
 # ---------------------------------------------------------------------------
 
@@ -182,9 +384,9 @@ def cache_exchange(capacity: jax.Array, cache: jax.Array,
                    cap_accum: jax.Array, cache_accum: jax.Array,
                    freq: jax.Array, slots: jax.Array, evict_rows: jax.Array,
                    fetch_rows: jax.Array, counts: jax.Array,
-                   use_kernel: Optional[bool] = None,
+                   use_kernel: bool | None = None,
                    interpret: bool = False
-                   ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array,
+                   ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array,
                               jax.Array]:
     """Batched eviction-writeback + fetch-on-miss between the capacity tier
     and the device cache. See cache_exchange_kernel / ref.cache_exchange_ref
@@ -207,6 +409,70 @@ def cache_exchange(capacity: jax.Array, cache: jax.Array,
                 new_f[:, 0])
     return _exchange_ref_jit(capacity, cache, cap_accum, cache_accum,
                              freq, slots, evict_rows, fetch_rows, counts)
+
+
+@functools.partial(jax.jit)
+def _fetch_ref_jit(capacity, cap_accum, fetch_rows):
+    return ref.cache_fetch_ref(capacity, cap_accum, fetch_rows)
+
+
+def cache_fetch(capacity: jax.Array, cap_accum: jax.Array,
+                fetch_rows: jax.Array, use_kernel: bool | None = None,
+                interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """FETCH half of the split async exchange: gather `fetch_rows` (+ their
+    accumulators) from the capacity tier into a fresh shadow slab. Read-only
+    on the tiers (nothing donated) so it overlaps the in-flight batch's
+    compute. Returns (shadow (N, D), shadow_accum (N,)).
+
+    The Pallas path requires D % 128 == 0; an unaligned D would force a
+    full O(R x D') pad-copy of the capacity tier EVERY call (the fetch
+    cannot donate, unlike the exchange), so unless `interpret` explicitly
+    asks for the kernel, unaligned tables take the jnp gather — a cheap
+    XLA dynamic-gather that keeps the fetch off the critical path."""
+    fetch_rows = fetch_rows.astype(jnp.int32)
+    d = capacity.shape[1]
+    if (_use_pallas(use_kernel) and d % LANE == 0) or interpret:
+        shadow, shadow_acc = cache_fetch_kernel(
+            _pad_lane(capacity), cap_accum, fetch_rows, interpret=interpret)
+        return shadow[:, :d], shadow_acc[:, 0]
+    return _fetch_ref_jit(capacity, cap_accum, fetch_rows)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3))
+def _commit_ref_jit(capacity, cache, cap_accum, cache_accum, shadow,
+                    shadow_accum, slots, evict_rows, fetch_rows):
+    return ref.cache_commit_ref(capacity, cache, cap_accum, cache_accum,
+                                shadow, shadow_accum, slots, evict_rows,
+                                fetch_rows)
+
+
+def cache_commit(capacity: jax.Array, cache: jax.Array, cap_accum: jax.Array,
+                 cache_accum: jax.Array, shadow: jax.Array,
+                 shadow_accum: jax.Array, slots: jax.Array,
+                 evict_rows: jax.Array, fetch_rows: jax.Array,
+                 use_kernel: bool | None = None,
+                 interpret: bool = False
+                 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """COMMIT half of the split async exchange: dirty-victim writeback
+    (cache slot -> capacity row, reading the post-update cache) + shadow row
+    -> cache slot install, at a step boundary. `fetch_rows` is the worklist
+    the shadow slab was fetched with; -1 entries gate the install off
+    (pure writeback). The four tier arrays are DONATED (in-place row swap,
+    same contract as cache_exchange) — callers must use the returned
+    arrays. Returns (capacity', cache', cap_accum', cache_accum')."""
+    slots = slots.astype(jnp.int32)
+    evict_rows = evict_rows.astype(jnp.int32)
+    fetch_rows = fetch_rows.astype(jnp.int32)
+    if _use_pallas(use_kernel) or interpret:
+        d = capacity.shape[1]
+        new_cap, new_cache, new_ca, new_cc = cache_commit_kernel(
+            _pad_lane(capacity), _pad_lane(cache), cap_accum, cache_accum,
+            _pad_lane(shadow), shadow_accum, slots, evict_rows, fetch_rows,
+            interpret=interpret)
+        return new_cap[:, :d], new_cache[:, :d], new_ca[:, 0], new_cc[:, 0]
+    return _commit_ref_jit(capacity, cache, cap_accum, cache_accum,
+                           shadow, shadow_accum, slots, evict_rows,
+                           fetch_rows)
 
 
 @functools.partial(jax.jit, static_argnames=("decay",))

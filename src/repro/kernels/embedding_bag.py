@@ -29,24 +29,24 @@ def _bag_kernel(idx_ref, table_ref, out_ref, rows_vmem, sems, *,
     b = pl.program_id(0)
     d = out_ref.shape[-1]
 
-    def start_fetch(slot, l):
-        ix = jnp.maximum(idx_ref[b, l], 0)
+    def start_fetch(slot, j):
+        ix = jnp.maximum(idx_ref[b, j], 0)
         pltpu.make_async_copy(table_ref.at[pl.ds(ix, 1)],
                               rows_vmem.at[slot], sems.at[slot]).start()
 
     start_fetch(0, 0)
 
-    def body(l, carry):
+    def body(j, carry):
         acc, cnt = carry
-        slot = jax.lax.rem(l, 2)
+        slot = jax.lax.rem(j, 2)
 
-        @pl.when(l + 1 < max_len)
+        @pl.when(j + 1 < max_len)
         def _():
-            start_fetch(jax.lax.rem(l + 1, 2), l + 1)
+            start_fetch(jax.lax.rem(j + 1, 2), j + 1)
 
         pltpu.make_async_copy(table_ref.at[pl.ds(0, 1)],
                               rows_vmem.at[slot], sems.at[slot]).wait()
-        valid = idx_ref[b, l] >= 0
+        valid = idx_ref[b, j] >= 0
         acc = acc + jnp.where(valid,
                               rows_vmem[slot].astype(jnp.float32), 0.0)
         cnt = cnt + jnp.where(valid, 1.0, 0.0)

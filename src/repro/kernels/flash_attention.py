@@ -60,7 +60,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, kbuf, vbuf, sems, *,
         jnp.int32, (block_q, block_k), 0)
 
     def body(ki, carry):
-        m, l, acc = carry
+        m, den, acc = carry
         slot = jax.lax.rem(ki, 2)
 
         @pl.when(ki + 1 < hi)
@@ -79,17 +79,17 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, kbuf, vbuf, sems, *,
         m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
         p = jnp.exp(s - m_new)
         corr = jnp.exp(m - m_new)
-        l_new = l * corr + p.sum(axis=-1, keepdims=True)
+        den_new = den * corr + p.sum(axis=-1, keepdims=True)
         acc_new = acc * corr + jax.lax.dot_general(
             p, v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
-        return m_new, l_new, acc_new
+        return m_new, den_new, acc_new
 
     m0 = jnp.full((block_q, 1), -jnp.inf, jnp.float32)
     l0 = jnp.zeros((block_q, 1), jnp.float32)
     a0 = jnp.zeros((block_q, dh), jnp.float32)
-    m, l, acc = jax.lax.fori_loop(0, hi, body, (m0, l0, a0))
-    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+    m, den, acc = jax.lax.fori_loop(0, hi, body, (m0, l0, a0))
+    o_ref[0, 0] = (acc / jnp.maximum(den, 1e-30)).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block_q", "block_k", "causal",

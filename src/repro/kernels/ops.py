@@ -12,7 +12,6 @@ Responsibilities:
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +27,7 @@ LANE = 128
 SUBLANE = 8
 
 
-def _use_pallas(force: Optional[bool]) -> bool:
+def _use_pallas(force: bool | None) -> bool:
     if force is not None:
         return force
     return jax.default_backend() == "tpu"
@@ -50,7 +49,7 @@ def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
 def embedding_bag(table: jax.Array, indices: jax.Array, mode: str = "sum",
-                  use_kernel: Optional[bool] = None,
+                  use_kernel: bool | None = None,
                   interpret: bool = False) -> jax.Array:
     """Pooled multi-hot lookup. table: (H, D); indices: (B, L) int32, -1 pads.
     Returns (B, D)."""
@@ -71,15 +70,15 @@ def _bag_fwd(table, indices, mode, use_kernel, interpret):
 
 def _bag_bwd(mode, use_kernel, interpret, res, g):
     indices, h, cnt = res
-    b, l = indices.shape
+    b, lk = indices.shape
     gf = g.astype(jnp.float32)
     if mode == "mean":
         gf = gf / jnp.maximum(cnt, 1)[:, None]
     valid = indices >= 0
     idx = jnp.where(valid, indices, h)
-    gexp = jnp.broadcast_to(gf[:, None, :], (b, l, g.shape[-1]))
+    gexp = jnp.broadcast_to(gf[:, None, :], (b, lk, g.shape[-1]))
     gtab = jnp.zeros((h + 1, g.shape[-1]), jnp.float32).at[idx.reshape(-1)] \
-        .add(jnp.where(valid.reshape(-1)[:, None], gexp.reshape(b * l, -1),
+        .add(jnp.where(valid.reshape(-1)[:, None], gexp.reshape(b * lk, -1),
                        0.0))[:h]
     return gtab.astype(g.dtype), None
 
@@ -93,7 +92,7 @@ embedding_bag.defvjp(_bag_fwd, _bag_bwd)
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
 def dot_interaction(z: jax.Array, tile_b: int = 8,
-                    use_kernel: Optional[bool] = None,
+                    use_kernel: bool | None = None,
                     interpret: bool = False) -> jax.Array:
     """z: (B, F, D) -> (B, F*(F-1)//2) strict-lower-triangle pairwise dots."""
     if _use_pallas(use_kernel) or interpret:
@@ -130,9 +129,9 @@ dot_interaction.defvjp(_dot_fwd, _dot_bwd)
 def rowwise_adagrad_update(table: jax.Array, accum: jax.Array,
                            indices: jax.Array, grads: jax.Array,
                            lr, eps: float = 1e-8,
-                           use_kernel: Optional[bool] = None,
+                           use_kernel: bool | None = None,
                            interpret: bool = False
-                           ) -> Tuple[jax.Array, jax.Array]:
+                           ) -> tuple[jax.Array, jax.Array]:
     """Apply deduplicated row-wise AdaGrad.
 
     table: (H, D); accum: (H,) fp32; indices: (N,) int32 per-lookup rows
@@ -164,7 +163,7 @@ def rowwise_adagrad_update(table: jax.Array, accum: jax.Array,
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                     block_q: int = 128, block_k: int = 128,
                     causal: bool = True,
-                    use_kernel: Optional[bool] = None,
+                    use_kernel: bool | None = None,
                     interpret: bool = False) -> jax.Array:
     """q, k, v: (b, s, h, dh) (layer-zoo layout). Pads dh to the lane width
     and s to the block size; padded KV rows are masked by causality."""

@@ -131,6 +131,57 @@ def cache_exchange_ref(capacity: jax.Array, cache: jax.Array,
     return capacity, cache, cap_accum, cache_accum, freq
 
 
+def cache_fetch_ref(capacity: jax.Array, cap_accum: jax.Array,
+                    fetch_rows: jax.Array):
+    """Oracle for the FETCH half of the split async exchange
+    (cache_ops.cache_fetch): gather `fetch_rows` (+ their row-wise AdaGrad
+    accumulators) from the capacity tier into a fresh SHADOW slab, without
+    touching the device cache. -1 entries produce zero rows (padding).
+
+    capacity: (R, D); cap_accum: (R,). Returns (shadow (N, D),
+    shadow_accum (N,)). The shadow slab is what the async stream fills
+    while the in-flight batch's dense compute runs — see core/cache.py.
+    """
+    valid = fetch_rows >= 0
+    take = jnp.where(valid, fetch_rows, 0)
+    shadow = jnp.where(valid[:, None], capacity[take].astype(jnp.float32),
+                       0.0).astype(capacity.dtype)
+    shadow_accum = jnp.where(valid, cap_accum[take], 0.0)
+    return shadow, shadow_accum
+
+
+def cache_commit_ref(capacity: jax.Array, cache: jax.Array,
+                     cap_accum: jax.Array, cache_accum: jax.Array,
+                     shadow: jax.Array, shadow_accum: jax.Array,
+                     slots: jax.Array, evict_rows: jax.Array,
+                     fetch_rows: jax.Array):
+    """Oracle for the COMMIT half of the split async exchange
+    (cache_ops.cache_commit): install a previously fetched shadow slab into
+    the device cache at a step boundary. Entry i
+      * writes cache slot slots[i] (post-update dirty victim) back to
+        capacity row evict_rows[i] if >= 0, then
+      * overwrites the slot with shadow row i (+ accumulator) if
+        fetch_rows[i] >= 0 (the row the shadow slab holds at position i —
+        pure-writeback entries pass -1 and keep the slot's contents).
+    slots[i] < 0 skips the entry. Worklist slots are distinct and the
+    evict-row set is disjoint from the fetched rows (the manager's
+    working-set protection guarantees both), so entry order does not
+    matter. fetch(fetch_rows) + commit over the same worklist is equivalent
+    to one cache_exchange_ref call (modulo the LFU seed, which the async
+    manager keeps on the host). Returns the four arrays updated.
+    """
+    r = capacity.shape[0]
+    c = cache.shape[0]
+    safe_slot = jnp.where(slots >= 0, slots, 0)
+    wb = jnp.where((slots >= 0) & (evict_rows >= 0), evict_rows, r)  # r drops
+    capacity = capacity.at[wb].set(cache[safe_slot], mode="drop")
+    cap_accum = cap_accum.at[wb].set(cache_accum[safe_slot], mode="drop")
+    dst = jnp.where((slots >= 0) & (fetch_rows >= 0), slots, c)      # c drops
+    cache = cache.at[dst].set(shadow.astype(cache.dtype), mode="drop")
+    cache_accum = cache_accum.at[dst].set(shadow_accum, mode="drop")
+    return capacity, cache, cap_accum, cache_accum
+
+
 def lfu_touch_ref(freq: jax.Array, slots: jax.Array, counts: jax.Array,
                   decay: float) -> jax.Array:
     """Decay-then-bump LFU counter update: freq' = decay * freq, then

@@ -25,7 +25,6 @@ from __future__ import annotations
 import dataclasses
 import math
 import re
-from typing import Dict, List, Optional, Tuple
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -59,7 +58,7 @@ _MAJOR_BYTES_OPS = (
 )
 
 
-def _tensor_numel_bytes(t: str) -> Tuple[int, int, List[int]]:
+def _tensor_numel_bytes(t: str) -> tuple[int, int, list[int]]:
     """'64x128xf32' -> (numel, bytes, dims); 'f32' -> (1, 4, [])."""
     parts = t.split("x")
     if len(parts) == 1:
@@ -92,8 +91,8 @@ class OpCost:
 class StableHloAnalysis:
     def __init__(self, text: str):
         self.functions = self._split_functions(text)
-        self._cache: Dict[str, OpCost] = {}
-        self.warnings: List[str] = []
+        self._cache: dict[str, OpCost] = {}
+        self.warnings: list[str] = []
 
     # -- public ---------------------------------------------------------------
 
@@ -103,8 +102,8 @@ class StableHloAnalysis:
     # -- parsing --------------------------------------------------------------
 
     @staticmethod
-    def _split_functions(text: str) -> Dict[str, List[str]]:
-        fns: Dict[str, List[str]] = {}
+    def _split_functions(text: str) -> dict[str, list[str]]:
+        fns: dict[str, list[str]] = {}
         lines = text.splitlines()
         i = 0
         while i < len(lines):
@@ -136,8 +135,8 @@ class StableHloAnalysis:
         self._cache[name] = cost
         return cost
 
-    def _walk(self, lines: List[str], start: int, end: int
-              ) -> Tuple[OpCost, int]:
+    def _walk(self, lines: list[str], start: int, end: int
+              ) -> tuple[OpCost, int]:
         """Walk [start, end) at one region level, returning (cost, next)."""
         cost = OpCost()
         i = start
@@ -152,8 +151,8 @@ class StableHloAnalysis:
             i += 1
         return cost, i
 
-    def _while(self, lines: List[str], i: int, end: int, cost: OpCost
-               ) -> Tuple[int, int]:
+    def _while(self, lines: list[str], i: int, end: int, cost: OpCost
+               ) -> tuple[int, int]:
         """Parse `stablehlo.while ... cond { } do { }`, add body cost x trip.
 
         The cond region is trivial (compare + constant) and contains no
@@ -166,12 +165,12 @@ class StableHloAnalysis:
                 self.warnings.append("while without cond region")
                 return 1, i + 1
             j += 1
-        cond_lines: List[str] = []
+        cond_lines: list[str] = []
         j += 1
         while j < end and "} do {" not in lines[j]:
             cond_lines.append(lines[j])
             j += 1
-        body_lines: List[str] = []
+        body_lines: list[str] = []
         depth = 1
         j += 1
         while j < end and depth > 0:
@@ -277,9 +276,9 @@ class CollectiveAnalysis:
 
     def __init__(self, hlo_text: str):
         self.computations = self._split(hlo_text)
-        self.warnings: List[str] = []
-        self.by_type: Dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
-        self.op_log: List[Tuple[str, float, int]] = []
+        self.warnings: list[str] = []
+        self.by_type: dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+        self.op_log: list[tuple[str, float, int]] = []
         self.dot_flops: float = 0.0          # per chip, loop-corrected
         entry = next((n for n, (is_entry, _) in self.computations.items()
                       if is_entry), None)
@@ -293,10 +292,10 @@ class CollectiveAnalysis:
         return sum(self.by_type.values())
 
     @staticmethod
-    def _split(text: str) -> Dict[str, Tuple[bool, List[str]]]:
+    def _split(text: str) -> dict[str, tuple[bool, list[str]]]:
         """Computation header: `[ENTRY ]%name (args) -> type {` (args may
         nest parens); ops are ` %x = ...` lines; body ends at a bare `}`."""
-        comps: Dict[str, Tuple[bool, List[str]]] = {}
+        comps: dict[str, tuple[bool, list[str]]] = {}
         cur, body = None, []
         for ln in text.splitlines():
             s = ln.strip()
@@ -332,7 +331,7 @@ class CollectiveAnalysis:
         if comp in stack:
             return
         _, body = self.computations.get(comp, (False, []))
-        shapes: Dict[str, Tuple[str, str]] = {}
+        shapes: dict[str, tuple[str, str]] = {}
         for ln in body:
             dm = _HLO_DEF_RE.match(ln)
             if dm:

@@ -21,7 +21,7 @@ import dataclasses   # noqa: E402
 import json          # noqa: E402
 import time          # noqa: E402
 import traceback     # noqa: E402
-from typing import Any, Dict, Optional  # noqa: E402
+from typing import Any  # noqa: E402
 
 import jax           # noqa: E402
 import jax.numpy as jnp  # noqa: E402
@@ -52,7 +52,7 @@ from repro.train.steps import (build_dlrm_train_step,  # noqa: E402
 # ---------------------------------------------------------------------------
 
 
-def _rules_for(cfg, shape: Shape, overrides: Optional[Dict] = None):
+def _rules_for(cfg, shape: Shape, overrides: dict | None = None):
     if shape.kind in ("dlrm_train", "dlrm_infer"):
         rules = dict(TRAIN_RULES)        # DLRM: paper-faithful DP+PS mapping
     elif shape.kind == "train":
@@ -85,8 +85,8 @@ def _batch_shardings(mesh, rules, batch_specs):
 
 
 def build_cell(arch: str, shape: Shape, mesh,
-               rules_overrides: Optional[Dict] = None,
-               config_overrides: Optional[Dict] = None):
+               rules_overrides: dict | None = None,
+               config_overrides: dict | None = None):
     """Returns (fn, args_abstract, in_shardings, out_shardings, meta)."""
     cfg = get_config(arch)
     if config_overrides:
@@ -220,7 +220,7 @@ def _build_lm_cell(cfg, shape: Shape, mesh, rules):
     n_active = cfg.active_param_count_estimate()
     accum0 = _auto_accum(cfg, shape, mesh, rules) if shape.kind == "train" \
         else 1
-    extra: Dict[str, Any] = {
+    extra: dict[str, Any] = {
         "hbm_estimate_gb": round(
             _hbm_estimate_lm(cfg, shape, mesh, specs, pspecs, accum0), 2)}
 
@@ -355,10 +355,10 @@ def _build_dlrm_cell(cfg: DLRMConfig, shape: Shape, mesh, rules):
 
 def run_cell(arch: str, shape: Shape, multi_pod: bool,
              rules_overrides=None, config_overrides=None,
-             skip_collectives: bool = False) -> Dict[str, Any]:
+             skip_collectives: bool = False) -> dict[str, Any]:
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = len(mesh.devices.flatten())
-    rec: Dict[str, Any] = {
+    rec: dict[str, Any] = {
         "arch": arch, "shape": shape.name,
         "mesh": "2x16x16" if multi_pod else "16x16", "chips": n_chips,
         "ok": False,

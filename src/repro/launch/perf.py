@@ -13,7 +13,7 @@ section Perf narrates confirmed/refuted.
 """
 import argparse   # noqa: E402
 import json       # noqa: E402
-from typing import Any, Dict  # noqa: E402
+from typing import Any  # noqa: E402
 
 from repro.configs import shapes_for  # noqa: E402
 from repro.launch.dryrun import run_cell  # noqa: E402
@@ -21,7 +21,7 @@ from repro.nn.sharding import ZERO_DP_RULES  # noqa: E402
 
 # variant = {"rules": overrides-or-table, "config": config overrides,
 #            "hypothesis": one-liner}
-VARIANTS: Dict[str, Dict[str, Dict[str, Any]]] = {
+VARIANTS: dict[str, dict[str, dict[str, Any]]] = {
     "qwen1.5-32b/train_4k": {
         "baseline": {"hypothesis": "paper-faithful DP(trainer) x TP(PS) "
                      "mapping; expect TP activation all-reduces + FSDP "

@@ -14,7 +14,6 @@ bound" (an MFU upper bound estimate).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,7 +30,7 @@ HW = HWSpec()
 
 def roofline_terms(flops: float, bytes_hbm: float,
                    collective_bytes_per_chip: float, chips: int,
-                   model_flops: float, hw: HWSpec = HW) -> Dict:
+                   model_flops: float, hw: HWSpec = HW) -> dict:
     compute_s = flops / (chips * hw.peak_flops_bf16)
     memory_s = bytes_hbm / (chips * hw.hbm_bw)
     collective_s = collective_bytes_per_chip / hw.ici_bw

@@ -11,7 +11,6 @@ straggler logging, EASGD / local-SGD pod sync (optional).
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp

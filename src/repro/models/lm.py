@@ -12,8 +12,7 @@ patch embeddings, `audio` consumes precomputed EnCodec frame embeddings
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -31,8 +30,8 @@ from repro.nn.sharding import (TRAIN_RULES, LogicalRules, gather_weight,
 # ---------------------------------------------------------------------------
 
 
-def _block_specs(cfg: ModelConfig, kind: str, is_moe: bool) -> Dict:
-    specs: Dict[str, Any] = {"ln1": L.norm_specs(cfg.d_model, cfg.norm_type)}
+def _block_specs(cfg: ModelConfig, kind: str, is_moe: bool) -> dict:
+    specs: dict[str, Any] = {"ln1": L.norm_specs(cfg.d_model, cfg.norm_type)}
     if kind == "a":
         specs["attn"] = L.attention_specs(cfg)
     elif kind == "m":
@@ -45,7 +44,7 @@ def _block_specs(cfg: ModelConfig, kind: str, is_moe: bool) -> Dict:
     return specs
 
 
-def _pattern_moe_flags(cfg: ModelConfig) -> Tuple[bool, ...]:
+def _pattern_moe_flags(cfg: ModelConfig) -> tuple[bool, ...]:
     """MoE-ness per pattern position — must be unit-independent."""
     period = len(cfg.pattern)
     if cfg.n_experts > 0:
@@ -54,9 +53,9 @@ def _pattern_moe_flags(cfg: ModelConfig) -> Tuple[bool, ...]:
     return tuple(cfg.is_moe_layer(i) for i in range(period))
 
 
-def lm_param_specs(cfg: ModelConfig) -> Dict:
+def lm_param_specs(cfg: ModelConfig) -> dict:
     v, d = cfg.vocab_size, cfg.d_model
-    p: Dict[str, Any] = {"embed": {}}
+    p: dict[str, Any] = {"embed": {}}
     if cfg.frontend == "audio":
         p["embed"]["codebooks"] = ParamSpec(
             (cfg.n_codebooks, v, d), (None, "vocab", "embed"),
@@ -84,10 +83,10 @@ def _dtype(cfg: ModelConfig):
     return jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
 
 
-def embed_input(params: Dict, batch: Dict, cfg: ModelConfig,
+def embed_input(params: dict, batch: dict, cfg: ModelConfig,
                 rules: LogicalRules,
-                positions: Optional[jax.Array] = None
-                ) -> Tuple[jax.Array, jax.Array]:
+                positions: jax.Array | None = None
+                ) -> tuple[jax.Array, jax.Array]:
     """Returns (x (B, S, D), positions (B, S)). `positions` is supplied by
     the decode path (current cache index); defaults to arange(S)."""
     dtype = _dtype(cfg)
@@ -115,7 +114,7 @@ def embed_input(params: Dict, batch: Dict, cfg: ModelConfig,
     return x, positions
 
 
-def lm_logits(params: Dict, x: jax.Array, cfg: ModelConfig,
+def lm_logits(params: dict, x: jax.Array, cfg: ModelConfig,
               rules: LogicalRules) -> jax.Array:
     dtype = _dtype(cfg)
     x = L.apply_norm(params["final_norm"], x, cfg.norm_type, dtype=dtype,
@@ -142,9 +141,9 @@ def lm_logits(params: Dict, x: jax.Array, cfg: ModelConfig,
 # ---------------------------------------------------------------------------
 
 
-def _apply_block(bp: Dict, x: jax.Array, cfg: ModelConfig, kind: str,
+def _apply_block(bp: dict, x: jax.Array, cfg: ModelConfig, kind: str,
                  is_moe: bool, positions: jax.Array, mode: str,
-                 cache: Optional[Dict], cache_index, rules: LogicalRules):
+                 cache: dict | None, cache_index, rules: LogicalRules):
     dtype = _dtype(cfg)
     h = L.apply_norm(bp["ln1"], x, cfg.norm_type, dtype=dtype, rules=rules)
     new_cache = cache
@@ -175,11 +174,11 @@ def _apply_block(bp: Dict, x: jax.Array, cfg: ModelConfig, kind: str,
 # ---------------------------------------------------------------------------
 
 
-def lm_forward(params: Dict, batch: Dict, cfg: ModelConfig,
-               mode: str = "train", caches: Optional[Dict] = None,
-               cache_index: Optional[jax.Array] = None,
+def lm_forward(params: dict, batch: dict, cfg: ModelConfig,
+               mode: str = "train", caches: dict | None = None,
+               cache_index: jax.Array | None = None,
                rules: LogicalRules = TRAIN_RULES
-               ) -> Tuple[jax.Array, jax.Array, Optional[Dict]]:
+               ) -> tuple[jax.Array, jax.Array, dict | None]:
     """Returns (logits, aux_loss, new_caches)."""
     flags = _pattern_moe_flags(cfg)
     positions = None
@@ -221,8 +220,8 @@ def lm_forward(params: Dict, batch: Dict, cfg: ModelConfig,
     return logits, aux, new_caches
 
 
-def lm_loss(params: Dict, batch: Dict, cfg: ModelConfig,
-            rules: LogicalRules = TRAIN_RULES) -> Tuple[jax.Array, Dict]:
+def lm_loss(params: dict, batch: dict, cfg: ModelConfig,
+            rules: LogicalRules = TRAIN_RULES) -> tuple[jax.Array, dict]:
     logits, aux, _ = lm_forward(params, batch, cfg, "train", rules=rules)
     targets, mask = batch["targets"], batch["loss_mask"]
     lf = logits.astype(jnp.float32)
@@ -273,12 +272,12 @@ def _stack_cache(unit_cache, n_units: int, abstract: bool):
         unit_cache)
 
 
-def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> dict:
     return _stack_cache(_unit_cache(cfg, batch, max_len, False),
                         cfg.n_units, False)
 
 
-def cache_abstract(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+def cache_abstract(cfg: ModelConfig, batch: int, max_len: int) -> dict:
     return _stack_cache(_unit_cache(cfg, batch, max_len, True),
                         cfg.n_units, True)
 
@@ -314,9 +313,9 @@ def cache_pspecs(cfg: ModelConfig, rules: LogicalRules, mesh,
 # ---------------------------------------------------------------------------
 
 
-def decode_step(params: Dict, tokens: jax.Array, caches: Dict,
+def decode_step(params: dict, tokens: jax.Array, caches: dict,
                 cache_index: jax.Array, cfg: ModelConfig,
-                rules: LogicalRules) -> Tuple[jax.Array, Dict]:
+                rules: LogicalRules) -> tuple[jax.Array, dict]:
     """One token for every sequence in the batch.
 
     tokens: (B, 1) int32 — or (B, 1, K) for audio codebooks.
@@ -339,8 +338,8 @@ def decode_step(params: Dict, tokens: jax.Array, caches: Dict,
     return logits[:, -1], new_caches
 
 
-def prefill_step(params: Dict, batch: Dict, caches: Dict, cfg: ModelConfig,
-                 rules: LogicalRules) -> Tuple[jax.Array, Dict]:
+def prefill_step(params: dict, batch: dict, caches: dict, cfg: ModelConfig,
+                 rules: LogicalRules) -> tuple[jax.Array, dict]:
     """Run the full prompt once, filling caches. Returns (last-position
     logits, caches)."""
     logits, _, new_caches = lm_forward(params, batch, cfg, "prefill",

@@ -8,7 +8,7 @@ stored in fp32 and cast at the point of use.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +22,7 @@ from repro.nn.sharding import gather_weight
 
 
 def linear_specs(d_in: int, d_out: int, in_ax: str, out_ax: str,
-                 bias: bool = False, scale: float = 1.0) -> Dict[str, ParamSpec]:
+                 bias: bool = False, scale: float = 1.0) -> dict[str, ParamSpec]:
     specs = {"w": ParamSpec((d_in, d_out), (in_ax, out_ax), init="fan_in",
                             scale=scale, fan_axis=-2)}
     if bias:
@@ -30,7 +30,7 @@ def linear_specs(d_in: int, d_out: int, in_ax: str, out_ax: str,
     return specs
 
 
-def linear(p: Dict[str, jax.Array], x: jax.Array,
+def linear(p: dict[str, jax.Array], x: jax.Array,
            dtype=jnp.bfloat16) -> jax.Array:
     w = p["w"].astype(dtype)
     y = jnp.einsum("...i,io->...o", x.astype(dtype), w)
@@ -39,14 +39,14 @@ def linear(p: Dict[str, jax.Array], x: jax.Array,
     return y
 
 
-def norm_specs(d: int, kind: str = "rmsnorm") -> Dict[str, ParamSpec]:
+def norm_specs(d: int, kind: str = "rmsnorm") -> dict[str, ParamSpec]:
     specs = {"scale": ParamSpec((d,), ("embed",), init="ones")}
     if kind == "layernorm":
         specs["bias"] = ParamSpec((d,), ("embed",), init="zeros")
     return specs
 
 
-def apply_norm(p: Dict[str, jax.Array], x: jax.Array, kind: str = "rmsnorm",
+def apply_norm(p: dict[str, jax.Array], x: jax.Array, kind: str = "rmsnorm",
                eps: float = 1e-5, dtype=jnp.bfloat16, rules=None) -> jax.Array:
     xf = x.astype(jnp.float32)
     if kind == "rmsnorm":
@@ -121,7 +121,7 @@ def sinusoidal_positions(positions: jax.Array, d_model: int) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def attention_specs(cfg) -> Dict[str, Any]:
+def attention_specs(cfg) -> dict[str, Any]:
     d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
     return {
         "wq": ParamSpec((d, h, dh), ("embed", "heads", "head_dim"),
@@ -170,7 +170,7 @@ def _repeat_kv(k: jax.Array, n_heads: int) -> jax.Array:
 
 
 def full_attention(q, k, v, q_offset: int = 0, causal: bool = True,
-                   kv_valid_len: Optional[jax.Array] = None) -> jax.Array:
+                   kv_valid_len: jax.Array | None = None) -> jax.Array:
     """Materialized-scores attention. q:(b,sq,h,dh) k,v:(b,sk,h,dh).
     kv_valid_len: scalar or (b,) per-sequence valid cache length."""
     dh = q.shape[-1]
@@ -308,10 +308,10 @@ def _bounded_scan(step, carry, n_dyn, n_max):
 
 
 def attention(p, x, cfg, positions, *, mode: str = "train",
-              cache: Optional[Dict[str, jax.Array]] = None,
-              cache_index: Optional[jax.Array] = None,
+              cache: dict[str, jax.Array] | None = None,
+              cache_index: jax.Array | None = None,
               dtype=jnp.bfloat16,
-              rules=None) -> Tuple[jax.Array, Optional[Dict]]:
+              rules=None) -> tuple[jax.Array, dict | None]:
     """GQA attention. mode: train | prefill | decode.
 
     decode: x is (b, 1, d); cache holds k/v (+ scales if int8) and is updated
@@ -354,7 +354,7 @@ def attention(p, x, cfg, positions, *, mode: str = "train",
 
 
 def init_kv_cache(batch: int, max_len: int, n_kv: int, d_head: int,
-                  dtype=jnp.bfloat16, quantized: bool = False) -> Dict:
+                  dtype=jnp.bfloat16, quantized: bool = False) -> dict:
     if quantized:
         return {
             "k": jnp.zeros((batch, max_len, n_kv, d_head), jnp.int8),
@@ -369,7 +369,7 @@ def init_kv_cache(batch: int, max_len: int, n_kv: int, d_head: int,
 
 
 def kv_cache_abstract(batch: int, max_len: int, n_kv: int, d_head: int,
-                      dtype=jnp.bfloat16, quantized: bool = False) -> Dict:
+                      dtype=jnp.bfloat16, quantized: bool = False) -> dict:
     c = init_kv_cache(1, 1, 1, 1, dtype, quantized)
     shapes = {
         "k": (batch, max_len, n_kv, d_head),
@@ -380,15 +380,15 @@ def kv_cache_abstract(batch: int, max_len: int, n_kv: int, d_head: int,
     return {k: jax.ShapeDtypeStruct(shapes[k], v.dtype) for k, v in c.items()}
 
 
-def _quantize_i8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+def _quantize_i8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
     scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
     scale = jnp.maximum(scale, 1e-8) / 127.0
     q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
     return q.astype(jnp.int8), scale
 
 
-def update_kv_cache(cache: Dict, k_new: jax.Array, v_new: jax.Array,
-                    index: jax.Array) -> Dict:
+def update_kv_cache(cache: dict, k_new: jax.Array, v_new: jax.Array,
+                    index: jax.Array) -> dict:
     """Insert one token (b, 1, kv, dh) at position `index` (scalar shared
     by the batch, or (b,) per-slot — continuous batching writes each
     sequence at its own depth)."""
@@ -415,7 +415,7 @@ def update_kv_cache(cache: Dict, k_new: jax.Array, v_new: jax.Array,
     return out
 
 
-def write_kv_prefix(cache: Dict, k: jax.Array, v: jax.Array) -> Dict:
+def write_kv_prefix(cache: dict, k: jax.Array, v: jax.Array) -> dict:
     out = dict(cache)
     pl = k.shape[1]
     if "k_scale" in cache:
@@ -431,7 +431,7 @@ def write_kv_prefix(cache: Dict, k: jax.Array, v: jax.Array) -> Dict:
     return out
 
 
-def read_kv_cache(cache: Dict, dtype=jnp.bfloat16):
+def read_kv_cache(cache: dict, dtype=jnp.bfloat16):
     if "k_scale" in cache:
         k = cache["k"].astype(jnp.float32) * cache["k_scale"]
         v = cache["v"].astype(jnp.float32) * cache["v_scale"]
@@ -443,7 +443,7 @@ def read_kv_cache(cache: Dict, dtype=jnp.bfloat16):
 # ---------------------------------------------------------------------------
 
 
-def mlp_specs(cfg) -> Dict[str, Any]:
+def mlp_specs(cfg) -> dict[str, Any]:
     d, f = cfg.d_model, cfg.d_ff
     out_scale = 1.0 / math.sqrt(2 * max(cfg.n_layers, 1))
     if cfg.mlp_type == "swiglu":

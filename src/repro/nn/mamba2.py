@@ -8,7 +8,7 @@ a short scan propagates the (heads, headdim, state) tensor.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +17,7 @@ from repro.nn.params import ParamSpec
 from repro.nn.sharding import gather_weight
 
 
-def mamba_dims(cfg) -> Dict[str, int]:
+def mamba_dims(cfg) -> dict[str, int]:
     d_inner = cfg.ssm_expand * cfg.d_model
     n_heads = d_inner // cfg.ssm_headdim
     return dict(
@@ -33,7 +33,7 @@ def mamba_dims(cfg) -> Dict[str, int]:
     )
 
 
-def mamba_specs(cfg) -> Dict[str, Any]:
+def mamba_specs(cfg) -> dict[str, Any]:
     d = cfg.d_model
     m = mamba_dims(cfg)
     out_scale = 1.0 / math.sqrt(2 * max(cfg.n_layers, 1))
@@ -57,10 +57,10 @@ def mamba_specs(cfg) -> Dict[str, Any]:
 def _segsum(logdec: jax.Array) -> jax.Array:
     """Stable segment-sum: logdec (..., l) -> (..., l, l) lower-tri cumsums,
     L[i, j] = sum(logdec[j+1 .. i]) for j <= i, -inf above the diagonal."""
-    l = logdec.shape[-1]
+    ln = logdec.shape[-1]
     cs = jnp.cumsum(logdec, axis=-1)
     diff = cs[..., :, None] - cs[..., None, :]
-    mask = jnp.tril(jnp.ones((l, l), bool), k=0)
+    mask = jnp.tril(jnp.ones((ln, ln), bool), k=0)
     return jnp.where(mask, diff, -jnp.inf)
 
 
@@ -156,9 +156,9 @@ def _split_in_proj(zxbcdt, m):
 
 
 def mamba_block(p, x, cfg, *, mode: str = "train",
-                cache: Optional[Dict[str, jax.Array]] = None,
+                cache: dict[str, jax.Array] | None = None,
                 dtype=jnp.bfloat16,
-                rules=None) -> Tuple[jax.Array, Optional[Dict]]:
+                rules=None) -> tuple[jax.Array, dict | None]:
     """Mamba-2 mixer. cache (decode): {"conv": (b, k-1, conv_dim),
     "ssm": (b, h, p, n)}."""
     m = mamba_dims(cfg)
@@ -224,7 +224,7 @@ def mamba_block(p, x, cfg, *, mode: str = "train",
     return y @ out_proj, new_cache
 
 
-def init_mamba_cache(batch: int, cfg, dtype=jnp.bfloat16) -> Dict:
+def init_mamba_cache(batch: int, cfg, dtype=jnp.bfloat16) -> dict:
     m = mamba_dims(cfg)
     return {
         "conv": jnp.zeros((batch, m["d_conv"] - 1, m["conv_dim"]), dtype),
@@ -233,7 +233,7 @@ def init_mamba_cache(batch: int, cfg, dtype=jnp.bfloat16) -> Dict:
     }
 
 
-def mamba_cache_abstract(batch: int, cfg, dtype=jnp.bfloat16) -> Dict:
+def mamba_cache_abstract(batch: int, cfg, dtype=jnp.bfloat16) -> dict:
     m = mamba_dims(cfg)
     return {
         "conv": jax.ShapeDtypeStruct(

@@ -20,7 +20,7 @@ experts. GShard does the same.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +29,7 @@ from repro.nn.params import ParamSpec
 from repro.nn.sharding import gather_weight, shard_activation
 
 
-def moe_specs(cfg) -> Dict[str, Any]:
+def moe_specs(cfg) -> dict[str, Any]:
     d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts + cfg.expert_pad
     out_scale = 1.0 / math.sqrt(2 * max(cfg.n_layers, 1))
     return {
@@ -53,7 +53,7 @@ def _capacity(tokens_per_group: int, n_experts: int, top_k: int,
 
 def moe(p, x: jax.Array, cfg, dtype=jnp.bfloat16,
         capacity_factor: float = None,
-        rules=None) -> Tuple[jax.Array, jax.Array]:
+        rules=None) -> tuple[jax.Array, jax.Array]:
     """x: (b, s, d) -> (y, aux_loss)."""
     b, s, d = x.shape
     e, k = cfg.n_experts, cfg.top_k

@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Callable, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -17,8 +17,8 @@ from repro.nn.sharding import LogicalRules, _resolve
 @dataclasses.dataclass(frozen=True)
 class ParamSpec:
     """Declarative description of one parameter tensor."""
-    shape: Tuple[int, ...]
-    logical_axes: Tuple[Optional[str], ...]
+    shape: tuple[int, ...]
+    logical_axes: tuple[str | None, ...]
     dtype: Any = jnp.float32
     init: str = "fan_in"          # fan_in | normal | zeros | ones | constant
     scale: float = 1.0            # stddev multiplier / constant value

@@ -10,13 +10,13 @@ This is the single knob the perf hillclimb turns: change the rules, re-lower.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Sequence, Tuple, Union
+from collections.abc import Sequence
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-MeshAxes = Union[None, str, Tuple[str, ...]]
-LogicalRules = Dict[str, MeshAxes]
+MeshAxes = None | str | tuple[str, ...]
+LogicalRules = dict[str, MeshAxes]
 
 # ---------------------------------------------------------------------------
 # Default rule tables. "pod" only exists on the multi-pod mesh; rules are
@@ -129,7 +129,7 @@ LONG_SERVE_RULES: LogicalRules = dict(
 )
 
 
-def _resolve(axes: Sequence[Optional[str]], rules: LogicalRules,
+def _resolve(axes: Sequence[str | None], rules: LogicalRules,
              mesh_axis_names: Sequence[str]) -> P:
     """Map logical axis names to a PartitionSpec, dropping conflicts."""
     used: set = set()
@@ -160,14 +160,14 @@ def _resolve(axes: Sequence[Optional[str]], rules: LogicalRules,
     return P(*out)
 
 
-def logical_to_pspec(axes: Sequence[Optional[str]],
+def logical_to_pspec(axes: Sequence[str | None],
                      rules: LogicalRules,
-                     mesh: Optional[Mesh] = None) -> P:
+                     mesh: Mesh | None = None) -> P:
     names = mesh.axis_names if mesh is not None else _live_mesh_axis_names()
     return _resolve(axes, rules, names)
 
 
-def resolve_sized(axes: Sequence[Optional[str]], rules: LogicalRules,
+def resolve_sized(axes: Sequence[str | None], rules: LogicalRules,
                   mesh: Mesh, shape: Sequence[int]) -> P:
     """Like _resolve, but drops mesh axes that do not evenly divide the
     dimension (pjit argument shardings require divisibility — e.g. qwen's
@@ -216,21 +216,21 @@ def resolve_sized(axes: Sequence[Optional[str]], rules: LogicalRules,
     return P(*out)
 
 
-def _live_mesh() -> Optional[Mesh]:
+def _live_mesh() -> Mesh | None:
     env_mesh = jax._src.mesh.thread_resources.env.physical_mesh
     if env_mesh.empty:
         return None
     return env_mesh
 
 
-def _live_mesh_axis_names() -> Tuple[str, ...]:
+def _live_mesh_axis_names() -> tuple[str, ...]:
     m = _live_mesh()
     return tuple(m.axis_names) if m is not None else ()
 
 
-def shard_activation(x, axes: Sequence[Optional[str]],
+def shard_activation(x, axes: Sequence[str | None],
                      rules: LogicalRules,
-                     mesh: Optional[Mesh] = None):
+                     mesh: Mesh | None = None):
     """with_sharding_constraint by logical axis names; no-op outside a mesh
     or with an empty rules table (an empty table means "unmanaged", not
     "replicate everything"). Size-aware: mesh axes that don't divide a dim
@@ -244,7 +244,7 @@ def shard_activation(x, axes: Sequence[Optional[str]],
     return jax.lax.with_sharding_constraint(x, spec)
 
 
-def named_sharding(mesh: Mesh, axes: Sequence[Optional[str]],
+def named_sharding(mesh: Mesh, axes: Sequence[str | None],
                    rules: LogicalRules) -> NamedSharding:
     return NamedSharding(mesh, _resolve(axes, rules, mesh.axis_names))
 
@@ -254,7 +254,7 @@ def named_sharding(mesh: Mesh, axes: Sequence[Optional[str]],
 GATHERED_AXES = ("embed",)
 
 
-def gather_weight(w, axes: Sequence[Optional[str]], rules: LogicalRules):
+def gather_weight(w, axes: Sequence[str | None], rules: LogicalRules):
     """Manual FSDP: re-constrain a (compute-dtype) weight to its gathered,
     TP-only sharding at the point of use.
 

@@ -1,9 +1,6 @@
-from repro.optim.optimizers import (  # noqa: F401
-    Optimizer,
-    adagrad,
-    adamw,
-    clip_by_global_norm,
-    sgd,
+from repro.optim.compression import (  # noqa: F401
+    compress_decompress,
+    error_feedback_compress,
 )
 from repro.optim.easgd import (  # noqa: F401
     EASGDState,
@@ -11,7 +8,10 @@ from repro.optim.easgd import (  # noqa: F401
     easgd_sync,
     local_sgd_sync,
 )
-from repro.optim.compression import (  # noqa: F401
-    compress_decompress,
-    error_feedback_compress,
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    adagrad,
+    adamw,
+    clip_by_global_norm,
+    sgd,
 )

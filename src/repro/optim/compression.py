@@ -9,7 +9,7 @@ before the next compression.
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +25,7 @@ def compress_decompress(g: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
 
 
 def error_feedback_compress(grads: Any, residual: Any,
-                            dtype=jnp.bfloat16) -> Tuple[Any, Any]:
+                            dtype=jnp.bfloat16) -> tuple[Any, Any]:
     """Returns (compressed_grads, new_residual). residual pytree mirrors
     grads (fp32)."""
     def one(g, r):

@@ -15,7 +15,8 @@ state falls out of fsdp param sharding for free).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional, Tuple
+from collections.abc import Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +25,7 @@ import jax.numpy as jnp
 @dataclasses.dataclass(frozen=True)
 class Optimizer:
     init: Callable[[Any], Any]
-    apply: Callable[[Any, Any, Any, jax.Array], Tuple[Any, Any]]
+    apply: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
     name: str = "opt"
 
 
@@ -80,7 +81,7 @@ def adagrad(lr: float, eps: float = 1e-8) -> Optimizer:
 
 def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
           weight_decay: float = 0.0,
-          clip_norm: Optional[float] = 1.0) -> Optimizer:
+          clip_norm: float | None = 1.0) -> Optimizer:
     """AdamW with decoupled weight decay and optional global-norm clipping,
     fp32 moments regardless of param dtype."""
     def init(params):

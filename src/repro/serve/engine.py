@@ -16,14 +16,13 @@ from __future__ import annotations
 
 import dataclasses
 import queue
-from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models.lm import decode_step, init_caches, prefill_step
+from repro.models.lm import decode_step, init_caches
 from repro.nn.sharding import SERVE_RULES, LogicalRules
 
 
@@ -32,7 +31,7 @@ class Request:
     uid: int
     prompt: np.ndarray                    # (prompt_len,) int32
     max_new_tokens: int = 32
-    generated: Optional[List[int]] = None
+    generated: list[int] | None = None
 
 
 class ServeEngine:
@@ -49,11 +48,11 @@ class ServeEngine:
         self.eos_id = eos_id
         self.greedy = greedy
         self.caches = init_caches(cfg, batch_slots, max_len)
-        self.slot_req: List[Optional[Request]] = [None] * batch_slots
+        self.slot_req: list[Request | None] = [None] * batch_slots
         self.slot_pos = np.zeros(batch_slots, np.int32)
         self.slot_budget = np.zeros(batch_slots, np.int32)
         self.queue: "queue.Queue[Request]" = queue.Queue()
-        self.completed: Dict[int, List[int]] = {}
+        self.completed: dict[int, list[int]] = {}
         self._decode = jax.jit(
             lambda p, t, c, i: decode_step(p, t, c, i, cfg, rules))
         self.steps_run = 0
@@ -166,7 +165,7 @@ class DLRMEngine:
 
         self._fwd = jax.jit(fwd)
 
-    def predict(self, batch: Dict) -> np.ndarray:
+    def predict(self, batch: dict) -> np.ndarray:
         """batch: {"dense" (B, n_dense), "idx" (B, F, L) OFFSET global rows}.
         Returns (B,) click probabilities."""
         local = self.cc.prepare(self.state, batch["idx"], train=False)

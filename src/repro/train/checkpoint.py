@@ -22,7 +22,7 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import ml_dtypes
@@ -47,7 +47,7 @@ class CheckpointManager:
         self.directory = directory
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
-        self._thread: Optional[threading.Thread] = None
+        self._thread: threading.Thread | None = None
 
     # -- save ---------------------------------------------------------------
 
@@ -106,15 +106,15 @@ class CheckpointManager:
 
     # -- restore --------------------------------------------------------------
 
-    def latest_step(self) -> Optional[int]:
+    def latest_step(self) -> int | None:
         latest = os.path.join(self.directory, "LATEST")
         if not os.path.exists(latest):
             return None
         with open(latest) as f:
             return int(f.read().strip().split("_")[1])
 
-    def restore(self, example_tree: Any, step: Optional[int] = None,
-                shardings: Optional[Any] = None) -> Any:
+    def restore(self, example_tree: Any, step: int | None = None,
+                shardings: Any | None = None) -> Any:
         """example_tree fixes the pytree structure; shardings (optional,
         matching pytree of jax.sharding.Sharding) re-places leaves — pass the
         NEW mesh's shardings for elastic restore."""

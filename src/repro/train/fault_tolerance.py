@@ -13,7 +13,7 @@ from __future__ import annotations
 import collections
 import signal
 import time
-from typing import Callable, Deque, List, Optional
+from collections.abc import Callable
 
 
 class PreemptionHandler:
@@ -59,8 +59,8 @@ class StragglerDetector:
         self.window = window
         self.z_threshold = z_threshold
         self.warmup = warmup
-        self.times: Deque[float] = collections.deque(maxlen=window)
-        self.flagged_steps: List[int] = []
+        self.times: collections.deque[float] = collections.deque(maxlen=window)
+        self.flagged_steps: list[int] = []
         self._step = 0
 
     def record(self, seconds: float) -> bool:
@@ -92,9 +92,9 @@ class StepTimer:
 def run_resilient_loop(step_fn: Callable, n_steps: int,
                        checkpoint_cb: Callable[[int], None],
                        checkpoint_every: int,
-                       preemption: Optional[PreemptionHandler] = None,
-                       straggler: Optional[StragglerDetector] = None,
-                       on_straggler: Optional[Callable[[int], None]] = None,
+                       preemption: PreemptionHandler | None = None,
+                       straggler: StragglerDetector | None = None,
+                       on_straggler: Callable[[int], None] | None = None,
                        start_step: int = 0) -> int:
     """Generic resilient loop driver; returns the last completed step.
 

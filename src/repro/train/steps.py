@@ -13,7 +13,7 @@ embedding-update scatter with the dense backward's collectives.
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +25,7 @@ from repro.kernels import ops as kernel_ops
 from repro.kernels import ref as kref
 from repro.models.lm import lm_loss
 from repro.nn.sharding import (TRAIN_RULES, LogicalRules,
-                               _live_mesh_axis_names, shard_activation)
+                               _live_mesh_axis_names)
 from repro.optim.optimizers import Optimizer
 
 
@@ -159,16 +159,16 @@ def build_dlrm_train_step(cfg: DLRMConfig, ebc: EmbeddingBagCollection,
         def local(mega_sh, accum_sh, idx_loc, g_loc):
             shard = jax.lax.axis_index(model_axis)
             lo = shard * rows_local
-            b, f, l = idx_loc.shape
+            b, f, lk = idx_loc.shape
 
             def add_feature(gsum, xs):
                 idx_f, g_f = xs
                 inside = (idx_f >= lo) & (idx_f < lo + rows_local)
                 loc = jnp.where(inside, idx_f - lo, rows_local)  # oob drops
-                upd = jnp.broadcast_to(g_f[:, None, :], (b, l, d))
+                upd = jnp.broadcast_to(g_f[:, None, :], (b, lk, d))
                 upd = jnp.where(inside[..., None], upd, 0.0)
                 return gsum.at[loc.reshape(-1)].add(
-                    upd.reshape(b * l, d), mode="drop"), None
+                    upd.reshape(b * lk, d), mode="drop"), None
 
             gsum0 = pcast(                         # mark device-varying for
                 jnp.zeros((rows_local, d), jnp.float32),
@@ -206,15 +206,15 @@ def build_dlrm_train_step(cfg: DLRMConfig, ebc: EmbeddingBagCollection,
         The scatter scans over features so the (B, L, d) broadcast of each
         bag's gradient never materializes for all 127 tables at once."""
         h, d = mega.shape
-        b, f, l = idx.shape
+        b, f, lk = idx.shape
 
         def add_feature(gsum, xs):
-            idx_f, g_f = xs                   # (b, l), (b, d)
+            idx_f, g_f = xs                   # (b, lk), (b, d)
             valid = idx_f >= 0
             safe = jnp.where(valid, idx_f, h)
-            upd = jnp.broadcast_to(g_f[:, None, :], (b, l, d))
+            upd = jnp.broadcast_to(g_f[:, None, :], (b, lk, d))
             upd = jnp.where(valid[..., None], upd, 0.0)
-            gsum = gsum.at[safe.reshape(-1)].add(upd.reshape(b * l, d))
+            gsum = gsum.at[safe.reshape(-1)].add(upd.reshape(b * lk, d))
             return gsum, None
 
         gsum0 = jnp.zeros((h + 1, d), jnp.float32)
@@ -255,7 +255,7 @@ def build_dlrm_train_step(cfg: DLRMConfig, ebc: EmbeddingBagCollection,
 
 
 def dlrm_init_state(ebc: EmbeddingBagCollection, dense_opt: Optimizer,
-                    params: Dict) -> Dict:
+                    params: dict) -> dict:
     return {
         "dense": dense_opt.init({"bottom": params["bottom"],
                                  "top": params["top"]}),
@@ -265,6 +265,29 @@ def dlrm_init_state(ebc: EmbeddingBagCollection, dense_opt: Optimizer,
 # ---------------------------------------------------------------------------
 # DLRM with the cached embedding tier (core/cache.py)
 # ---------------------------------------------------------------------------
+
+
+def _build_cached_inner(cfg: DLRMConfig, cc, dense_opt: Optimizer,
+                        sparse_lr: float, sparse_eps: float,
+                        interpret: bool, rules: LogicalRules) -> Callable:
+    """Jitted device half shared by the sync and async cached steps:
+    forward/backward/update entirely against the (donated) cache slab."""
+
+    def inner(dense_params, dense_state, cache, cache_accum, batch, step_idx):
+        params = {**dense_params, "emb": {"mega": cache}}
+        loss, g_dense, (idx, g_pooled) = dlrm_grads(
+            params, batch, cfg, cc.ebc, interpret, rules)
+        new_dense, new_dense_state = dense_opt.apply(
+            dense_params, g_dense, dense_state, step_idx)
+        flat_idx, flat_g = cc.ebc.per_lookup_grads(idx, g_pooled)
+        new_cache, new_accum = kernel_ops.rowwise_adagrad_update(
+            cache, cache_accum, flat_idx, flat_g, sparse_lr, sparse_eps,
+            use_kernel=cc.use_kernel, interpret=interpret)
+        lookups = jnp.sum(batch["idx"] >= 0).astype(jnp.float32)
+        return (new_dense, new_dense_state, new_cache, new_accum,
+                {"loss": loss, "lookups": lookups})
+
+    return jax.jit(inner, donate_argnums=(2, 3))
 
 
 def build_cached_dlrm_train_step(cfg: DLRMConfig, cc, dense_opt: Optimizer,
@@ -291,21 +314,8 @@ def build_cached_dlrm_train_step(cfg: DLRMConfig, cc, dense_opt: Optimizer,
     device work is dispatched, so the capacity-tier fetch overlaps compute.
     """
 
-    def inner(dense_params, dense_state, cache, cache_accum, batch, step_idx):
-        params = {**dense_params, "emb": {"mega": cache}}
-        loss, g_dense, (idx, g_pooled) = dlrm_grads(
-            params, batch, cfg, cc.ebc, interpret, rules)
-        new_dense, new_dense_state = dense_opt.apply(
-            dense_params, g_dense, dense_state, step_idx)
-        flat_idx, flat_g = cc.ebc.per_lookup_grads(idx, g_pooled)
-        new_cache, new_accum = kernel_ops.rowwise_adagrad_update(
-            cache, cache_accum, flat_idx, flat_g, sparse_lr, sparse_eps,
-            use_kernel=cc.use_kernel, interpret=interpret)
-        lookups = jnp.sum(batch["idx"] >= 0).astype(jnp.float32)
-        return (new_dense, new_dense_state, new_cache, new_accum,
-                {"loss": loss, "lookups": lookups})
-
-    inner_jit = jax.jit(inner, donate_argnums=(2, 3))
+    inner_jit = _build_cached_inner(cfg, cc, dense_opt, sparse_lr,
+                                    sparse_eps, interpret, rules)
 
     def step(params, state, cache_state, batch, step_idx, next_batch=None):
         local = cc.prepare(cache_state, batch["idx"], train=True)
@@ -325,8 +335,68 @@ def build_cached_dlrm_train_step(cfg: DLRMConfig, cc, dense_opt: Optimizer,
     return step
 
 
-def cached_dlrm_init_state(cc, dense_opt: Optimizer, params: Dict) -> Dict:
+def cached_dlrm_init_state(cc, dense_opt: Optimizer, params: dict) -> dict:
     """Dense-only optimizer state; the sparse accumulator lives in the
     CacheState tiers (cap_accum / cache_accum)."""
     return {"dense": dense_opt.init({"bottom": params["bottom"],
                                      "top": params["top"]})}
+
+
+def build_async_cached_dlrm_train_step(cfg: DLRMConfig, cc,
+                                       dense_opt: Optimizer,
+                                       sparse_lr: float = 0.05,
+                                       sparse_eps: float = 1e-8,
+                                       interpret: bool = False,
+                                       rules: LogicalRules = TRAIN_RULES,
+                                       strict_sync: bool = False) -> Callable:
+    """Overlapped cached train step: batch k+1's capacity-tier fetch runs
+    while batch k's dense forward/backward executes (docs/cache.md "Async
+    fetch stream"). Per call:
+
+      1. `take_async` — batch k's staged plan (made during step k-1) is
+         popped and every pending shadow fetch COMMITS: a cheap on-device
+         row swap, dispatched after batch k-1's update so dirty-victim
+         writebacks carry post-update values.
+      2. the jitted device half runs against the committed cache slab;
+      3. `stage_async(next_batch)` — batch k+1's miss rows start fetching
+         into a fresh shadow slab, off the critical path;
+      4. optional `prefetch_rows` (k-step pipeline lookahead, see
+         data.lookahead_rows) are queued best-effort behind it.
+
+    `strict_sync=True` is the fallback flag: every batch is planned and
+    committed inside its own step (no overlap, no staged state) — the
+    behaviour is bit-identical either way (asserted in
+    tests/test_cache_async.py), only the schedule changes.
+
+    Returns step(params, state, astate, batch, step_idx, next_batch=None,
+    prefetch_rows=None) -> (params, state, metrics); astate is an
+    AsyncCacheState from `cc.init_async_state`; batch carries OFFSET global
+    indices (e.g. from data.dedup_indices_hook).
+    """
+
+    inner_jit = _build_cached_inner(cfg, cc, dense_opt, sparse_lr,
+                                    sparse_eps, interpret, rules)
+
+    def step(params, state, astate, batch, step_idx, next_batch=None,
+             prefetch_rows=None):
+        local = cc.take_async(astate, batch["idx"], train=True)
+        dev_batch = {**batch, "idx": jnp.asarray(local)}
+        dev_batch.pop("uniq_rows", None)
+        new_dense, new_dense_state, new_cache, new_accum, metrics = inner_jit(
+            params, state["dense"], astate.cache, astate.cache_accum,
+            dev_batch, step_idx)
+        cc.mark_updated(astate, new_cache, new_accum)
+        # snapshot BEFORE staging batch k+1 so step k's metrics cover only
+        # batches that ran — identical between overlapped and strict_sync
+        # schedules (the point of the fallback flag is A/B comparison)
+        metrics = {**metrics, **astate.stats.snapshot()}
+        if not strict_sync and next_batch is not None:
+            # dispatched after the jitted step: the fetch only READS the
+            # tiers, so it overlaps the in-flight compute; its commit waits
+            # for the next step boundary
+            cc.stage_async(astate, next_batch["idx"], train=True)
+        if not strict_sync and prefetch_rows is not None:
+            cc.stage_rows(astate, prefetch_rows)
+        return new_dense, {"dense": new_dense_state}, metrics
+
+    return step

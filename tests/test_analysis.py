@@ -8,7 +8,6 @@ XLA_FLAGS here — see conftest).
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.analysis import CollectiveAnalysis, StableHloAnalysis

@@ -1,0 +1,88 @@
+"""benchmarks/diff_bench.py: the CI bench-regression gate."""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.diff_bench import diff, load_rows, main  # noqa: E402
+
+
+def _rows(**kv):
+    return {name: (us, drv) for name, (us, drv) in kv.items()}
+
+
+def test_hit_rate_drop_flagged_rise_ignored():
+    base = _rows(**{"cache/hit_a1.05_c10pct": (1000.0, 0.80)})
+    # 15% relative drop > 10% threshold
+    regs, _ = diff(base, _rows(**{"cache/hit_a1.05_c10pct": (1000.0, 0.68)}))
+    assert len(regs) == 1 and "derived" in regs[0]
+    # improvement never flags
+    regs, _ = diff(base, _rows(**{"cache/hit_a1.05_c10pct": (1000.0, 0.95)}))
+    assert regs == []
+    # drop within threshold passes
+    regs, _ = diff(base, _rows(**{"cache/hit_a1.05_c10pct": (1000.0, 0.75)}))
+    assert regs == []
+
+
+def test_overlap_rows_gated_at_the_time_threshold():
+    """Overlap efficiency is a ratio of wall-clock times — it regresses at
+    the (relaxable) time threshold, not the strict hit-rate one."""
+    base = _rows(**{"cache/overlap_b4096_c10pct": (150000.0, 0.95)})
+    cur = _rows(**{"cache/overlap_b4096_c10pct": (150000.0, 0.40)})
+    regs, _ = diff(base, cur)
+    assert len(regs) == 1                           # 58% drop > 10% default
+    regs, _ = diff(base, cur, time_threshold=0.75)  # CI's relaxed gate
+    assert regs == []
+    # a hit-rate row keeps the strict threshold even when time is relaxed
+    base = _rows(**{"cache/hit_a1.05_c10pct": (1000.0, 0.80)})
+    cur = _rows(**{"cache/hit_a1.05_c10pct": (1000.0, 0.60)})
+    regs, _ = diff(base, cur, time_threshold=0.75)
+    assert len(regs) == 1
+
+
+def test_step_time_rise_flagged_and_noise_floor_respected():
+    base = _rows(**{"cache/step_cached_10pct": (10_000.0, 5.0),
+                    "kernels/tiny": (8.0, 1.0)})
+    cur = _rows(**{"cache/step_cached_10pct": (13_000.0, 5.0),
+                   "kernels/tiny": (24.0, 1.0)})      # 3x but under min_us
+    regs, _ = diff(base, cur)
+    assert len(regs) == 1
+    assert "step_cached" in regs[0]
+    # relaxed CI threshold lets the same rise through
+    regs, _ = diff(base, cur, time_threshold=0.50)
+    assert regs == []
+
+
+def test_added_and_removed_rows_warn_not_fail():
+    base = _rows(old=(100.0, 1.0))
+    cur = _rows(new=(100.0, 1.0))
+    regs, warns = diff(base, cur)
+    assert regs == []
+    assert len(warns) == 2
+
+
+def test_quality_row_also_checked_for_time():
+    base = _rows(**{"cache/hit_a1.2_c25pct": (10_000.0, 0.9)})
+    cur = _rows(**{"cache/hit_a1.2_c25pct": (20_000.0, 0.9)})
+    regs, _ = diff(base, cur)
+    assert len(regs) == 1 and "us_per_call" in regs[0]
+
+
+def test_cli_end_to_end(tmp_path):
+    def write(name, rows):
+        p = tmp_path / name
+        p.write_text(json.dumps(
+            {"rows": [{"name": n, "us_per_call": u, "derived": d}
+                      for n, (u, d) in rows.items()], "failures": 0}))
+        return str(p)
+
+    base = write("base.json", _rows(**{"cache/hit_x": (1000.0, 0.8),
+                                       "cache/step_y": (5000.0, 10.0)}))
+    good = write("good.json", _rows(**{"cache/hit_x": (1010.0, 0.81),
+                                       "cache/step_y": (5100.0, 10.0)}))
+    bad = write("bad.json", _rows(**{"cache/hit_x": (1000.0, 0.5),
+                                     "cache/step_y": (5000.0, 10.0)}))
+    assert main([base, good]) == 0
+    assert main([base, bad]) == 1
+    assert load_rows(base)["cache/hit_x"] == (1000.0, 0.8)

@@ -3,7 +3,6 @@ short end-to-end training run whose loss must decrease (planted signal)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_smoke_config
 from repro.core import EmbeddingBagCollection, dlrm_param_specs

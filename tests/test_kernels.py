@@ -20,16 +20,16 @@ def _tol(dtype):
 
 
 @pytest.mark.parametrize("dtype", DTYPES)
-@pytest.mark.parametrize("h,d,b,l", [
+@pytest.mark.parametrize("h,d,b,lk", [
     (64, 8, 4, 3),        # tiny
     (97, 48, 16, 7),      # non-128 d, odd sizes
-    (257, 128, 8, 32),    # lane-aligned d, truncation-sized l
+    (257, 128, 8, 32),    # lane-aligned d, truncation-sized lk
     (33, 200, 5, 1),      # single lookup, d > 128
 ])
 @pytest.mark.parametrize("mode", ["sum", "mean"])
-def test_embedding_bag_kernel_matches_ref(rng, h, d, b, l, mode, dtype):
+def test_embedding_bag_kernel_matches_ref(rng, h, d, b, lk, mode, dtype):
     table = jnp.asarray(rng.randn(h, d), dtype)
-    idx = jnp.asarray(rng.randint(-1, h, size=(b, l)), jnp.int32)
+    idx = jnp.asarray(rng.randint(-1, h, size=(b, lk)), jnp.int32)
     out_k = ops.embedding_bag(table, idx, mode, None, True)
     out_r = ref.embedding_bag_ref(table, idx, mode)
     np.testing.assert_allclose(np.asarray(out_k, np.float32),

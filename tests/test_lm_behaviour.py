@@ -156,7 +156,7 @@ def test_per_slot_decode_positions_match_isolated():
     """Batched decode with heterogeneous per-slot positions must equal each
     sequence decoded alone (continuous-batching correctness)."""
     import numpy as np
-    from repro.models.lm import decode_step, init_caches, lm_forward
+    from repro.models.lm import decode_step, init_caches
     cfg = get_smoke_config("stablelm-1.6b")
     params = init_params(lm_param_specs(cfg), jax.random.PRNGKey(5))
     rngn = np.random.RandomState(3)

@@ -7,7 +7,6 @@ import os
 import subprocess
 import sys
 
-import pytest
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
@@ -178,6 +177,74 @@ assert out["w"].sharding.mesh.shape["data"] == 2   # lives on the NEW mesh
 print("ELASTIC_OK")
 """)
     assert "ELASTIC_OK" in out
+
+
+def test_async_cached_step_on_data_mesh_routes_shared_rows():
+    """The overlapped cached train step on the 8-fake-device mesh: the
+    batch is sharded over the data axis with the SAME global row planted on
+    every replica's shard, so gradient aggregation + dirty writeback must
+    route duplicate-row contributions across replicas. The materialized
+    capacity tier must match the single-device run exactly."""
+    out = _run("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.compat import make_mesh
+from repro.configs import get_smoke_config
+from repro.core.cache import CachedEmbeddingBagCollection
+from repro.core.dlrm import dlrm_param_specs
+from repro.core.embedding import EmbeddingBagCollection
+from repro.data.synthetic import make_dlrm_batch
+from repro.nn.params import init_params
+from repro.optim import adagrad
+from repro.train.steps import (build_async_cached_dlrm_train_step,
+                               cached_dlrm_init_state)
+
+cfg = get_smoke_config("dlrm-m1")
+ebc = EmbeddingBagCollection.build(cfg, n_shards=1, strategy="replicated")
+params = init_params(dlrm_param_specs(cfg, ebc), jax.random.PRNGKey(0))
+opt = adagrad(0.01)
+mesh = make_mesh((8,), ("data",))
+N, B = 4, 16
+batches = []
+for t in range(N):
+    raw = make_dlrm_batch(cfg, B, step=t)
+    idx = np.array(ebc.offset_indices(jnp.asarray(raw["idx"])))
+    hot = int(idx[idx >= 0][0])
+    idx[:, 0, 0] = hot          # same row on every data-parallel replica
+    batches.append({"dense": jnp.asarray(raw["dense"]), "idx": idx,
+                    "label": jnp.asarray(raw["label"])})
+
+def run(sharded):
+    cc = CachedEmbeddingBagCollection.build(cfg, cache_rows=512)
+    dense = {"bottom": params["bottom"], "top": params["top"]}
+    state = cached_dlrm_init_state(cc, opt, params)
+    astate = cc.init_async_state(params["emb"]["mega"])
+    step = build_async_cached_dlrm_train_step(cfg, cc, opt)
+    losses = []
+    for t in range(N):
+        b = dict(batches[t])
+        if sharded:
+            b["dense"] = jax.device_put(
+                b["dense"], NamedSharding(mesh, P("data", None)))
+            b["label"] = jax.device_put(
+                b["label"], NamedSharding(mesh, P("data")))
+        nxt = batches[t + 1] if t + 1 < N else None
+        with mesh:
+            dense, state, m = step(dense, state, astate, b,
+                                   jnp.asarray(t, jnp.int32),
+                                   next_batch=nxt)
+        losses.append(float(m["loss"]))
+    mega, accum = cc.materialize_async(astate)
+    return losses, np.asarray(mega), np.asarray(accum)
+
+l1, m1, a1 = run(False)
+l2, m2, a2 = run(True)
+np.testing.assert_allclose(l1, l2, rtol=1e-6, atol=1e-7)
+np.testing.assert_allclose(m1, m2, rtol=1e-6, atol=1e-6)
+np.testing.assert_allclose(a1, a2, rtol=1e-6, atol=1e-6)
+print("ASYNC_MESH_OK")
+""")
+    assert "ASYNC_MESH_OK" in out
 
 
 def test_pallas_embedding_bag_inside_shard_map():

@@ -1,4 +1,6 @@
 """Hypothesis property tests on the system's invariants."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -6,13 +8,21 @@ import pytest
 
 pytest.importorskip("hypothesis",
                     reason="hypothesis not installed (pip install .[dev])")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
-from repro.core.placement import plan_placement
-from repro.kernels import ref
-from repro.nn.layers import blockwise_attention, blockwise_attention_skip, \
-    full_attention
-from repro.nn.mamba2 import ssd_chunked, ssd_decode_step
+from repro.configs import get_smoke_config  # noqa: E402
+from repro.core.cache import CachedEmbeddingBagCollection  # noqa: E402
+from repro.core.embedding import EmbeddingBagCollection  # noqa: E402
+from repro.core.placement import plan_placement  # noqa: E402
+from repro.kernels import ops as kernel_ops  # noqa: E402
+from repro.kernels import ref  # noqa: E402
+from repro.nn.layers import (  # noqa: E402
+    blockwise_attention,
+    blockwise_attention_skip,
+    full_attention,
+)
+from repro.nn.mamba2 import ssd_chunked, ssd_decode_step  # noqa: E402
 
 # ---------------------------------------------------------------------------
 # placement planner invariants
@@ -30,7 +40,7 @@ from repro.nn.mamba2 import ssd_chunked, ssd_decode_step
 def test_placement_invariants(n, n_shards, seed, strategy):
     rng = np.random.RandomState(seed)
     hashes = [int(h) for h in rng.randint(30, 200_000, size=n)]
-    loads = [float(l) for l in rng.uniform(1, 60, size=n)]
+    loads = [float(ld) for ld in rng.uniform(1, 60, size=n)]
     budget = max(hashes) * 64 * 4 * 2 + 1     # every table fits one shard
     plan = plan_placement(hashes, loads, 64, n_shards, budget,
                           strategy=strategy)
@@ -63,7 +73,7 @@ def test_placement_load_balance_beats_naive(seed):
     rng = np.random.RandomState(seed)
     n, n_shards = 32, 8
     hashes = [int(h) for h in rng.randint(1000, 100_000, size=n)]
-    loads = [float(l) for l in np.sort(rng.pareto(1.2, size=n) * 10 + 1)]
+    loads = [float(ld) for ld in np.sort(rng.pareto(1.2, size=n) * 10 + 1)]
     budget = sum(hashes) * 64 * 4.0          # capacity not binding
     plan = plan_placement(hashes, loads, 64, n_shards, budget,
                           strategy="table_wise")
@@ -80,13 +90,13 @@ def test_placement_load_balance_beats_naive(seed):
 
 @settings(max_examples=25, deadline=None)
 @given(seed=st.integers(0, 2**31 - 1), b=st.integers(1, 8),
-       l=st.integers(1, 9))
-def test_embedding_bag_linearity(seed, b, l):
+       lk=st.integers(1, 9))
+def test_embedding_bag_linearity(seed, b, lk):
     """sum-pooled lookup is linear in the table."""
     rng = np.random.RandomState(seed)
     t1 = jnp.asarray(rng.randn(20, 12), jnp.float32)
     t2 = jnp.asarray(rng.randn(20, 12), jnp.float32)
-    idx = jnp.asarray(rng.randint(-1, 20, size=(b, l)), jnp.int32)
+    idx = jnp.asarray(rng.randint(-1, 20, size=(b, lk)), jnp.int32)
     lhs = ref.embedding_bag_ref(t1 + t2, idx)
     rhs = ref.embedding_bag_ref(t1, idx) + ref.embedding_bag_ref(t2, idx)
     np.testing.assert_allclose(lhs, rhs, rtol=1e-5, atol=1e-5)
@@ -106,6 +116,110 @@ def test_rowwise_adagrad_untouched_rows_frozen(seed):
     np.testing.assert_array_equal(np.asarray(a2)[10:], np.asarray(accum)[10:])
     assert np.all(np.asarray(a2)[np.unique(np.asarray(idx))]
                   >= np.asarray(accum)[np.unique(np.asarray(idx))])
+
+# ---------------------------------------------------------------------------
+# async cache stream invariants (core/cache.py AsyncCacheState)
+# ---------------------------------------------------------------------------
+
+
+def _tiny_cache_cfg(n_rows: int):
+    return dataclasses.replace(
+        get_smoke_config("dlrm-m1"), n_sparse_features=1,
+        hash_sizes=(n_rows,), mean_lookups=(4,),
+        bottom_mlp=(8, 16), top_mlp=(8, 1))
+
+
+def _assert_slot_map_bijection(astate):
+    """Invariant (a): the slot map is a bijection onto resident rows —
+    every occupied slot's row points back at it and vice versa, with no
+    phantom entries on either side."""
+    occupied = np.flatnonzero(astate.slot_row >= 0)
+    np.testing.assert_array_equal(
+        astate.row_slot[astate.slot_row[occupied]], occupied)
+    cached_rows = np.flatnonzero(astate.row_slot >= 0)
+    np.testing.assert_array_equal(
+        astate.slot_row[astate.row_slot[cached_rows]], cached_rows)
+    assert len(occupied) == len(cached_rows)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       n_rows=st.sampled_from([64, 96, 128]),
+       cache_rows=st.sampled_from([36, 48]),
+       steps=st.integers(3, 6))
+def test_async_cache_stream_invariants_and_bit_exactness(
+        seed, n_rows, cache_rows, steps):
+    """Random index streams through the overlapped schedule assert, per
+    step: (a) slot-map bijection, (b) LFU-with-decay never evicts a slot
+    the in-flight batch references, and after N steps (c) async and sync
+    paths leave bit-identical embeddings and AdaGrad state."""
+    rng = np.random.RandomState(seed)
+    cfg = _tiny_cache_cfg(n_rows)
+    ebc = EmbeddingBagCollection.build(cfg, n_shards=1,
+                                       strategy="replicated")
+    cc = CachedEmbeddingBagCollection.build(cfg, cache_rows=cache_rows)
+    mega = jnp.asarray(rng.randn(ebc.plan.total_rows, cfg.embed_dim),
+                       jnp.float32)
+    # (4, 1, 4) multi-hot batches with pads: working set <= 16 <= C/2, so
+    # double buffering never thrashes
+    idx_stream = [rng.randint(-1, n_rows, size=(4, 1, 4)).astype(np.int32)
+                  for _ in range(steps)]
+    grads = [jnp.asarray(rng.randn(4, 1, cfg.embed_dim), jnp.float32)
+             for _ in range(steps)]
+
+    astate = cc.init_async_state(mega)
+    local = cc.take_async(astate, idx_stream[0], train=True)
+    for k in range(steps):
+        _assert_slot_map_bijection(astate)
+        fi, fg = ebc.per_lookup_grads(jnp.asarray(local), grads[k])
+        new_cache, new_accum = kernel_ops.rowwise_adagrad_update(
+            astate.cache, astate.cache_accum, fi, fg, 0.05)
+        cc.mark_updated(astate, new_cache, new_accum)
+        if k + 1 < steps:
+            inflight = astate.inflight_mask.copy()
+            cc.stage_async(astate, idx_stream[k + 1], train=True)
+            staged = astate.pending[-1]
+            assert not inflight[staged.victim_slots].any()     # (b)
+            assert not inflight[staged.slots].any()
+            _assert_slot_map_bijection(astate)
+            local = cc.take_async(astate, idx_stream[k + 1], train=True)
+    mega_async, accum_async = cc.materialize_async(astate)
+
+    state = cc.init_state(mega)
+    for k in range(steps):
+        loc = cc.prepare(state, idx_stream[k], train=True)
+        fi, fg = ebc.per_lookup_grads(jnp.asarray(loc), grads[k])
+        new_cache, new_accum = kernel_ops.rowwise_adagrad_update(
+            state.cache, state.cache_accum, fi, fg, 0.05)
+        cc.mark_updated(state, new_cache, new_accum)
+    mega_sync, accum_sync = cc.materialize(state)
+    np.testing.assert_array_equal(np.asarray(mega_async),                # (c)
+                                  np.asarray(mega_sync))
+    np.testing.assert_array_equal(np.asarray(accum_async),
+                                  np.asarray(accum_sync))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_async_prefetch_preserves_bijection_and_never_evicts_staged(seed):
+    """stage_rows (k-step lookahead) keeps the slot map a bijection and
+    never evicts rows another queued plan admitted."""
+    rng = np.random.RandomState(seed)
+    cfg = _tiny_cache_cfg(96)
+    cc = CachedEmbeddingBagCollection.build(cfg, cache_rows=40)
+    mega = jnp.zeros((cc.ebc.plan.total_rows, cfg.embed_dim), jnp.float32)
+    astate = cc.init_async_state(mega)
+    first = rng.choice(96, size=20, replace=False)
+    assert cc.stage_rows(astate, first) == 20
+    staged_before = astate.row_slot[first].copy()
+    cc.stage_rows(astate, rng.randint(0, 96, size=60))
+    _assert_slot_map_bijection(astate)
+    # the first plan's rows kept their slots (protected while queued)
+    np.testing.assert_array_equal(astate.row_slot[first], staged_before)
+    cc.commit_async(astate)
+    _assert_slot_map_bijection(astate)
+    assert astate.resident <= 40
+
 
 # ---------------------------------------------------------------------------
 # attention invariances

@@ -167,7 +167,7 @@ def test_error_feedback_unbiased_over_time(rng):
     true_sum = np.zeros(64, np.float32)
     comp_sum = np.zeros(64, np.float32)
     residual = init_residual({"g": jnp.zeros(64)})
-    for i in range(50):
+    for _ in range(50):
         g = {"g": jnp.asarray(rng.randn(64) * 1e-3, jnp.float32)}
         comp, residual = error_feedback_compress(g, residual)
         true_sum += np.asarray(g["g"])
@@ -199,6 +199,175 @@ def test_pipeline_prefetch_and_order():
     steps = [next(pipe)[0] for _ in range(5)]
     pipe.close()
     assert steps == [0, 1, 2, 3, 4]
+
+
+# ---------------------------------------------------------------------------
+# data pipeline fault injection: a dying reader thread must surface in the
+# consumer within one step — never deadlock it — and shutdown must be clean
+# with batches still queued (the async-fetch-stream hardening, docs/cache.md)
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_transform_error_surfaces_in_consumer():
+    """The dedup hook runs inside the reader thread; its failure must
+    surface exactly like a generator failure."""
+    def bad_hook(batch):
+        if int(batch["x"][0]) >= 2:
+            raise ValueError("hook boom")
+        return batch
+
+    pipe = DataPipeline(lambda s: {"x": np.asarray([s])}, prefetch=1,
+                        transform=bad_hook)
+    assert next(pipe)[1]["x"][0] == 0
+    assert next(pipe)[1]["x"][0] == 1
+    with pytest.raises(RuntimeError, match="step 2"):
+        next(pipe)
+    pipe.close()
+
+
+def test_pipeline_reader_kill_surfaces_within_one_step():
+    """A BaseException 'kill' (SystemExit) inside the reader mid-stream
+    must reach the consumer as a RuntimeError promptly, not starve it."""
+    import time
+
+    def gen(step):
+        if step >= 1:
+            raise SystemExit("reader killed")
+        return {"x": np.asarray([step])}
+
+    pipe = DataPipeline(gen, prefetch=1)
+    assert next(pipe)[1]["x"][0] == 0
+    t0 = time.monotonic()
+    with pytest.raises(RuntimeError, match="step 1"):
+        next(pipe)
+    assert time.monotonic() - t0 < 2.0         # within one step, no hang
+    pipe.close()
+
+
+def test_pipeline_vanished_worker_detected_not_deadlocked():
+    """A reader that dies WITHOUT parking an error (thread gone, queue
+    empty) is caught by the liveness check instead of blocking forever."""
+    import time
+
+    class _DyingPipeline(DataPipeline):
+        def _worker(self):
+            return                              # vanishes silently
+
+    pipe = _DyingPipeline(lambda s: {"x": np.asarray([s])}, prefetch=1)
+    t0 = time.monotonic()
+    with pytest.raises(RuntimeError, match="died"):
+        next(pipe)
+    assert time.monotonic() - t0 < 2.0
+    pipe.close()
+
+
+def test_pipeline_peeked_batches_survive_worker_death():
+    """Good batches buffered by peek() before a vanished worker was
+    detected are still delivered, in order, BEFORE the failure raises —
+    completed work (e.g. a checkpointable final step) is not dropped."""
+    class _TwoThenVanish(DataPipeline):
+        def _worker(self):                      # parks NOTHING on exit
+            for step in range(2):
+                self._q.put((step, {"x": np.asarray([step])}))
+
+    pipe = _TwoThenVanish(lambda s: {}, prefetch=4)
+    assert pipe.peek(5) is None                 # buffers 0..1, sees death
+    assert next(pipe)[0] == 0                   # buffered batches delivered
+    assert next(pipe)[0] == 1
+    with pytest.raises(RuntimeError, match="died"):
+        next(pipe)                              # then the failure raises
+    pipe.close()
+
+
+def test_pipeline_dead_worker_observed_via_peek_still_fails_next():
+    """Regression: when a vanished worker is first observed by peek()
+    (the lookahead path), the liveness error must stay sticky — the next
+    __next__ raises RuntimeError, NOT a clean StopIteration that would
+    make the trainer exit as if the dataset ended."""
+    class _DyingPipeline(DataPipeline):
+        def _worker(self):
+            return
+
+    pipe = _DyingPipeline(lambda s: {"x": np.asarray([s])}, prefetch=1)
+    assert pipe.peek(0) is None                 # death observed softly here
+    with pytest.raises(RuntimeError, match="died"):
+        next(pipe)
+    with pytest.raises(RuntimeError, match="died"):
+        next(pipe)                              # and it stays sticky
+    pipe.close()
+    with pytest.raises(StopIteration):
+        next(pipe)                              # explicit close wins
+
+
+def test_pipeline_clean_shutdown_with_nonempty_queue():
+    """close() with a full prefetch queue (consumer never drained it) must
+    unblock the worker's put() and join the thread."""
+    import time
+
+    pipe = DataPipeline(lambda s: {"x": np.zeros(4)}, prefetch=4)
+    time.sleep(0.2)                             # let the queue fill
+    t0 = time.monotonic()
+    pipe.close()
+    assert time.monotonic() - t0 < 2.0
+    assert not pipe._thread.is_alive()
+    with pytest.raises(StopIteration):
+        next(pipe)
+
+
+def test_pipeline_peek_does_not_consume_and_preserves_order():
+    pipe = DataPipeline(lambda s: {"x": np.asarray([s])}, prefetch=2)
+    assert pipe.peek(1)["x"][0] == 1            # out-of-order peeks...
+    assert pipe.peek(0)["x"][0] == 0
+    steps = [next(pipe)[0] for _ in range(4)]   # ...don't disturb delivery
+    pipe.close()
+    assert steps == [0, 1, 2, 3]
+
+
+def test_pipeline_peek_past_failure_returns_none_then_next_raises():
+    """Peeking beyond the failure point degrades softly (None -> trainer
+    falls back to strict-sync); the error itself raises on consumption."""
+    def gen(step):
+        if step >= 1:
+            raise KeyError("boom")
+        return {"x": np.asarray([step])}
+
+    pipe = DataPipeline(gen, prefetch=1)
+    assert pipe.peek(0)["x"][0] == 0
+    assert pipe.peek(1) is None                 # failure peeked, not raised
+    assert pipe.peek(3) is None
+    assert next(pipe)[1]["x"][0] == 0           # good batch still delivered
+    with pytest.raises(RuntimeError, match="step 1"):
+        next(pipe)
+    pipe.close()
+
+
+def test_lookahead_rows_unions_upcoming_dedup_sets():
+    from repro.data.pipeline import dedup_indices_hook, lookahead_rows
+
+    def gen(step):
+        return {"idx": np.asarray([[[step, step + 1, -1]]], np.int32)}
+
+    pipe = DataPipeline(gen, prefetch=3,
+                        transform=dedup_indices_hook([100]))
+    rows = lookahead_rows(pipe, 3)
+    np.testing.assert_array_equal(rows, [100, 101, 102, 103])
+    assert next(pipe)[0] == 0                   # peeks consumed nothing
+    pipe.close()
+
+
+def test_lookahead_rows_stops_at_stream_failure():
+    from repro.data.pipeline import dedup_indices_hook, lookahead_rows
+
+    def gen(step):
+        if step >= 2:
+            raise ValueError("boom")
+        return {"idx": np.asarray([[[step, -1, -1]]], np.int32)}
+
+    pipe = DataPipeline(gen, prefetch=1,
+                        transform=dedup_indices_hook([0]))
+    rows = lookahead_rows(pipe, 5)              # union of the 2 good batches
+    np.testing.assert_array_equal(rows, [0, 1])
+    pipe.close()
 
 
 # ---------------------------------------------------------------------------

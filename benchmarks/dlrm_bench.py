@@ -11,6 +11,7 @@ from repro.core.design_space import reduced
 from repro.core.dlrm import dlrm_param_specs
 from repro.core.embedding import EmbeddingBagCollection
 from repro.data.synthetic import make_dlrm_batch
+from repro.launch.analysis import sparse_backward_traffic
 from repro.nn.params import init_params
 from repro.optim.optimizers import adagrad
 from repro.train.steps import build_dlrm_train_step, dlrm_init_state
@@ -43,4 +44,10 @@ def bench_dlrm(name: str, cfg: DLRMConfig, batch: int,
 
     us = time_fn(run, b)
     emit(name, us, batch / (us / 1e6))     # derived = examples/s
+    # roofline companion: intermediate-bytes reduction of the fused sparse
+    # backward this step runs vs the legacy per-lookup layout (analytic,
+    # deterministic — gated by diff_bench's "bytes" rule)
+    traffic = sparse_backward_traffic(batch, cfg.n_sparse_features,
+                                      cfg.truncation, cfg.embed_dim)
+    emit(f"{name}/sparse_backward_bytes", 0.0, traffic["reduction"])
     return us

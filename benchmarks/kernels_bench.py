@@ -1,7 +1,8 @@
 """Kernel microbenchmarks (section III-A.2 hot spots): oracle (jnp) path
 timing on CPU + a correctness pass of the Pallas body (interpret mode).
 derived = lookups/s (embedding_bag), pairs/s (dot_interaction),
-rows/s (rowwise_adagrad).
+rows/s (rowwise_adagrad), lookups/s (sparse_backward_*), x-reduction
+(sparse_backward_bytes).
 """
 import jax
 import jax.numpy as jnp
@@ -9,6 +10,8 @@ import numpy as np
 
 from benchmarks.common import emit, time_fn
 from repro.kernels import ops, ref
+from repro.kernels.sparse_plan import build_sparse_plan
+from repro.launch.analysis import sparse_backward_traffic
 
 
 def main():
@@ -39,10 +42,57 @@ def main():
     us = time_fn(fa, q)
     emit("kernels/flash_attention_ref", us, 2 * 256 * 256 / (us / 1e6))
 
-    # interpret-mode correctness spot check (body actually executes)
+    # fused sparse backward at truncation 32 (the training hot spot):
+    # legacy = what the cached step ran before the fused path (per-lookup
+    # broadcast + rowwise_adagrad_update's CPU ref, whose dense scatter
+    # scales with TABLE HEIGHT — hence the big h); fused buckets on int32
+    # indices only and scales with lookups; fused_planned consumes a
+    # pre-built plan (the data.sparse_plan_hook reader-thread path — the
+    # bucketing sort is off the step entirely). derived = lookups/s.
+    bb, ff, lk2, d2, h2 = 256, 8, 32, 128, 200_000
+    nl = bb * ff * lk2
+    idx3 = jnp.asarray(rng.randint(-1, h2, size=(bb, ff, lk2)), jnp.int32)
+    pooled = jnp.asarray(rng.randn(bb, ff, d2), jnp.float32)
+    tbl = jnp.asarray(rng.randn(h2, d2), jnp.float32)
+    acc = jnp.zeros((h2,), jnp.float32)
+
+    def legacy(t, a, i, g):
+        gb = jnp.broadcast_to(g[:, :, None, :], (bb, ff, lk2, d2))
+        return ops.rowwise_adagrad_update(
+            t, a, i.reshape(-1), gb.reshape(nl, d2), 0.05)
+
+    us = time_fn(jax.jit(legacy), tbl, acc, idx3, pooled)
+    emit("kernels/sparse_backward_legacy", us, nl / (us / 1e6))
+    fused = jax.jit(lambda t, a, i, g: ops.fused_sparse_backward(
+        t, a, i, g, 0.05))
+    us = time_fn(fused, tbl, acc, idx3, pooled)
+    emit("kernels/sparse_backward_fused", us, nl / (us / 1e6))
+    plan = jax.jit(build_sparse_plan)(idx3)
+    planned = jax.jit(lambda t, a, g, p: ops.fused_sparse_backward(
+        t, a, None, g, 0.05, plan=p))
+    us = time_fn(planned, tbl, acc, pooled, plan)
+    emit("kernels/sparse_backward_fused_planned", us, nl / (us / 1e6))
+    # deterministic intermediate-bytes row (launch/analysis.py model):
+    # derived = legacy/fused reduction factor, gated run-over-run by
+    # diff_bench's "bytes" rule
+    traffic = sparse_backward_traffic(bb, ff, lk2, d2)
+    emit("kernels/sparse_backward_bytes_reduction", 0.0,
+         traffic["reduction"])
+
+    # interpret-mode correctness spot checks (bodies actually execute)
     out_k = ops.embedding_bag(table[:512], idx[:8] % 512, "sum", None, True)
     out_r = ref.embedding_bag_ref(table[:512], idx[:8] % 512, "sum")
     np.testing.assert_allclose(out_k, out_r, rtol=1e-5, atol=1e-5)
+    idx_small = jnp.where(idx3[:2] >= 0, idx3[:2] % 256, -1)
+    ti, ai = ops.fused_sparse_backward(tbl[:256], acc[:256],
+                                       idx_small, pooled[:2], 0.05,
+                                       use_kernel=None, interpret=True)
+    tr2, ar2 = ops.fused_sparse_backward(tbl[:256], acc[:256],
+                                         idx_small, pooled[:2], 0.05)
+    np.testing.assert_allclose(np.asarray(ti), np.asarray(tr2),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(ai), np.asarray(ar2),
+                               rtol=1e-5, atol=1e-6)
     emit("kernels/pallas_interpret_check", 0.0, 1.0)
 
 

@@ -14,7 +14,8 @@ import os
 def load(dirname: str) -> list[dict]:
     recs = []
     for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
-        recs.append(json.load(open(f)))
+        with open(f) as fh:
+            recs.append(json.load(fh))
     return recs
 
 

@@ -1,17 +1,19 @@
 """jax API-drift shims (see also kernels/compat.py for the Pallas side).
 
-The tree targets current jax; these helpers keep it running on older
-toolchains where a handful of names moved:
+The tree supports the verified range pinned in pyproject.toml
+(jax>=0.4.35,<0.8: the 0.4.37 container floor and the 0.7 CI pin); these
+helpers absorb the names that moved inside that range:
 
   shard_map       jax.shard_map            <- jax.experimental.shard_map
-  pcast           jax.lax.pcast            <- no-op (old shard_map has no
-                                              varying-marking; harmless)
-  make_mesh       axis_types=Auto kwarg    <- dropped when unsupported
   cost_analysis   dict                     <- [dict] on old jax
+
+Retired once both floors supported them natively: `make_mesh` (plain
+`jax.make_mesh(shape, axis_names)` exists since 0.4.35 and defaults to Auto
+axis types where the concept exists) and `pcast` (its only caller, the
+shard_map scan in train/steps.py, was replaced by the index-only sparse
+bucketing — no replicated carry left to mark varying).
 """
 from __future__ import annotations
-
-import jax
 
 try:
     from jax import shard_map as _shard_map
@@ -29,23 +31,6 @@ def shard_map(f=None, **kwargs):
     if f is None:
         return lambda g: _shard_map(g, **kwargs)
     return _shard_map(f, **kwargs)
-
-
-def pcast(x, axes, to: str = "varying"):
-    """Mark a value device-varying inside shard_map. Old jax has no notion
-    of varying-ness (no rep-checking of scan carries) — identity there."""
-    if hasattr(jax.lax, "pcast"):
-        return jax.lax.pcast(x, axes, to=to)
-    return x
-
-
-def make_mesh(shape, axis_names):
-    """jax.make_mesh with Auto axis types where the concept exists."""
-    if hasattr(jax.sharding, "AxisType"):
-        return jax.make_mesh(
-            shape, axis_names,
-            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
-    return jax.make_mesh(shape, axis_names)
 
 
 def cost_analysis_dict(compiled) -> dict:

@@ -361,6 +361,23 @@ class CachedEmbeddingBagCollection:
 
     # -- training ------------------------------------------------------------
 
+    def plan_to_slots(self, state, batch: dict) -> dict:
+        """Relabel a host-built sparse bucketing plan (data.sparse_plan_hook,
+        GLOBAL row space) onto the cache slab: unique rows map through
+        row_slot, offsets/bag lists are invariant under the relabel (the
+        row->slot map is a bijection over the batch's — by now resident —
+        working set, and the fused backward never requires unique rows to be
+        sorted). Call AFTER prepare/take_async. Accepts CacheState or
+        AsyncCacheState; returns the three plan keys for the device batch.
+        """
+        rows = np.asarray(batch["plan_rows"])
+        slots = np.where(rows >= 0,
+                         state.row_slot[np.maximum(rows, 0)],
+                         -1).astype(np.int32)
+        return {"plan_rows": slots,
+                "plan_offsets": np.asarray(batch["plan_offsets"], np.int32),
+                "plan_bags": np.asarray(batch["plan_bags"], np.int32)}
+
     def mark_updated(self, state, new_cache: jax.Array,
                      new_cache_accum: jax.Array) -> None:
         """Install post-update cache arrays (dirty bits were already set by

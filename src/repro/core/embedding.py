@@ -164,11 +164,13 @@ class EmbeddingBagCollection:
 
     def per_lookup_grads(self, idx: jax.Array, pooled_grad: jax.Array
                          ) -> tuple[jax.Array, jax.Array]:
-        """Sum pooling => each valid lookup slot inherits its bag's grad.
+        """LEGACY layout: sum pooling => each valid lookup slot inherits its
+        bag's grad, materializing the (B*F*L, d) broadcast the fused path
+        exists to avoid. Kept as the reference input for
+        rowwise_adagrad_update and the equivalence tests.
 
         idx: (B, F, L); pooled_grad: (B, F, d).
-        Returns (flat_idx (B*F*L,), flat_grads (B*F*L, d)) for
-        rowwise_adagrad_update.
+        Returns (flat_idx (B*F*L,), flat_grads (B*F*L, d)).
         """
         b, f, lk = idx.shape
         g = jnp.broadcast_to(pooled_grad[:, :, None, :],

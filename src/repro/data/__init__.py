@@ -3,6 +3,7 @@ from repro.data.pipeline import (  # noqa: F401
     ShardedLoader,
     dedup_indices_hook,
     lookahead_rows,
+    sparse_plan_hook,
 )
 from repro.data.synthetic import (  # noqa: F401
     bounded_zipf_rows,

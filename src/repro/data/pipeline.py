@@ -11,6 +11,7 @@ data-state checkpoints.
 from __future__ import annotations
 
 import collections
+import contextlib
 import queue
 import threading
 from collections.abc import Callable, Iterator, Sequence
@@ -155,11 +156,9 @@ class DataPipeline:
         self._failed = None                 # explicit shutdown is not failure
         self._buf.clear()
         # drain so a worker blocked in put() unblocks promptly
-        try:
+        with contextlib.suppress(queue.Empty):
             while True:
                 self._q.get_nowait()
-        except queue.Empty:
-            pass
         self._thread.join(timeout=2)
 
 
@@ -217,6 +216,34 @@ def dedup_indices_hook(table_offsets: Sequence[int], key: str = "idx",
         out = dict(batch)
         out[key] = glob
         out[out_key] = np.unique(glob[glob >= 0]).astype(np.int64)
+        return out
+
+    return hook
+
+
+def sparse_plan_hook(table_offsets: Sequence[int], key: str = "idx",
+                     out_key: str = "uniq_rows"
+                     ) -> Callable[[dict[str, np.ndarray]],
+                                   dict[str, np.ndarray]]:
+    """`dedup_indices_hook` + the fused-sparse-backward bucketing plan.
+
+    On top of the dedup hook's rewrite (batch[key] -> offset global rows,
+    batch[out_key] = unique row set), attaches the CSR bucketing layout of
+    kernels/sparse_plan.py as batch["plan_rows"/"plan_offsets"/"plan_bags"].
+    The sort runs in the pipeline worker thread, so by the time the train
+    step consumes batch k its plan was built while batch k-1 computed — the
+    same fetch/compute overlap the cached tier gets from `prefetch`, applied
+    to the gradient-aggregation planning (docs/sparse_optimizer.md). The
+    train steps pick the plan up via `kernels.plan_from_batch`; the cached
+    steps relabel it to slot space with `plan_to_slots`.
+    """
+    from repro.kernels.sparse_plan import build_sparse_plan_host
+    base = dedup_indices_hook(table_offsets, key, out_key)
+
+    def hook(batch: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
+        out = base(batch)
+        plan = build_sparse_plan_host(out[key])
+        out.update(plan.to_batch())
         return out
 
     return hook

@@ -8,7 +8,10 @@ three kernels here cover exactly that path:
   embedding_bag    fused multi-hot gather + pooling (fwd) — the EMB lookup
   dot_interaction  pairwise-dot feature interaction (section III-A.3), MXU-shaped
   rowwise_adagrad  deduplicated sparse gradient aggregation + row-wise
-                   AdaGrad apply — the EMB backward/update
+                   AdaGrad apply — the EMB backward/update (legacy two-pass)
+  sparse_update    fused bag-gradient gather + aggregation + row-wise
+                   AdaGrad over the sparse_plan.py CSR bucketing — the
+                   EMB backward/update without per-lookup gradients
   cache_ops        capacity<->cache row exchange (eviction-writeback +
                    fetch-on-miss) with fused LFU counter updates — the
                    swap engine of the cached embedding tier (core/cache.py)
@@ -25,5 +28,12 @@ from repro.kernels.ops import (  # noqa: F401
     dot_interaction,
     embedding_bag,
     flash_attention,
+    fused_sparse_backward,
     rowwise_adagrad_update,
+)
+from repro.kernels.sparse_plan import (  # noqa: F401
+    SparsePlan,
+    build_sparse_plan,
+    build_sparse_plan_host,
+    plan_from_batch,
 )

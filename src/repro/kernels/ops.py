@@ -22,6 +22,8 @@ from repro.kernels.dot_interaction import dot_interaction_kernel
 from repro.kernels.embedding_bag import embedding_bag_kernel
 from repro.kernels.flash_attention import flash_attention_kernel
 from repro.kernels.rowwise_adagrad import rowwise_adagrad_kernel
+from repro.kernels.sparse_plan import SparsePlan, build_sparse_plan
+from repro.kernels.sparse_update import fused_bag_backward_adagrad_kernel
 
 LANE = 128
 SUBLANE = 8
@@ -126,33 +128,83 @@ dot_interaction.defvjp(_dot_fwd, _dot_bwd)
 # ---------------------------------------------------------------------------
 
 
+def _pad_scale_lr(table, grads, lr):
+    """Lane-pad (table, grads) and compensate lr for the padded mean(g^2).
+
+    The kernels compute mean(g^2) over the PADDED dim Dp; scaling the padded
+    grads by sqrt(Dp/d) makes that equal the true mean over d, and lr is
+    divided by the same factor so the weight delta lr_k * g_k * rsqrt(...)
+    stays lr * g * rsqrt(...). When D is already lane-aligned (every
+    production config: d=128) all three pass through UNTOUCHED — no
+    whole-table pad copy and no full-payload scale multiply per step.
+    """
+    d = table.shape[1]
+    tp = _pad_to(table, LANE, 1)
+    if tp.shape[1] == d:
+        return tp, grads, jnp.asarray(lr, jnp.float32)
+    scale = np.sqrt(tp.shape[1] / d).astype(np.float32)
+    return tp, _pad_to(grads, LANE, 1) * scale, \
+        jnp.asarray(lr, jnp.float32) / scale
+
+
 def rowwise_adagrad_update(table: jax.Array, accum: jax.Array,
                            indices: jax.Array, grads: jax.Array,
                            lr, eps: float = 1e-8,
                            use_kernel: bool | None = None,
                            interpret: bool = False
                            ) -> tuple[jax.Array, jax.Array]:
-    """Apply deduplicated row-wise AdaGrad.
+    """Apply deduplicated row-wise AdaGrad (legacy two-pass layout).
 
     table: (H, D); accum: (H,) fp32; indices: (N,) int32 per-lookup rows
     (-1 pads); grads: (N, D) per-lookup gradients. Returns (table', accum').
+
+    Prefer `fused_sparse_backward` where the caller holds (idx, pooled
+    grads): it skips the per-lookup broadcast this signature forces.
     """
     h, d = table.shape
     if _use_pallas(use_kernel) or interpret:
         uniq, gsum = ref.dedup_grads_ref(indices, grads, h)
-        tp = _pad_to(table, LANE, 1)
-        gp = _pad_to(gsum, LANE, 1)
-        # the kernel computes mean(g^2) over the PADDED dim Dp; scaling the
-        # padded grads by sqrt(Dp/d) makes that equal the true mean over d,
-        # and lr is divided by the same factor so the weight delta
-        # lr_k * g_k * rsqrt(...) stays lr * g * rsqrt(...).
-        scale = np.sqrt(tp.shape[1] / d).astype(np.float32)
-        new_t, new_a = rowwise_adagrad_kernel(
-            tp, accum, uniq, gp * scale,
-            jnp.asarray(lr, jnp.float32) / scale,
-            eps=eps, interpret=interpret)
+        tp, gp, lr_eff = _pad_scale_lr(table, gsum, lr)
+        new_t, new_a = rowwise_adagrad_kernel(tp, accum, uniq, gp, lr_eff,
+                                              eps=eps, interpret=interpret)
         return new_t[:, :d], new_a[:, 0]
     return ref.rowwise_adagrad_ref(table, accum, indices, grads, lr, eps)
+
+
+def fused_sparse_backward(table: jax.Array, accum: jax.Array,
+                          idx: jax.Array | None, pooled_grad: jax.Array,
+                          lr, eps: float = 1e-8,
+                          plan: SparsePlan | None = None,
+                          use_kernel: bool | None = None,
+                          interpret: bool = False
+                          ) -> tuple[jax.Array, jax.Array]:
+    """One-pass sparse backward + row-wise AdaGrad from POOLED gradients —
+    per-lookup gradients are never materialized (docs/sparse_optimizer.md).
+
+    table: (H, D); accum: (H,) fp32; idx: (B, F, L) int32 rows (-1 pads) —
+    may be None when `plan` is given; pooled_grad: (B, F, D) bag gradients
+    straight from autodiff. `plan` short-circuits the on-device bucketing
+    with one built ahead of time (`data.sparse_plan_hook` builds batch k+1's
+    in the reader thread while batch k computes). Returns (table', accum').
+
+    Matches `rowwise_adagrad_update` fed the legacy broadcast layout
+    bit-for-bit (same per-row accumulation order — the planner's stable
+    sort), minus the (B*F*L, D) intermediates.
+    """
+    h, d = table.shape
+    if plan is None:
+        assert idx is not None, "need idx to build a SparsePlan"
+        plan = build_sparse_plan(idx)
+    pooled2 = pooled_grad.reshape(-1, d)
+    if _use_pallas(use_kernel) or interpret:
+        tp, gp, lr_eff = _pad_scale_lr(table, pooled2, lr)
+        new_t, new_a = fused_bag_backward_adagrad_kernel(
+            tp, accum, plan.unique_rows, plan.bag_offsets, plan.bag_ids,
+            gp, lr_eff, eps=eps, interpret=interpret)
+        return new_t[:, :d], new_a[:, 0]
+    return ref.fused_bag_backward_adagrad_ref(
+        table, accum, plan.unique_rows, plan.bag_offsets, plan.bag_ids,
+        pooled2, lr, eps)
 
 
 # ---------------------------------------------------------------------------

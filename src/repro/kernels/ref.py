@@ -95,6 +95,60 @@ def dedup_grads_ref(indices: jax.Array, grads: jax.Array, num_rows: int):
     return uniq, gsum
 
 
+def bag_grad_sums(unique_rows: jax.Array, bag_offsets: jax.Array,
+                  bag_ids: jax.Array, pooled: jax.Array) -> jax.Array:
+    """Aggregate POOLED bag gradients into per-unique-row sums through a
+    `SparsePlan` (kernels/sparse_plan.py) — the index-only replacement for
+    broadcast-then-dedup: nothing `(B*F*L, D)`-shaped is built before this
+    gather, and XLA fuses the gather into the segment sum.
+
+    unique_rows: (N,); bag_offsets: (N+1,); bag_ids: (N,); pooled:
+    (B*F, D) fp32. Returns (N, D) fp32 `gsum` aligned with `unique_rows`
+    (zeros past the unique count). Slots within a run arrive in flat-batch
+    order (the planner's stable sort), so each row's accumulation order —
+    and hence its bits — matches the legacy per-lookup scatter-add.
+    """
+    n = bag_ids.shape[0]
+    n_valid = bag_offsets[n]                        # planner fills tail
+    pos = jnp.arange(n)
+    # run id per sorted slot, O(n): count the run starts at or before each
+    # position (phantom runs all "start" at n_valid, inflating only the
+    # dead tail, which is routed to the dropped segment below)
+    marks = jnp.zeros((n + 1,), jnp.int32).at[bag_offsets[1:]].add(1)
+    seg = jnp.cumsum(marks[:n])
+    seg = jnp.where(pos < n_valid, seg, n)          # n = dropped
+    contrib = pooled[bag_ids].astype(jnp.float32)   # dead slots drop via seg
+    return jax.ops.segment_sum(contrib, seg, num_segments=n + 1)[:n]
+
+
+def fused_bag_backward_adagrad_ref(table: jax.Array, accum: jax.Array,
+                                   unique_rows: jax.Array,
+                                   bag_offsets: jax.Array,
+                                   bag_ids: jax.Array, pooled: jax.Array,
+                                   lr, eps: float = 1e-8):
+    """Oracle for the fused sparse backward (kernels/sparse_update.py):
+    gather + aggregate pooled bag grads per unique row, then the row-wise
+    AdaGrad apply — one pass, no per-lookup gradient tensor.
+
+    table: (H, D); accum: (H,) fp32; plan arrays as in `SparsePlan`;
+    pooled: (B*F, D). Bit-identical to `rowwise_adagrad_ref` fed the legacy
+    broadcast per-lookup layout (asserted in tests/test_sparse_fused.py).
+    Returns (new_table, new_accum).
+    """
+    h, _ = table.shape
+    gsum = bag_grad_sums(unique_rows, bag_offsets, bag_ids, pooled)
+    valid = unique_rows >= 0
+    safe = jnp.where(valid, unique_rows, 0)
+    drop = jnp.where(valid, unique_rows, h)          # h = dropped
+    g2 = jnp.mean(jnp.square(gsum), axis=-1)
+    acc_rows = accum[safe] + g2
+    upd = lr * gsum * jax.lax.rsqrt(acc_rows[:, None] + eps)
+    # invalid entries need no masking: their scatter index is h -> dropped
+    new_table = table.at[drop].add(-upd.astype(table.dtype), mode="drop")
+    new_accum = accum.at[drop].set(acc_rows, mode="drop")
+    return new_table.astype(table.dtype), new_accum
+
+
 def cache_exchange_ref(capacity: jax.Array, cache: jax.Array,
                        cap_accum: jax.Array, cache_accum: jax.Array,
                        freq: jax.Array, slots: jax.Array,

@@ -1,0 +1,124 @@
+"""Bucketing planner for the fused sparse backward (docs/sparse_optimizer.md).
+
+The legacy sparse path broadcast each bag's pooled gradient to every lookup
+slot — a `(B*F*L, D)` float tensor — and then argsorted + segment-summed that
+full-width payload before the optimizer kernel ran. The planner here sorts
+ONLY the `(B*F*L,)` int32 index stream and emits a CSR-style layout over the
+batch's unique rows:
+
+  unique_rows (N,)    i-th unique mega-table row, -1 beyond the unique count
+  bag_offsets (N+1,)  [bag_offsets[i], bag_offsets[i+1]) slices bag_ids for
+                      unique row i (empty for i >= n_unique)
+  bag_ids     (N,)    for each valid lookup slot, in sorted-row order, the
+                      flat (example*F + feature) bag whose pooled gradient
+                      the slot contributes; N = B*F*L, static
+
+so the optimizer can gather each unique row's referenced POOLED `(1, D)`
+gradients directly — per-lookup gradients are never materialized. Slots of
+equal row keep their flat-batch order (stable sort), which is what makes the
+fused accumulation bit-identical to the legacy scatter-add.
+
+Two implementations with identical outputs:
+  * `build_sparse_plan` — pure jnp, jits on-device (used inside train steps
+    and shard_map bodies; lowering contains no float tensors — asserted in
+    tests/test_sparse_fused.py);
+  * `build_sparse_plan_host` — numpy, for the data-pipeline reader thread
+    (`data.sparse_plan_hook`) so batch k+1's plan is built while batch k
+    computes, mirroring the async cache-exchange overlap of PR 2.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# rows are mega-table offsets (< total_rows << 2**31), so int32 max is a safe
+# sort-last sentinel for -1 padding slots
+_SENTINEL = np.iinfo(np.int32).max
+
+
+class SparsePlan(NamedTuple):
+    """CSR layout of a batch's lookups, grouped by unique row. A NamedTuple
+    of arrays — a pytree, so it rides through jit/shard_map/batch dicts."""
+    unique_rows: jax.Array     # (N,) int32, -1 past the unique count
+    bag_offsets: jax.Array     # (N+1,) int32, nondecreasing
+    bag_ids: jax.Array         # (N,) int32 flat (example*F + feature) bags
+
+    def to_batch(self) -> dict:
+        """The three arrays under the batch-dict keys the train steps read."""
+        return {"plan_rows": self.unique_rows,
+                "plan_offsets": self.bag_offsets,
+                "plan_bags": self.bag_ids}
+
+
+def plan_from_batch(batch: dict) -> SparsePlan | None:
+    """Rehydrate a plan attached by `data.sparse_plan_hook` (or None)."""
+    if "plan_rows" not in batch:
+        return None
+    return SparsePlan(jnp.asarray(batch["plan_rows"], jnp.int32),
+                      jnp.asarray(batch["plan_offsets"], jnp.int32),
+                      jnp.asarray(batch["plan_bags"], jnp.int32))
+
+
+def build_sparse_plan(idx: jax.Array,
+                      lookups_per_bag: int | None = None) -> SparsePlan:
+    """idx: (B, F, L) offset global rows with -1 pads (or already-flat (N,)
+    with `lookups_per_bag=L`). Pure int32 compute; O(N log N) in LOOKUPS,
+    independent of table height (the paper's flat CPU hash-size curve,
+    Fig. 12, depends on exactly this property)."""
+    if idx.ndim == 3:
+        _, _, lk = idx.shape
+    else:
+        assert lookups_per_bag is not None, "flat idx needs lookups_per_bag"
+        lk = lookups_per_bag
+    flat = idx.reshape(-1).astype(jnp.int32)
+    n = flat.shape[0]
+    valid = flat >= 0
+    safe = jnp.where(valid, flat, _SENTINEL)          # pads sort last
+    order = jnp.argsort(safe)                         # stable: flat order
+    s = safe[order]                                   # kept within a run
+    bag_ids = (order // lk).astype(jnp.int32)
+    head = jnp.concatenate([jnp.ones((1,), bool), s[1:] != s[:-1]]) \
+        & (s != _SENTINEL)
+    rank = jnp.cumsum(head) - 1                       # unique id at heads
+    n_valid = valid.sum().astype(jnp.int32)
+    unique_rows = jnp.full((n,), -1, jnp.int32).at[
+        jnp.where(head, rank, n)].set(s, mode="drop")
+    # run i starts at its head's sorted position; runs are contiguous and
+    # valid slots sort first, so offsets[i+1] doubles as run i's end and the
+    # n_valid fill closes the last run / empties the tail
+    bag_offsets = jnp.full((n + 1,), n_valid, jnp.int32).at[
+        jnp.where(head, rank, n + 1)].set(
+            jnp.arange(n, dtype=jnp.int32), mode="drop")
+    return SparsePlan(unique_rows, bag_offsets, bag_ids)
+
+
+def build_sparse_plan_host(idx: np.ndarray,
+                           lookups_per_bag: int | None = None) -> SparsePlan:
+    """numpy twin of `build_sparse_plan` with identical outputs (asserted in
+    tests/test_sparse_fused.py) — runs in the pipeline reader thread so the
+    sort overlaps the in-flight batch's device compute."""
+    idx = np.asarray(idx)
+    if idx.ndim == 3:
+        lk = idx.shape[2]
+    else:
+        assert lookups_per_bag is not None, "flat idx needs lookups_per_bag"
+        lk = lookups_per_bag
+    flat = idx.reshape(-1).astype(np.int64)
+    n = flat.shape[0]
+    valid = flat >= 0
+    safe = np.where(valid, flat, _SENTINEL)
+    order = np.argsort(safe, kind="stable")
+    s = safe[order]
+    bag_ids = (order // lk).astype(np.int32)
+    head = np.concatenate([np.ones((1,), bool), s[1:] != s[:-1]]) \
+        & (s != _SENTINEL)
+    n_valid = int(valid.sum())
+    heads = np.flatnonzero(head)
+    unique_rows = np.full((n,), -1, np.int32)
+    unique_rows[:len(heads)] = s[heads]
+    bag_offsets = np.full((n + 1,), n_valid, np.int32)
+    bag_offsets[:len(heads)] = heads
+    return SparsePlan(unique_rows, bag_offsets, bag_ids)

@@ -1,0 +1,141 @@
+"""Pallas TPU kernel: fused sparse backward — bag-gradient gather +
+aggregation + row-wise AdaGrad in ONE pass over unique rows.
+
+This supersedes the two-pass `dedup_grads_ref` + `rowwise_adagrad_kernel`
+pipeline for the training hot spot the paper calls out ("not optimized for
+gradient aggregation", section VII). The host/device planner
+(kernels/sparse_plan.py) has already bucketed the batch's lookup stream by
+unique row — int32 arrays only — so per grid step (one unique row) this
+kernel:
+
+    DMA row + accumulator in (HBM->VMEM)
+    for each referencing bag (CSR slice of the plan):
+        DMA the bag's POOLED (1, D) gradient in, accumulate in VMEM
+    acc' = acc + mean(g^2);  w' = w - lr * g * rsqrt(acc' + eps)
+    DMA row + accumulator back, in place via io aliasing
+
+No `(B*F*L, D)` per-lookup gradient tensor ever exists: the only full-width
+traffic is the pooled `(B*F, D)` grads (which autodiff produces anyway) and
+the touched table rows. Padding entries (unique_rows[i] < 0) are skipped
+with pl.when so one lowered kernel serves any batch sparsity pattern.
+
+Capacity note: the plan arrays ride in scalar-prefetch SMEM (same contract
+as rowwise_adagrad's idx); at production B*F*L the bag list needs chunked
+SMEM staging — tracked in docs/sparse_optimizer.md.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import MemorySpace, SemaphoreType
+
+
+def _fused_kernel(uniq_ref, off_ref, bag_ref, lr_ref, grads_ref, table_ref,
+                  accum_ref, table_out, accum_out, row_vmem, acc_vmem,
+                  gbuf, gacc, sems, *, eps: float):
+    """Grid step i updates unique row uniq_ref[i].
+
+    uniq_ref: (N,), off_ref: (N+1,), bag_ref: (N,) SMEM (scalar prefetch);
+    lr_ref: (1,) SMEM; grads_ref: (B*F, D) HBM pooled grads; table_ref/
+    table_out: (H, D) HBM aliased; accum_ref/accum_out: (H, 1) HBM aliased;
+    row_vmem: (1, D); acc_vmem: (1, 1); gbuf/gacc: (1, D) f32 staging +
+    accumulator; sems: 3 DMA semaphores.
+    """
+    i = pl.program_id(0)
+    ix = uniq_ref[i]
+
+    @pl.when(ix >= 0)
+    def _():
+        # row + accumulator fetches overlap the bag-gradient stream
+        cp_r = pltpu.make_async_copy(table_ref.at[pl.ds(ix, 1)], row_vmem,
+                                     sems.at[0])
+        cp_a = pltpu.make_async_copy(accum_ref.at[pl.ds(ix, 1)], acc_vmem,
+                                     sems.at[1])
+        cp_r.start()
+        cp_a.start()
+        gacc[...] = jnp.zeros_like(gacc)
+
+        def body(j, carry):
+            cp_g = pltpu.make_async_copy(
+                grads_ref.at[pl.ds(bag_ref[j], 1)], gbuf, sems.at[2])
+            cp_g.start()
+            cp_g.wait()
+            # flat-batch bag order (the planner's stable sort) — keeps the
+            # accumulation bit-identical to the legacy scatter-add
+            gacc[...] = gacc[...] + gbuf[...].astype(jnp.float32)
+            return carry
+
+        jax.lax.fori_loop(off_ref[i], off_ref[i + 1], body, 0)
+        cp_r.wait()
+        cp_a.wait()
+
+        g = gacc[...]
+        acc_new = acc_vmem[...].astype(jnp.float32) + \
+            jnp.mean(jnp.square(g), axis=-1, keepdims=True)
+        w_new = row_vmem[...].astype(jnp.float32) - \
+            lr_ref[0] * g * jax.lax.rsqrt(acc_new + eps)
+
+        row_vmem[...] = w_new.astype(row_vmem.dtype)
+        acc_vmem[...] = acc_new.astype(acc_vmem.dtype)
+
+        cp_wr = pltpu.make_async_copy(row_vmem, table_out.at[pl.ds(ix, 1)],
+                                      sems.at[0])
+        cp_wa = pltpu.make_async_copy(acc_vmem, accum_out.at[pl.ds(ix, 1)],
+                                      sems.at[1])
+        cp_wr.start()
+        cp_wa.start()
+        cp_wr.wait()
+        cp_wa.wait()
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def fused_bag_backward_adagrad_kernel(table: jax.Array, accum: jax.Array,
+                                      unique_rows: jax.Array,
+                                      bag_offsets: jax.Array,
+                                      bag_ids: jax.Array,
+                                      pooled_grads: jax.Array,
+                                      lr: jax.Array, eps: float = 1e-8,
+                                      interpret: bool = False):
+    """table: (H, D) D % 128 == 0; accum: (H,) or (H, 1) fp32; plan arrays
+    from kernels/sparse_plan.py (int32); pooled_grads: (B*F, D) fp32;
+    lr: () fp32. Returns (new_table (H, D), new_accum (H, 1)) updated in
+    place (io aliasing)."""
+    h, d = table.shape
+    n = unique_rows.shape[0]
+    kernel = functools.partial(_fused_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(n,),
+            in_specs=[
+                pl.BlockSpec(memory_space=MemorySpace.SMEM),  # lr
+                pl.BlockSpec(memory_space=MemorySpace.ANY),   # pooled grads
+                pl.BlockSpec(memory_space=MemorySpace.ANY),   # table
+                pl.BlockSpec(memory_space=MemorySpace.ANY),   # accum
+            ],
+            out_specs=[
+                pl.BlockSpec(memory_space=MemorySpace.ANY),
+                pl.BlockSpec(memory_space=MemorySpace.ANY),
+            ],
+            scratch_shapes=[
+                MemorySpace.VMEM((1, d), table.dtype),
+                MemorySpace.VMEM((1, 1), jnp.float32),
+                MemorySpace.VMEM((1, d), jnp.float32),
+                MemorySpace.VMEM((1, d), jnp.float32),
+                SemaphoreType.DMA((3,)),
+            ],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((h, d), table.dtype),
+                   jax.ShapeDtypeStruct((h, 1), jnp.float32)],
+        input_output_aliases={5: 0, 6: 1},
+        interpret=interpret,
+    )(unique_rows, bag_offsets, bag_ids,
+      jnp.asarray(lr, jnp.float32).reshape(1),
+      pooled_grads.astype(jnp.float32), table,
+      accum.reshape(h, 1).astype(jnp.float32))

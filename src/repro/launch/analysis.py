@@ -19,6 +19,10 @@ text with loop-trip multipliers instead:
 
 Both are validated against cost_analysis() on loop-free graphs in
 tests/test_analysis.py.
+
+`sparse_backward_traffic` is the companion analytic model for the sparse
+optimizer path: intermediate bytes the legacy vs fused backward materialize
+between autodiff's pooled gradients and the table update.
 """
 from __future__ import annotations
 
@@ -32,6 +36,40 @@ _DTYPE_BYTES = {
     "s8": 1, "u8": 1, "pred": 1, "i64": 8, "i32": 4, "i16": 2, "i8": 1,
     "i1": 1, "ui8": 1, "ui32": 4,
 }
+
+# ---------------------------------------------------------------------------
+# sparse-backward intermediate-byte accounting (roofline companion)
+# ---------------------------------------------------------------------------
+
+
+def sparse_backward_traffic(batch: int, n_features: int, truncation: int,
+                            embed_dim: int, itemsize: int = 4,
+                            index_itemsize: int = 4) -> dict[str, float]:
+    """Bytes of INTERMEDIATE tensors each sparse-backward path materializes
+    between autodiff's pooled (B, F, D) gradients and the row-wise AdaGrad
+    update — the tensors that cross op/kernel boundaries, counted once each
+    (pallas_call operands are real HBM buffers, never fused away).
+
+    legacy (per_lookup_grads + dedup_grads_ref + rowwise_adagrad):
+      * the (B*F*L, D) per-lookup broadcast handed to the update op,
+      * the sorted full-width gradient payload inside the dedup
+        (grads[order], same shape), and
+      * the deduplicated (B*F*L, D) gsum operand of the two-pass kernel.
+    fused (sparse_plan + fused_bag_backward_adagrad):
+      * the int32 plan only — unique_rows (N,), bag_offsets (N+1,),
+        bag_ids (N,); the kernel reads pooled bag grads straight from the
+        autodiff output and aggregates in VMEM.
+
+    Returns legacy_bytes, fused_bytes and their ratio ("reduction") ~= D —
+    >= truncation for every D >= truncation config, e.g. 128x at the prod
+    m3 shape (D=128, L=32; asserted >= L in tests/test_sparse_fused.py).
+    """
+    n = batch * n_features * truncation
+    legacy = 3.0 * n * embed_dim * itemsize
+    fused = (2.0 * n + n + 1.0) * index_itemsize
+    return {"legacy_bytes": legacy, "fused_bytes": fused,
+            "reduction": legacy / fused}
+
 
 # ---------------------------------------------------------------------------
 # StableHLO (lowered.as_text())

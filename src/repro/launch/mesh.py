@@ -12,16 +12,14 @@ from __future__ import annotations
 
 import jax
 
-from repro.compat import make_mesh
-
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 4), axes=("data", "model")) -> jax.sharding.Mesh:
     """Small mesh for CPU integration tests (requires
     xla_force_host_platform_device_count >= prod(shape))."""
-    return make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes)

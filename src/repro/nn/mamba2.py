@@ -20,17 +20,18 @@ from repro.nn.sharding import gather_weight
 def mamba_dims(cfg) -> dict[str, int]:
     d_inner = cfg.ssm_expand * cfg.d_model
     n_heads = d_inner // cfg.ssm_headdim
-    return dict(
-        d_inner=d_inner,
-        n_heads=n_heads,
-        headdim=cfg.ssm_headdim,
-        d_state=cfg.ssm_state,
-        n_groups=cfg.ssm_ngroups,
-        d_conv=cfg.ssm_conv,
+    return {
+        "d_inner": d_inner,
+        "n_heads": n_heads,
+        "headdim": cfg.ssm_headdim,
+        "d_state": cfg.ssm_state,
+        "n_groups": cfg.ssm_ngroups,
+        "d_conv": cfg.ssm_conv,
         # in_proj produces: z (d_inner), x (d_inner), B (g*n), C (g*n), dt (h)
-        d_in_proj=2 * d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state + n_heads,
-        conv_dim=d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state,
-    )
+        "d_in_proj": 2 * d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+        + n_heads,
+        "conv_dim": d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state,
+    }
 
 
 def mamba_specs(cfg) -> dict[str, Any]:

@@ -11,6 +11,7 @@ DIFFERENT mesh shape (checkpoint.py restore with new shardings).
 from __future__ import annotations
 
 import collections
+import contextlib
 import signal
 import time
 from collections.abc import Callable
@@ -24,10 +25,8 @@ class PreemptionHandler:
         self._stop = False
         self._prev = {}
         for s in signals:
-            try:
+            with contextlib.suppress(ValueError):    # non-main thread (tests)
                 self._prev[s] = signal.signal(s, self._handler)
-            except ValueError:       # non-main thread (tests)
-                pass
 
     def _handler(self, signum, frame):
         self._stop = True
@@ -105,9 +104,8 @@ def run_resilient_loop(step_fn: Callable, n_steps: int,
     while step < n_steps:
         step_fn(step)
         dt = timer.lap()
-        if straggler is not None and straggler.record(dt):
-            if on_straggler:
-                on_straggler(step)
+        if straggler is not None and straggler.record(dt) and on_straggler:
+            on_straggler(step)
         step += 1
         if step % checkpoint_every == 0:
             checkpoint_cb(step)

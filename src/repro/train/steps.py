@@ -23,6 +23,7 @@ from repro.core.dlrm import dlrm_grads
 from repro.core.embedding import EmbeddingBagCollection
 from repro.kernels import ops as kernel_ops
 from repro.kernels import ref as kref
+from repro.kernels.sparse_plan import plan_from_batch
 from repro.models.lm import lm_loss
 from repro.nn.sharding import (TRAIN_RULES, LogicalRules,
                                _live_mesh_axis_names)
@@ -121,34 +122,28 @@ def build_dlrm_train_step(cfg: DLRMConfig, ebc: EmbeddingBagCollection,
 
     row_pspec = ebc.plan.pspec                 # (rows, d) mega-table sharding
 
-    def sparse_update_nrows(mega, accum, idx, g_pooled):
-        """O(n) unique-row apply (dedup + gathered read-modify-write)."""
-        h, d = mega.shape
-        flat_idx, flat_g = ebc.per_lookup_grads(idx, g_pooled)
-        uniq, gsum = kref.dedup_grads_ref(flat_idx, flat_g, h)
-        valid = uniq >= 0
-        safe = jnp.where(valid, uniq, 0)
-        acc_rows = accum[safe] + jnp.where(
-            valid, jnp.mean(jnp.square(gsum), axis=-1), 0.0)
-        upd = sparse_lr * gsum * jax.lax.rsqrt(acc_rows[:, None]
-                                               + sparse_eps)
-        upd = jnp.where(valid[:, None], upd, 0.0)
-        drop = jnp.where(valid, uniq, h)       # h = out of bounds -> dropped
-        new_mega = mega.at[drop].add(-upd.astype(mega.dtype), mode="drop")
-        new_accum = accum.at[drop].set(jnp.where(valid, acc_rows, 0.0),
-                                       mode="drop")
-        return new_mega, new_accum
+    def sparse_update_nrows(mega, accum, idx, g_pooled, plan=None):
+        """O(n) unique-row apply through the fused sparse backward: the
+        index-only bucketing plan (built on device, or ahead of time by
+        `data.sparse_plan_hook` in the reader thread) replaces the legacy
+        per-lookup broadcast + full-width dedup sort."""
+        return kernel_ops.fused_sparse_backward(
+            mega, accum, idx, g_pooled, sparse_lr, sparse_eps, plan=plan,
+            interpret=interpret)
 
-    def sparse_update_shardmap(mega, accum, idx, g_pooled):
-        """shard_map PS-side aggregation: each (model, data) shard scatters
-        ITS batch slice into a LOCAL (rows_local, d) buffer (scan over
-        features, zero collectives), then ONE psum over the batch axes
-        merges partials. The pjit scatter-in-scan alternative re-all-reduces
-        the whole gsum buffer per feature (measured 127x the traffic —
-        EXPERIMENTS.md Perf, dlrm-m3)."""
+    def sparse_update_shardmap(mega, accum, idx, g_pooled, plan=None):
+        """shard_map PS-side aggregation: each (model, data) shard buckets
+        ITS batch slice with the index-only planner, segment-sums the
+        POOLED bag grads per locally-owned unique row, scatters the compact
+        result into a LOCAL (rows_local, d) buffer (zero collectives), then
+        ONE psum over the batch axes merges partials. Replaces the
+        feature-scan that broadcast every bag grad to (b, lk, d) per
+        feature; the pjit scatter-in-scan alternative additionally
+        re-all-reduces the whole gsum buffer per feature (measured 127x the
+        traffic — EXPERIMENTS.md Perf, dlrm-m3)."""
         from jax.sharding import PartitionSpec as SP
 
-        from repro.compat import pcast, shard_map
+        from repro.compat import shard_map
         from repro.nn.sharding import _live_mesh
         mesh = _live_mesh()
         h, d = mega.shape
@@ -160,23 +155,16 @@ def build_dlrm_train_step(cfg: DLRMConfig, ebc: EmbeddingBagCollection,
             shard = jax.lax.axis_index(model_axis)
             lo = shard * rows_local
             b, f, lk = idx_loc.shape
-
-            def add_feature(gsum, xs):
-                idx_f, g_f = xs
-                inside = (idx_f >= lo) & (idx_f < lo + rows_local)
-                loc = jnp.where(inside, idx_f - lo, rows_local)  # oob drops
-                upd = jnp.broadcast_to(g_f[:, None, :], (b, lk, d))
-                upd = jnp.where(inside[..., None], upd, 0.0)
-                return gsum.at[loc.reshape(-1)].add(
-                    upd.reshape(b * lk, d), mode="drop"), None
-
-            gsum0 = pcast(                         # mark device-varying for
-                jnp.zeros((rows_local, d), jnp.float32),
-                tuple(mesh.axis_names), to="varying")  # the shard_map scan
-            gsum, _ = jax.lax.scan(
-                add_feature,
-                gsum0,
-                (jnp.swapaxes(idx_loc, 0, 1), jnp.swapaxes(g_loc, 0, 1)))
+            inside = (idx_loc >= lo) & (idx_loc < lo + rows_local)
+            loc = jnp.where(inside, idx_loc - lo, -1)
+            lplan = kernel_ops.build_sparse_plan(loc)
+            gsum_u = kref.bag_grad_sums(          # (b*f*lk, d) compact sums
+                lplan.unique_rows, lplan.bag_offsets, lplan.bag_ids,
+                g_loc.reshape(b * f, d))
+            drop = jnp.where(lplan.unique_rows >= 0, lplan.unique_rows,
+                             rows_local)          # oob -> dropped
+            gsum = jnp.zeros((rows_local, d), jnp.float32).at[drop].set(
+                gsum_u, mode="drop")
             if cfg.grad_reduce_dtype == "bfloat16":
                 gsum = jax.lax.psum(gsum.astype(jnp.bfloat16),
                                     batch_axes).astype(jnp.float32)
@@ -198,7 +186,7 @@ def build_dlrm_train_step(cfg: DLRMConfig, ebc: EmbeddingBagCollection,
             out_specs=(SP(model_axis, None), SP(model_axis)),
         )(mega, accum, idx, g_pooled)
 
-    def sparse_update(mega, accum, idx, g_pooled):
+    def sparse_update(mega, accum, idx, g_pooled, plan=None):
         """Row-wise AdaGrad with dedup via scatter-add onto the SHARDED
         row space (same math as kernels/ref.rowwise_adagrad_ref, with
         sharding constraints so the aggregation buffer lives on the
@@ -244,8 +232,12 @@ def build_dlrm_train_step(cfg: DLRMConfig, ebc: EmbeddingBagCollection,
             apply_fn = sparse_update_shardmap
         else:
             apply_fn = sparse_update
+        # a plan attached by data.sparse_plan_hook (built in the reader
+        # thread, overlapping the previous step's compute) short-circuits
+        # the on-device bucketing of the fused nrows path
         new_mega, new_accum = apply_fn(
-            params["emb"]["mega"], state["accum"], idx, g_pooled)
+            params["emb"]["mega"], state["accum"], idx, g_pooled,
+            plan_from_batch(batch))
         new_params = {**new_dense, "emb": {"mega": new_mega}}
         new_state = {"dense": new_dense_state, "accum": new_accum}
         lookups = jnp.sum(batch["idx"] >= 0).astype(jnp.float32)
@@ -271,7 +263,10 @@ def _build_cached_inner(cfg: DLRMConfig, cc, dense_opt: Optimizer,
                         sparse_lr: float, sparse_eps: float,
                         interpret: bool, rules: LogicalRules) -> Callable:
     """Jitted device half shared by the sync and async cached steps:
-    forward/backward/update entirely against the (donated) cache slab."""
+    forward/backward/update entirely against the (donated) cache slab. The
+    sparse update runs the fused bag backward on SLOT space — when the batch
+    carries a slot-relabelled plan (`CachedEmbeddingBagCollection.
+    plan_to_slots`), even the bucketing sort stays off the device."""
 
     def inner(dense_params, dense_state, cache, cache_accum, batch, step_idx):
         params = {**dense_params, "emb": {"mega": cache}}
@@ -279,10 +274,10 @@ def _build_cached_inner(cfg: DLRMConfig, cc, dense_opt: Optimizer,
             params, batch, cfg, cc.ebc, interpret, rules)
         new_dense, new_dense_state = dense_opt.apply(
             dense_params, g_dense, dense_state, step_idx)
-        flat_idx, flat_g = cc.ebc.per_lookup_grads(idx, g_pooled)
-        new_cache, new_accum = kernel_ops.rowwise_adagrad_update(
-            cache, cache_accum, flat_idx, flat_g, sparse_lr, sparse_eps,
-            use_kernel=cc.use_kernel, interpret=interpret)
+        new_cache, new_accum = kernel_ops.fused_sparse_backward(
+            cache, cache_accum, idx, g_pooled, sparse_lr, sparse_eps,
+            plan=plan_from_batch(batch), use_kernel=cc.use_kernel,
+            interpret=interpret)
         lookups = jnp.sum(batch["idx"] >= 0).astype(jnp.float32)
         return (new_dense, new_dense_state, new_cache, new_accum,
                 {"loss": loss, "lookups": lookups})
@@ -321,6 +316,11 @@ def build_cached_dlrm_train_step(cfg: DLRMConfig, cc, dense_opt: Optimizer,
         local = cc.prepare(cache_state, batch["idx"], train=True)
         dev_batch = {**batch, "idx": jnp.asarray(local)}
         dev_batch.pop("uniq_rows", None)
+        if "plan_rows" in batch:
+            # the reader thread's bucketing plan is in global row space; the
+            # batch's rows are all resident after prepare, so a cheap host
+            # relabel (row -> slot) carries it onto the cache slab
+            dev_batch.update(cc.plan_to_slots(cache_state, batch))
         new_dense, new_dense_state, new_cache, new_accum, metrics = inner_jit(
             params, state["dense"], cache_state.cache,
             cache_state.cache_accum, dev_batch, step_idx)
@@ -382,6 +382,8 @@ def build_async_cached_dlrm_train_step(cfg: DLRMConfig, cc,
         local = cc.take_async(astate, batch["idx"], train=True)
         dev_batch = {**batch, "idx": jnp.asarray(local)}
         dev_batch.pop("uniq_rows", None)
+        if "plan_rows" in batch:
+            dev_batch.update(cc.plan_to_slots(astate, batch))
         new_dense, new_dense_state, new_cache, new_accum, metrics = inner_jit(
             params, state["dense"], astate.cache, astate.cache_accum,
             dev_batch, step_idx)

@@ -11,8 +11,8 @@ DTYPES = [jnp.float32, jnp.bfloat16]
 
 
 def _tol(dtype):
-    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
-        dict(rtol=1e-5, atol=1e-5)
+    return {"rtol": 2e-2, "atol": 2e-2} if dtype == jnp.bfloat16 else \
+        {"rtol": 1e-5, "atol": 1e-5}
 
 # ---------------------------------------------------------------------------
 # embedding_bag
@@ -150,8 +150,8 @@ def test_flash_attention_kernel_matches_ref(rng, b, s, h, dh, bq, bk, dtype):
                               use_kernel=None, interpret=True)
     r = ref.flash_attention_ref(q.swapaxes(1, 2), k.swapaxes(1, 2),
                                 v.swapaxes(1, 2), True).swapaxes(1, 2)
-    tol = dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 else \
-        dict(rtol=2e-4, atol=2e-4)
+    tol = {"rtol": 3e-2, "atol": 3e-2} if dtype == jnp.bfloat16 else \
+        {"rtol": 2e-4, "atol": 2e-4}
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(r, np.float32), **tol)
 

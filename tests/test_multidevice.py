@@ -30,8 +30,7 @@ from repro.configs import get_smoke_config
 from repro.core.embedding import EmbeddingBagCollection
 from repro.nn.params import init_params
 cfg = dataclasses.replace(get_smoke_config("dlrm-m1"), placement="row_wise")
-from repro.compat import make_mesh
-mesh = make_mesh((2, 4), ("data", "model"))
+mesh = jax.make_mesh((2, 4), ("data", "model"))
 ebc = EmbeddingBagCollection.build(cfg, n_shards=4)
 params = init_params(ebc.param_specs(), jax.random.PRNGKey(0))
 rng = np.random.RandomState(0)
@@ -59,8 +58,7 @@ from repro.data import make_dlrm_batch
 cfg = dataclasses.replace(get_smoke_config("dlrm-m1"),
                           placement="row_wise", lookup_impl="psum")
 cfg_ref = dataclasses.replace(cfg, lookup_impl="gather")
-from repro.compat import make_mesh
-mesh = make_mesh((2, 4), ("data", "model"))
+mesh = jax.make_mesh((2, 4), ("data", "model"))
 ebc = EmbeddingBagCollection.build(cfg, n_shards=4)
 params = init_params(dlrm_param_specs(cfg, ebc), jax.random.PRNGKey(0))
 opt = adagrad(0.05)
@@ -98,8 +96,7 @@ from repro.train.steps import build_lm_train_step
 from repro.data.synthetic import lm_batch_specs
 
 cfg = get_smoke_config("stablelm-1.6b")
-from repro.compat import make_mesh
-mesh = make_mesh((2, 4), ("data", "model"))
+mesh = jax.make_mesh((2, 4), ("data", "model"))
 for name, rules in [("train", TRAIN_RULES), ("fsdp", FSDP_RULES),
                     ("zero_dp", ZERO_DP_RULES)]:
     specs = lm_param_specs(cfg)
@@ -129,8 +126,7 @@ def test_easgd_pod_axis_semantics():
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.optim.easgd import easgd_init, easgd_sync
-from repro.compat import make_mesh
-mesh = make_mesh((4, 2), ("pod", "model"))
+mesh = jax.make_mesh((4, 2), ("pod", "model"))
 state = easgd_init({"w": jnp.arange(6.0)}, n_replicas=4)
 state = state._replace(replicas={"w": jnp.stack(
     [jnp.arange(6.0) + i for i in range(4)])})
@@ -158,9 +154,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.train.checkpoint import CheckpointManager
 
 tmp = tempfile.mkdtemp()
-from repro.compat import make_mesh
-mesh_a = make_mesh((4, 2), ("data", "model"))
-mesh_b = make_mesh((2, 4), ("data", "model"))
+mesh_a = jax.make_mesh((4, 2), ("data", "model"))
+mesh_b = jax.make_mesh((2, 4), ("data", "model"))
 w = jnp.arange(64.0).reshape(8, 8)
 tree = {"w": jax.device_put(w, NamedSharding(mesh_a, P("data", "model"))),
         "b": jnp.arange(8.0, dtype=jnp.bfloat16)}
@@ -188,7 +183,6 @@ def test_async_cached_step_on_data_mesh_routes_shared_rows():
     out = _run("""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
-from repro.compat import make_mesh
 from repro.configs import get_smoke_config
 from repro.core.cache import CachedEmbeddingBagCollection
 from repro.core.dlrm import dlrm_param_specs
@@ -203,7 +197,7 @@ cfg = get_smoke_config("dlrm-m1")
 ebc = EmbeddingBagCollection.build(cfg, n_shards=1, strategy="replicated")
 params = init_params(dlrm_param_specs(cfg, ebc), jax.random.PRNGKey(0))
 opt = adagrad(0.01)
-mesh = make_mesh((8,), ("data",))
+mesh = jax.make_mesh((8,), ("data",))
 N, B = 4, 16
 batches = []
 for t in range(N):
@@ -256,8 +250,7 @@ from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 from repro.kernels import ops, ref
 
-from repro.compat import make_mesh
-mesh = make_mesh((4,), ("model",))
+mesh = jax.make_mesh((4,), ("model",))
 H, D, B, L = 64, 16, 8, 5          # 16 rows per shard
 rng = np.random.RandomState(0)
 table = jnp.asarray(rng.randn(H, D), jnp.float32)

@@ -31,6 +31,25 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
     return times[len(times) // 2] * 1e6
 
 
+def time_interleaved(fns: list, argsets: list, warmup: int = 2,
+                     iters: int = 5) -> list[float]:
+    """Median us/call for several candidates timed ROUND-ROBIN
+    (A/B/C, A/B/C, ...) instead of back-to-back blocks: slow drift on a
+    noisy shared runner then hits every candidate equally, which is what
+    makes their RELATIVE ordering trustworthy. Returns one median per fn.
+    """
+    for _ in range(warmup):
+        for fn, args in zip(fns, argsets):
+            jax.block_until_ready(fn(*args))
+    times: list[list[float]] = [[] for _ in fns]
+    for _ in range(iters):
+        for k, (fn, args) in enumerate(zip(fns, argsets)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            times[k].append(time.perf_counter() - t0)
+    return [sorted(ts)[len(ts) // 2] * 1e6 for ts in times]
+
+
 def emit(name: str, us_per_call: float, derived: float):
     ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.1f},{derived:.4g}", flush=True)

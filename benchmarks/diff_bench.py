@@ -3,6 +3,11 @@ regressions (the ROADMAP perf-trajectory item).
 
     PYTHONPATH=src python -m benchmarks.diff_bench BASELINE.json CURRENT.json
 
+Longer-horizon trend report (informational, never fails) over the whole
+artifact history, oldest first:
+
+    PYTHONPATH=src python -m benchmarks.diff_bench --trend A.json B.json ...
+
 Rules (per row, matched by name across the two files):
   * hit-rate rows — name contains "hit" (deterministic under seeded
     traffic; higher is better) — regress when `derived` drops by more
@@ -81,11 +86,50 @@ def diff(base: dict[str, tuple[float, float]],
     return regressions, warnings
 
 
+def _fmt_seq(vals: list[float | None], prec: str = ".4g") -> str:
+    return " -> ".join("-" if v is None else format(v, prec) for v in vals)
+
+
+def trend(paths: list[str]) -> list[str]:
+    """Longer-horizon trend report over the artifact HISTORY (oldest
+    first): one line per row name tracking `derived` and `us_per_call`
+    across every artifact, with the end-to-end relative change computed
+    between the first and last artifacts that carry the row. Rows are
+    ordered worst time-drift first so the creep the single-step gate's
+    threshold hides (N runs x 9% each) is at the top. Informational —
+    the pairwise `diff` stays the only gate."""
+    histories = [load_rows(p) for p in paths]
+    names = sorted({n for h in histories for n in h})
+    scored: list[tuple[float, str]] = []
+    for name in names:
+        us_seq = [h[name][0] if name in h else None for h in histories]
+        drv_seq = [h[name][1] if name in h else None for h in histories]
+        present_us = [v for v in us_seq if v is not None]
+        present_drv = [v for v in drv_seq if v is not None]
+        us_delta = ((present_us[-1] - present_us[0]) / present_us[0]
+                    if len(present_us) > 1 and present_us[0] > 0 else 0.0)
+        drv_delta = ((present_drv[-1] - present_drv[0]) / present_drv[0]
+                     if len(present_drv) > 1 and present_drv[0] != 0
+                     else 0.0)
+        line = (f"{name}: us {_fmt_seq(us_seq, '.1f')} ({us_delta:+.1%})"
+                f" | derived {_fmt_seq(drv_seq)} ({drv_delta:+.1%})")
+        scored.append((us_delta, line))
+    scored.sort(key=lambda s: -s[0])
+    header = [f"# trend over {len(paths)} artifacts (oldest first), "
+              "worst time drift first"]
+    return header + [line for _, line in scored]
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="fail on >threshold regressions between bench artifacts")
-    ap.add_argument("baseline", help="older BENCH_*.json")
-    ap.add_argument("current", help="newer BENCH_*.json")
+    ap.add_argument("artifacts", nargs="+",
+                    help="BENCH_*.json files: exactly two (baseline, "
+                         "current) to gate, or any number with --trend")
+    ap.add_argument("--trend", action="store_true",
+                    help="print the longer-horizon trend report over the "
+                         "artifact history (oldest first) instead of "
+                         "gating; always exits 0")
     ap.add_argument("--hit-threshold", type=float, default=0.10,
                     help="max relative drop in hit-rate/overlap derived "
                          "columns (default 0.10)")
@@ -95,8 +139,14 @@ def main(argv=None) -> int:
                     help="ignore time regressions on rows faster than this "
                          "(timer noise floor, default 50us)")
     args = ap.parse_args(argv)
-    base = load_rows(args.baseline)
-    cur = load_rows(args.current)
+    if args.trend:
+        for line in trend(args.artifacts):
+            print(line)
+        return 0
+    if len(args.artifacts) != 2:
+        ap.error("exactly two artifacts (baseline, current) unless --trend")
+    base = load_rows(args.artifacts[0])
+    cur = load_rows(args.artifacts[1])
     regressions, warnings = diff(base, cur, args.hit_threshold,
                                  args.time_threshold, args.min_us)
     for w in warnings:

@@ -1,17 +1,20 @@
 """Kernel microbenchmarks (section III-A.2 hot spots): oracle (jnp) path
 timing on CPU + a correctness pass of the Pallas body (interpret mode).
-derived = lookups/s (embedding_bag), pairs/s (dot_interaction),
-rows/s (rowwise_adagrad), lookups/s (sparse_backward_*), x-reduction
-(sparse_backward_bytes).
+derived = lookups/s (embedding_bag, embedding_forward_*), pairs/s
+(dot_interaction), rows/s (rowwise_adagrad), lookups/s (sparse_backward_*),
+x-reduction (sparse_backward_bytes, embedding_forward_bytes).
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, time_fn, time_interleaved
+from repro.data.synthetic import bounded_zipf_rows
 from repro.kernels import ops, ref
-from repro.kernels.sparse_plan import build_sparse_plan
-from repro.launch.analysis import sparse_backward_traffic
+from repro.kernels.sparse_plan import (SparsePlan, build_sparse_plan,
+                                       build_sparse_plan_host)
+from repro.launch.analysis import (embedding_forward_traffic,
+                                   sparse_backward_traffic)
 
 
 def main():
@@ -78,6 +81,57 @@ def main():
     traffic = sparse_backward_traffic(bb, ff, lk2, d2)
     emit("kernels/sparse_backward_bytes_reduction", 0.0,
          traffic["reduction"])
+
+    # dedup'd plan-driven forward (docs/embedding_forward.md) at the same
+    # H=200k table, Zipf-1.05 duplicate-heavy stream: legacy gathers one
+    # row per slot; dedup gathers each unique row once and expands through
+    # the CSR plan; planned consumes a pre-built CAPACITY-TRIMMED plan
+    # (the reader-thread sparse_plan_hook path — the bucketing sort is off
+    # the step entirely). On CPU the measurable step-time win is planned
+    # over dedup (the off-step sort, ~2x): the hardware cache already
+    # dedups the Zipf head for the legacy gather, so planned ~ legacy
+    # here, while the kernel's HBM row-read win is the deterministic
+    # bytes row below (launch/analysis.py model). INTERLEAVED A/B/C
+    # medians: the only trustworthy relative ordering on a noisy shared
+    # runner. derived = lookups/s.
+    nb2 = bb * ff
+    vals = bounded_zipf_rows(np.random.RandomState(1), h2, nb2 * lk2,
+                             1.05).reshape(nb2, lk2)
+    lens = np.random.RandomState(2).randint(1, lk2 + 1, size=(nb2, 1))
+    idxf = jnp.asarray(np.where(np.arange(lk2)[None, :] < lens, vals, -1),
+                       jnp.int32)
+    legacy_f = jax.jit(lambda t, i: ref.embedding_bag_ref(t, i, "sum"))
+    dedup_f = jax.jit(lambda t, i: ops.dedup_embedding_bag(t, i))
+    planned_f = jax.jit(lambda t, i, *p: ops.dedup_embedding_bag(
+        t, i, plan=SparsePlan(*p)))
+    # the planned row rides a CAPACITY-TRIMMED reader-thread plan (the
+    # sparse_plan_hook(capacity=...) deployment): the compact gather is
+    # unique-sized, not slot-count-sized
+    idxf_np = np.asarray(idxf)
+    n_unique = int(len(np.unique(idxf_np[idxf_np >= 0])))
+    cap = 1 << (n_unique - 1).bit_length()
+    fplan = SparsePlan(*(jnp.asarray(x) for x in build_sparse_plan_host(
+        idxf_np.reshape(-1), lookups_per_bag=lk2, capacity=cap)))
+    out_l = legacy_f(tbl, idxf)
+    np.testing.assert_array_equal(np.asarray(out_l),
+                                  np.asarray(dedup_f(tbl, idxf)))
+    np.testing.assert_array_equal(np.asarray(out_l),
+                                  np.asarray(planned_f(tbl, idxf, *fplan)))
+    us_l, us_d, us_p = time_interleaved(
+        [legacy_f, dedup_f, planned_f],
+        [(tbl, idxf), (tbl, idxf), (tbl, idxf) + tuple(fplan)])
+    nlk = nb2 * lk2
+    emit("kernels/embedding_forward_legacy", us_l, nlk / (us_l / 1e6))
+    emit("kernels/embedding_forward_dedup", us_d, nlk / (us_d / 1e6))
+    emit("kernels/embedding_forward_dedup_planned", us_p,
+         nlk / (us_p / 1e6))
+    # the off-step-sort win: pre-built plan vs planning inside the step
+    emit("kernels/embedding_forward_plan_offstep_win", 0.0, us_d / us_p)
+    # deterministic forward-bytes row (seeded stream -> fixed unique count),
+    # gated run-over-run by diff_bench's "bytes" rule
+    ftraffic = embedding_forward_traffic(bb, ff, lk2, d2, n_unique)
+    emit("kernels/embedding_forward_bytes_reduction", 0.0,
+         ftraffic["reduction"])
 
     # interpret-mode correctness spot checks (bodies actually execute)
     out_k = ops.embedding_bag(table[:512], idx[:8] % 512, "sum", None, True)

@@ -222,15 +222,29 @@ class CachedEmbeddingBagCollection:
     # -- admission -----------------------------------------------------------
 
     @staticmethod
-    def _split_batch(idx, row_slot: np.ndarray, cache_rows: int):
+    def _split_batch(idx, row_slot: np.ndarray, cache_rows: int, plan=None):
         """Shared batch parsing for the sync and async planners (their
         behavioural equality is the bit-exactness contract): pad mask,
         unique rows with counts, thrash guard, resident/missing split.
+
+        `plan` (a host SparsePlan over idx in GLOBAL row space, e.g.
+        `kernels.host_plan_from_batch`'s) short-circuits the np.unique sort:
+        the plan's live prefix IS the sorted unique row set and its offset
+        diffs are the counts — the batch was already bucketed once in the
+        reader thread, so the miss planning rides that same artifact
+        (identical outputs, asserted in tests/test_dedup_forward.py).
         Returns (idx, valid, rows, counts, hit_slots, hit_counts, missing,
         miss_counts)."""
         idx = np.asarray(idx)
         valid = idx >= 0
-        rows, counts = np.unique(idx[valid], return_counts=True)
+        if plan is not None:
+            prows = np.asarray(plan.unique_rows)
+            n_live = int((prows >= 0).sum())
+            rows = prows[:n_live].astype(np.int64)
+            counts = np.diff(np.asarray(plan.bag_offsets)[:n_live + 1]
+                             .astype(np.int64))
+        else:
+            rows, counts = np.unique(idx[valid], return_counts=True)
         if len(rows) > cache_rows:
             raise ValueError(
                 f"batch touches {len(rows)} unique rows > cache_rows="
@@ -294,19 +308,21 @@ class CachedEmbeddingBagCollection:
         state.stats.writebacks += int(wb_mask.sum())
         return int(wb_mask.sum())
 
-    def prepare(self, state: CacheState, idx, train: bool = True
-                ) -> np.ndarray:
+    def prepare(self, state: CacheState, idx, train: bool = True,
+                plan=None) -> np.ndarray:
         """Make every row of `idx` cache-resident and remap to slot space.
 
         idx: (B, F, L) OFFSET global rows (-1 pads), host or device array.
         Returns (B, F, L) int32 cache-slot indices (-1 pads preserved) —
         feed these to `lookup_cached` / the cached train step. When `train`,
         the working set's slots are marked dirty (they will receive sparse
-        updates) so eviction writes them back.
+        updates) so eviction writes them back. `plan` (host SparsePlan in
+        global row space) replaces the miss planner's np.unique sort with
+        the reader thread's bucketing — see `_split_batch`.
         """
         (idx, valid, rows, counts, hit_slots, hit_counts, missing,
          miss_counts) = self._split_batch(idx, state.row_slot,
-                                          state.cache_rows)
+                                          state.cache_rows, plan)
         # LFU accounting: decay everything, bump hit slots; admitted slots
         # are seeded with their batch counts by the exchange below.
         state.freq = cache_ops.lfu_touch(
@@ -364,19 +380,41 @@ class CachedEmbeddingBagCollection:
     def plan_to_slots(self, state, batch: dict) -> dict:
         """Relabel a host-built sparse bucketing plan (data.sparse_plan_hook,
         GLOBAL row space) onto the cache slab: unique rows map through
-        row_slot, offsets/bag lists are invariant under the relabel (the
-        row->slot map is a bijection over the batch's — by now resident —
-        working set, and the fused backward never requires unique rows to be
-        sorted). Call AFTER prepare/take_async. Accepts CacheState or
-        AsyncCacheState; returns the three plan keys for the device batch.
+        row_slot (a bijection over the batch's — by now resident — working
+        set), then the runs are RE-SORTED by slot so the plan invariant
+        (live prefix strictly ascending) survives the relabel — the dedup'd
+        forward's compact-buffer remap searches the row list and requires
+        it sorted. Permuting whole runs is free for the fused backward:
+        each unique row's update is independent and its within-run order is
+        untouched, so the result stays bit-identical (asserted in
+        tests/test_sparse_fused.py / test_dedup_forward.py). Call AFTER
+        prepare/take_async. Accepts CacheState or AsyncCacheState; returns
+        the three plan keys for the device batch.
         """
         rows = np.asarray(batch["plan_rows"])
-        slots = np.where(rows >= 0,
-                         state.row_slot[np.maximum(rows, 0)],
-                         -1).astype(np.int32)
-        return {"plan_rows": slots,
-                "plan_offsets": np.asarray(batch["plan_offsets"], np.int32),
-                "plan_bags": np.asarray(batch["plan_bags"], np.int32)}
+        offs = np.asarray(batch["plan_offsets"]).astype(np.int64)
+        bags = np.asarray(batch["plan_bags"], np.int32)
+        n_live = int((rows >= 0).sum())        # pads trail (planner sorts)
+        slots = state.row_slot[rows[:n_live]].astype(np.int64)
+        order = np.argsort(slots, kind="stable")
+        lengths = np.diff(offs[:n_live + 1])[order]
+        new_rows = np.full(rows.shape, -1, np.int32)
+        new_rows[:n_live] = slots[order]
+        new_offs = offs.copy()                 # tail already == n_valid
+        new_offs[:n_live + 1] = np.concatenate(
+            [[0], np.cumsum(lengths)])
+        # permute the bag list segment-wise to follow its runs
+        n_valid = int(offs[n_live])
+        starts = offs[:n_live][order]
+        ends = np.cumsum(lengths)
+        gather = (np.repeat(starts - np.concatenate([[0], ends[:-1]]),
+                            lengths) + np.arange(n_valid)) \
+            if n_live else np.empty((0,), np.int64)
+        new_bags = bags.copy()
+        new_bags[:n_valid] = bags[gather]
+        return {"plan_rows": new_rows,
+                "plan_offsets": new_offs.astype(np.int32),
+                "plan_bags": new_bags}
 
     def mark_updated(self, state, new_cache: jax.Array,
                      new_cache_accum: jax.Array) -> None:
@@ -562,13 +600,14 @@ class CachedEmbeddingBagCollection:
         return pending
 
     def _plan_async(self, astate: AsyncCacheState, idx: np.ndarray,
-                    train: bool) -> StagedBatch:
+                    train: bool, plan=None) -> StagedBatch:
         """Plan one batch's admission: host-side LFU accounting + victim
         choice, dispatch the shadow fetch, flip the maps, queue the commit.
-        Never blocks on device work."""
+        Never blocks on device work. `plan` replaces the np.unique sort
+        with the reader thread's bucketing — see `_split_batch`."""
         (idx, valid, rows, counts, hit_slots, hit_counts, missing,
          miss_counts) = self._split_batch(idx, astate.row_slot,
-                                          astate.cache_rows)
+                                          astate.cache_rows, plan)
         # host LFU (same math as kernels/ref.lfu_touch_ref, in np.float32):
         # decay everything, bump hit slots; admitted slots seeded by admit
         astate.freq *= np.float32(self.decay)
@@ -591,11 +630,11 @@ class CachedEmbeddingBagCollection:
                            pending.ws_mask, hits, n)
 
     def stage_async(self, astate: AsyncCacheState, idx,
-                    train: bool = True) -> np.ndarray:
+                    train: bool = True, plan=None) -> np.ndarray:
         """Stage the NEXT batch: plan + dispatch its shadow fetch while the
         in-flight batch computes. Returns the slot-space remap, which
         `take_async` hands back when the batch becomes current."""
-        staged = self._plan_async(astate, idx, train)
+        staged = self._plan_async(astate, idx, train, plan)
         astate.staged = staged
         return staged.local
 
@@ -621,7 +660,7 @@ class CachedEmbeddingBagCollection:
         return n
 
     def take_async(self, astate: AsyncCacheState, idx,
-                   train: bool = True) -> np.ndarray:
+                   train: bool = True, plan=None) -> np.ndarray:
         """Make `idx`'s batch current: reuse its staged plan when one
         matches (the overlapped path), else plan it now (cold start /
         strict-sync fallback). Marks the working set in-flight and commits
@@ -641,7 +680,7 @@ class CachedEmbeddingBagCollection:
                 astate.stats.misses -= st.misses
                 astate.stats.steps -= 1
                 astate.stats.prefetched += st.misses
-            st = self._plan_async(astate, idx, train)
+            st = self._plan_async(astate, idx, train, plan)
         astate.inflight_mask = st.ws_mask
         self.commit_async(astate)
         return st.local

@@ -88,7 +88,13 @@ def _lookup(params, batch, cfg, ebc, rules):
         mesh = _live_mesh()
         if mesh is not None:
             return ebc.lookup_pooled_psum(params["emb"], batch["idx"], mesh)
-    return ebc.lookup(params["emb"], batch["idx"], rules)
+    # a batch-attached bucketing plan (data.sparse_plan_hook, or the cached
+    # steps' slot-relabelled copy) dedups the forward gather — the plan is
+    # built once per batch and shared with the fused backward and the
+    # cached tiers' miss planning (docs/embedding_forward.md)
+    from repro.kernels.sparse_plan import plan_from_batch
+    return ebc.lookup(params["emb"], batch["idx"], rules,
+                      plan=plan_from_batch(batch))
 
 
 def dlrm_forward(params: dict, batch: dict, cfg: DLRMConfig,

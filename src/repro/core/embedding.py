@@ -78,19 +78,44 @@ class EmbeddingBagCollection:
 
     # -- lookup ------------------------------------------------------------
 
-    def lookup(self, params: dict, idx: jax.Array, rules=None) -> jax.Array:
+    def lookup(self, params: dict, idx: jax.Array, rules=None,
+               plan=None) -> jax.Array:
         """idx: (B, F, L) offset global rows, -1 pads. Returns (B, F, d)
         sum-pooled embeddings. Pure-jnp global-semantics path: under pjit the
         gather from the model-sharded mega table lowers to local gathers +
-        the cross-shard reduce — the paper's PS pull."""
+        the cross-shard reduce — the paper's PS pull.
+
+        `plan` (a kernels.SparsePlan over idx's flat stream, e.g. the one
+        `data.sparse_plan_hook` attaches and `kernels.plan_from_batch`
+        rehydrates) DEDUPLICATES the mega-table gather: the table is
+        touched once per plan entry (its unique capacity U, not B*F*L) into
+        a compact hot buffer, and every lookup slot then reads that buffer
+        through an index-only searchsorted remap. The pooling that follows
+        is the SAME code either way, so the planned path is BIT-EXACT vs
+        the plan-less one (asserted in tests/test_dedup_forward.py) — the
+        forward half of the plan-once-used-thrice contract
+        (docs/embedding_forward.md)."""
         from repro.nn.sharding import shard_activation
         mega = params["mega"]
         b, f, lk = idx.shape
 
+        if plan is None:
+            def take(flat):                  # flat: (n,) clipped global rows
+                return jnp.take(mega, flat, axis=0)
+        else:
+            compact = jnp.take(mega, jnp.maximum(plan.unique_rows, 0),
+                               axis=0)       # the ONLY mega-table gather
+            sent = jnp.where(plan.unique_rows >= 0, plan.unique_rows,
+                             jnp.iinfo(jnp.int32).max)
+
+            def take(flat):
+                return jnp.take(compact, jnp.searchsorted(sent, flat),
+                                axis=0)
+
         def pool_one(_, idx_f):
             # idx_f: (b, lk) one feature's bags
             valid = idx_f >= 0
-            rows = jnp.take(mega, jnp.maximum(idx_f, 0).reshape(-1), axis=0)
+            rows = take(jnp.maximum(idx_f, 0).reshape(-1))
             rows = rows.reshape(b, lk, -1)
             rows = jnp.where(valid[..., None], rows.astype(jnp.float32), 0.0)
             return None, rows.sum(axis=1).astype(mega.dtype)
@@ -103,7 +128,7 @@ class EmbeddingBagCollection:
             pooled = jnp.swapaxes(pooled, 0, 1)              # (b, f, d)
         else:
             valid = idx >= 0
-            rows = jnp.take(mega, jnp.maximum(idx, 0).reshape(-1), axis=0)
+            rows = take(jnp.maximum(idx, 0).reshape(-1))
             rows = rows.reshape(b, f, lk, -1)
             rows = jnp.where(valid[..., None], rows.astype(jnp.float32), 0.0)
             pooled = rows.sum(axis=2).astype(mega.dtype)
@@ -150,14 +175,24 @@ class EmbeddingBagCollection:
 
     def lookup_local(self, mega_shard: jax.Array, idx: jax.Array,
                      row_lo: int, row_hi: int,
-                     interpret: bool = False) -> jax.Array:
+                     interpret: bool = False,
+                     dedup: bool = False) -> jax.Array:
         """Per-shard lookup for shard_map/serving: gather only rows owned by
-        this shard ([row_lo, row_hi)); callers all-reduce partial pools."""
+        this shard ([row_lo, row_hi)); callers all-reduce partial pools.
+
+        `dedup=True` routes through the plan-driven dedup'd kernel
+        (ops.dedup_embedding_bag, plan built on device over the shard-local
+        stream): each locally-owned unique row leaves HBM once per batch
+        instead of once per referencing slot."""
         b, f, lk = idx.shape
         local = jnp.where((idx >= row_lo) & (idx < row_hi),
-                          idx - row_lo, -1)
-        out = ops.embedding_bag(mega_shard, local.reshape(b * f, lk),
-                                "sum", None, interpret)
+                          idx - row_lo, -1).reshape(b * f, lk)
+        if dedup:
+            out = ops.dedup_embedding_bag(mega_shard, local, None, "sum",
+                                          None, interpret)
+        else:
+            out = ops.embedding_bag(mega_shard, local, "sum", None,
+                                    interpret)
         return out.reshape(b, f, -1)
 
     # -- gradient layout for the sparse optimizer ---------------------------

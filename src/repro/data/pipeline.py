@@ -222,27 +222,35 @@ def dedup_indices_hook(table_offsets: Sequence[int], key: str = "idx",
 
 
 def sparse_plan_hook(table_offsets: Sequence[int], key: str = "idx",
-                     out_key: str = "uniq_rows"
+                     out_key: str = "uniq_rows",
+                     capacity: int | None = None
                      ) -> Callable[[dict[str, np.ndarray]],
                                    dict[str, np.ndarray]]:
-    """`dedup_indices_hook` + the fused-sparse-backward bucketing plan.
+    """`dedup_indices_hook` + the shared sparse bucketing plan.
 
     On top of the dedup hook's rewrite (batch[key] -> offset global rows,
     batch[out_key] = unique row set), attaches the CSR bucketing layout of
     kernels/sparse_plan.py as batch["plan_rows"/"plan_offsets"/"plan_bags"].
     The sort runs in the pipeline worker thread, so by the time the train
     step consumes batch k its plan was built while batch k-1 computed — the
-    same fetch/compute overlap the cached tier gets from `prefetch`, applied
-    to the gradient-aggregation planning (docs/sparse_optimizer.md). The
-    train steps pick the plan up via `kernels.plan_from_batch`; the cached
-    steps relabel it to slot space with `plan_to_slots`.
+    same fetch/compute overlap the cached tier gets from `prefetch`. The
+    plan is built ONCE here and consumed THRICE downstream
+    (docs/embedding_forward.md): the forward's dedup'd gather
+    (`dlrm_grads` -> `ebc.lookup(plan=...)`), the fused sparse backward
+    (`kernels.plan_from_batch`), and the cached tiers' miss planning
+    (`kernels.host_plan_from_batch` -> `prepare`/`take_async`; the cached
+    steps also relabel it to slot space with `plan_to_slots`).
+
+    `capacity` trims the plan's unique arrays to a static budget (smaller
+    forward gathers and backward grids); batches whose unique count
+    overflows it fail loudly in the reader thread.
     """
     from repro.kernels.sparse_plan import build_sparse_plan_host
     base = dedup_indices_hook(table_offsets, key, out_key)
 
     def hook(batch: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
         out = base(batch)
-        plan = build_sparse_plan_host(out[key])
+        plan = build_sparse_plan_host(out[key], capacity=capacity)
         out.update(plan.to_batch())
         return out
 

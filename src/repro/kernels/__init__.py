@@ -5,7 +5,9 @@ throughput limiter of recommendation training, and section VII notes prior
 near-memory accelerators are "not optimized for gradient aggregation". The
 three kernels here cover exactly that path:
 
-  embedding_bag    fused multi-hot gather + pooling (fwd) — the EMB lookup
+  embedding_bag    fused multi-hot gather + pooling (fwd) — the EMB lookup,
+                   legacy one-row-read-per-slot AND the plan-driven dedup'd
+                   design (each unique row leaves HBM once per batch)
   dot_interaction  pairwise-dot feature interaction (section III-A.3), MXU-shaped
   rowwise_adagrad  deduplicated sparse gradient aggregation + row-wise
                    AdaGrad apply — the EMB backward/update (legacy two-pass)
@@ -25,6 +27,7 @@ CPU; `interpret=True` executes the real kernel body for validation.
 """
 from repro.kernels.cache_ops import cache_exchange, lfu_touch  # noqa: F401
 from repro.kernels.ops import (  # noqa: F401
+    dedup_embedding_bag,
     dot_interaction,
     embedding_bag,
     flash_attention,
@@ -35,5 +38,6 @@ from repro.kernels.sparse_plan import (  # noqa: F401
     SparsePlan,
     build_sparse_plan,
     build_sparse_plan_host,
+    host_plan_from_batch,
     plan_from_batch,
 )

@@ -19,7 +19,8 @@ import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.dot_interaction import dot_interaction_kernel
-from repro.kernels.embedding_bag import embedding_bag_kernel
+from repro.kernels.embedding_bag import (dedup_embedding_bag_kernel,
+                                         embedding_bag_kernel)
 from repro.kernels.flash_attention import flash_attention_kernel
 from repro.kernels.rowwise_adagrad import rowwise_adagrad_kernel
 from repro.kernels.sparse_plan import SparsePlan, build_sparse_plan
@@ -86,6 +87,66 @@ def _bag_bwd(mode, use_kernel, interpret, res, g):
 
 
 embedding_bag.defvjp(_bag_fwd, _bag_bwd)
+
+# ---------------------------------------------------------------------------
+# dedup_embedding_bag — the plan-shared forward (docs/embedding_forward.md)
+# ---------------------------------------------------------------------------
+
+
+def dedup_embedding_bag(table: jax.Array, indices: jax.Array,
+                        plan: SparsePlan | None = None, mode: str = "sum",
+                        use_kernel: bool | None = None,
+                        interpret: bool = False) -> jax.Array:
+    """Deduplicated pooled multi-hot lookup: the table is gathered once per
+    plan entry (unique row), not once per lookup slot.
+
+    table: (H, D); indices: (B, L) int32, -1 pads; plan: SparsePlan built
+    over indices' FLAT stream (bag = slot // L) — e.g. the reader thread's
+    `data.sparse_plan_hook` product, possibly capacity-trimmed; built on
+    device when None. Returns (B, D).
+
+    The jnp fallback is BIT-EXACT vs `embedding_bag`/`ref.embedding_bag_ref`
+    (the forward's acceptance contract); the Pallas kernel expands bags in
+    the plan's CSR order and is tested allclose like every kernel body.
+    """
+    if plan is None:
+        plan = build_sparse_plan(indices.reshape(-1),
+                                 lookups_per_bag=indices.shape[1])
+    return _dedup_bag(table, indices, plan.unique_rows, plan.bag_offsets,
+                      plan.bag_ids, mode, use_kernel, interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def _dedup_bag(table, indices, rows, offs, bags, mode, use_kernel,
+               interpret):
+    if _use_pallas(use_kernel) or interpret:
+        d = table.shape[1]
+        tp = _pad_to(table, LANE, 1)
+        out = dedup_embedding_bag_kernel(tp, rows, offs, bags,
+                                         n_bags=indices.shape[0],
+                                         interpret=interpret)[:, :d]
+        if mode == "mean":
+            cnt = jnp.maximum((indices >= 0).sum(1, keepdims=True), 1)
+            out = out / cnt
+        return out.astype(table.dtype)
+    return ref.dedup_embedding_bag_ref(table, indices, rows, mode)
+
+
+def _dedup_fwd(table, indices, rows, offs, bags, mode, use_kernel,
+               interpret):
+    out = _dedup_bag(table, indices, rows, offs, bags, mode, use_kernel,
+                     interpret)
+    # identical residual layout to embedding_bag's VJP — same backward
+    return out, (indices, table.shape[0],
+                 (indices >= 0).sum(1) if mode == "mean" else None)
+
+
+def _dedup_bwd(mode, use_kernel, interpret, res, g):
+    gtab, _ = _bag_bwd(mode, use_kernel, interpret, res, g)
+    return gtab, None, None, None, None
+
+
+_dedup_bag.defvjp(_dedup_fwd, _dedup_bwd)
 
 # ---------------------------------------------------------------------------
 # dot_interaction

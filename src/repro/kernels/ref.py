@@ -28,6 +28,36 @@ def embedding_bag_ref(table: jax.Array, indices: jax.Array,
     return out.astype(table.dtype)
 
 
+def dedup_embedding_bag_ref(table: jax.Array, indices: jax.Array,
+                            unique_rows: jax.Array,
+                            mode: str = "sum") -> jax.Array:
+    """Plan-shared dedup'd forward (docs/embedding_forward.md), pure jnp —
+    BIT-EXACT vs `embedding_bag_ref` on the same (table, indices) whenever
+    `unique_rows` covers every valid index (the planner contract): the
+    (H, D) table is gathered ONCE per plan entry (U rows, not B*L), each
+    lookup slot then reads its row from that compact buffer through an
+    index-only searchsorted remap, and the masked pooling that follows is
+    the SAME expression as the legacy oracle — identical float values
+    through an identical reduction (asserted in tests/test_dedup_forward.py).
+
+    table: (H, D); indices: (B, L) int32, -1 = padding; unique_rows: (U,)
+    the plan's unique rows, live prefix strictly ascending, -1 past the
+    unique count. Returns (B, D).
+    """
+    sent = jnp.where(unique_rows >= 0, unique_rows,
+                     jnp.iinfo(jnp.int32).max)        # -1 tail sorts last
+    compact = table[jnp.maximum(unique_rows, 0)]      # the ONLY table gather
+    valid = indices >= 0
+    pos = jnp.searchsorted(sent, jnp.maximum(indices, 0).reshape(-1))
+    rows = compact[pos].reshape(*indices.shape, -1)   # (B, L, D)
+    rows = jnp.where(valid[..., None], rows.astype(jnp.float32), 0.0)
+    out = rows.sum(axis=1)
+    if mode == "mean":
+        cnt = jnp.maximum(valid.sum(axis=1, keepdims=True), 1)
+        out = out / cnt
+    return out.astype(table.dtype)
+
+
 def dot_interaction_ref(z: jax.Array) -> jax.Array:
     """Pairwise dot-product feature interaction (paper section III-A.3).
 
@@ -102,23 +132,25 @@ def bag_grad_sums(unique_rows: jax.Array, bag_offsets: jax.Array,
     broadcast-then-dedup: nothing `(B*F*L, D)`-shaped is built before this
     gather, and XLA fuses the gather into the segment sum.
 
-    unique_rows: (N,); bag_offsets: (N+1,); bag_ids: (N,); pooled:
-    (B*F, D) fp32. Returns (N, D) fp32 `gsum` aligned with `unique_rows`
-    (zeros past the unique count). Slots within a run arrive in flat-batch
-    order (the planner's stable sort), so each row's accumulation order —
-    and hence its bits — matches the legacy per-lookup scatter-add.
+    unique_rows: (U,); bag_offsets: (U+1,); bag_ids: (N,) — U may be
+    smaller than N for a capacity-trimmed plan; pooled: (B*F, D) fp32.
+    Returns (U, D) fp32 `gsum` aligned with `unique_rows` (zeros past the
+    unique count). Slots within a run arrive in flat-batch order (the
+    planner's stable sort), so each row's accumulation order — and hence
+    its bits — matches the legacy per-lookup scatter-add.
     """
     n = bag_ids.shape[0]
-    n_valid = bag_offsets[n]                        # planner fills tail
+    u = bag_offsets.shape[0] - 1                    # plan's unique capacity
+    n_valid = bag_offsets[u]                        # planner fills tail
     pos = jnp.arange(n)
     # run id per sorted slot, O(n): count the run starts at or before each
     # position (phantom runs all "start" at n_valid, inflating only the
     # dead tail, which is routed to the dropped segment below)
     marks = jnp.zeros((n + 1,), jnp.int32).at[bag_offsets[1:]].add(1)
     seg = jnp.cumsum(marks[:n])
-    seg = jnp.where(pos < n_valid, seg, n)          # n = dropped
+    seg = jnp.where(pos < n_valid, seg, u)          # u = dropped
     contrib = pooled[bag_ids].astype(jnp.float32)   # dead slots drop via seg
-    return jax.ops.segment_sum(contrib, seg, num_segments=n + 1)[:n]
+    return jax.ops.segment_sum(contrib, seg, num_segments=u + 1)[:u]
 
 
 def fused_bag_backward_adagrad_ref(table: jax.Array, accum: jax.Array,

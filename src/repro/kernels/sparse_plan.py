@@ -41,9 +41,19 @@ _SENTINEL = np.iinfo(np.int32).max
 
 class SparsePlan(NamedTuple):
     """CSR layout of a batch's lookups, grouped by unique row. A NamedTuple
-    of arrays — a pytree, so it rides through jit/shard_map/batch dicts."""
-    unique_rows: jax.Array     # (N,) int32, -1 past the unique count
-    bag_offsets: jax.Array     # (N+1,) int32, nondecreasing
+    of arrays — a pytree, so it rides through jit/shard_map/batch dicts.
+
+    `unique_rows`/`bag_offsets` may be CAPACITY-TRIMMED to (U,)/(U+1,) with
+    U < N (see the builders' `capacity`): the tail past the unique count is
+    -1 / n_valid either way, and every consumer — the dedup'd forward
+    gather, the fused backward, `ref.bag_grad_sums`, the cached tiers'
+    miss planning — sizes itself from the arrays, so a trimmed plan just
+    means smaller gathers and a shorter kernel grid. Invariant relied on
+    by the forward's compact-buffer remap: the live prefix of
+    `unique_rows` is STRICTLY ASCENDING (the planner sorts; `cache.
+    plan_to_slots` re-sorts after its row->slot relabel to keep it)."""
+    unique_rows: jax.Array     # (U,) int32, -1 past the unique count
+    bag_offsets: jax.Array     # (U+1,) int32, nondecreasing
     bag_ids: jax.Array         # (N,) int32 flat (example*F + feature) bags
 
     def to_batch(self) -> dict:
@@ -62,12 +72,29 @@ def plan_from_batch(batch: dict) -> SparsePlan | None:
                       jnp.asarray(batch["plan_bags"], jnp.int32))
 
 
+def host_plan_from_batch(batch: dict) -> SparsePlan | None:
+    """numpy view of a hook-attached plan, no device transfer — what the
+    cached tiers' host-side miss planning consumes (core/cache.py)."""
+    if "plan_rows" not in batch:
+        return None
+    return SparsePlan(np.asarray(batch["plan_rows"]),
+                      np.asarray(batch["plan_offsets"]),
+                      np.asarray(batch["plan_bags"]))
+
+
 def build_sparse_plan(idx: jax.Array,
-                      lookups_per_bag: int | None = None) -> SparsePlan:
+                      lookups_per_bag: int | None = None,
+                      capacity: int | None = None) -> SparsePlan:
     """idx: (B, F, L) offset global rows with -1 pads (or already-flat (N,)
     with `lookups_per_bag=L`). Pure int32 compute; O(N log N) in LOOKUPS,
     independent of table height (the paper's flat CPU hash-size curve,
-    Fig. 12, depends on exactly this property)."""
+    Fig. 12, depends on exactly this property).
+
+    `capacity` trims unique_rows/bag_offsets to (capacity,)/(capacity+1,)
+    — the static unique budget the dedup'd forward gather sizes itself by.
+    The trim is a static slice, so the CALLER owns the contract that the
+    batch's unique count fits (jit cannot raise data-dependently; the host
+    twin below DOES raise, which is what the reader-thread hook runs)."""
     if idx.ndim == 3:
         _, _, lk = idx.shape
     else:
@@ -92,14 +119,19 @@ def build_sparse_plan(idx: jax.Array,
     bag_offsets = jnp.full((n + 1,), n_valid, jnp.int32).at[
         jnp.where(head, rank, n + 1)].set(
             jnp.arange(n, dtype=jnp.int32), mode="drop")
+    if capacity is not None and capacity < n:
+        unique_rows = unique_rows[:capacity]
+        bag_offsets = bag_offsets[:capacity + 1]
     return SparsePlan(unique_rows, bag_offsets, bag_ids)
 
 
 def build_sparse_plan_host(idx: np.ndarray,
-                           lookups_per_bag: int | None = None) -> SparsePlan:
+                           lookups_per_bag: int | None = None,
+                           capacity: int | None = None) -> SparsePlan:
     """numpy twin of `build_sparse_plan` with identical outputs (asserted in
     tests/test_sparse_fused.py) — runs in the pipeline reader thread so the
-    sort overlaps the in-flight batch's device compute."""
+    sort overlaps the in-flight batch's device compute. Unlike the jnp
+    twin, `capacity` overflow RAISES here (shapes are host-side)."""
     idx = np.asarray(idx)
     if idx.ndim == 3:
         lk = idx.shape[2]
@@ -117,8 +149,13 @@ def build_sparse_plan_host(idx: np.ndarray,
         & (s != _SENTINEL)
     n_valid = int(valid.sum())
     heads = np.flatnonzero(head)
-    unique_rows = np.full((n,), -1, np.int32)
+    if capacity is not None and len(heads) > capacity:
+        raise ValueError(
+            f"plan capacity overflow: batch has {len(heads)} unique rows "
+            f"> capacity={capacity}; raise the capacity or shrink the batch")
+    u = n if capacity is None else min(capacity, n)
+    unique_rows = np.full((u,), -1, np.int32)
     unique_rows[:len(heads)] = s[heads]
-    bag_offsets = np.full((n + 1,), n_valid, np.int32)
+    bag_offsets = np.full((u + 1,), n_valid, np.int32)
     bag_offsets[:len(heads)] = heads
     return SparsePlan(unique_rows, bag_offsets, bag_ids)

@@ -10,7 +10,8 @@ kernel:
 
     DMA row + accumulator in (HBM->VMEM)
     for each referencing bag (CSR slice of the plan):
-        DMA the bag's POOLED (1, D) gradient in, accumulate in VMEM
+        DMA the bag's POOLED (1, D) gradient in — DOUBLE-BUFFERED, bag
+        j+1's fetch rides behind bag j's accumulate — then add in VMEM
     acc' = acc + mean(g^2);  w' = w - lr * g * rsqrt(acc' + eps)
     DMA row + accumulator back, in place via io aliasing
 
@@ -40,11 +41,12 @@ def _fused_kernel(uniq_ref, off_ref, bag_ref, lr_ref, grads_ref, table_ref,
                   gbuf, gacc, sems, *, eps: float):
     """Grid step i updates unique row uniq_ref[i].
 
-    uniq_ref: (N,), off_ref: (N+1,), bag_ref: (N,) SMEM (scalar prefetch);
-    lr_ref: (1,) SMEM; grads_ref: (B*F, D) HBM pooled grads; table_ref/
-    table_out: (H, D) HBM aliased; accum_ref/accum_out: (H, 1) HBM aliased;
-    row_vmem: (1, D); acc_vmem: (1, 1); gbuf/gacc: (1, D) f32 staging +
-    accumulator; sems: 3 DMA semaphores.
+    uniq_ref: (U,), off_ref: (U+1,), bag_ref: (N,) SMEM (scalar prefetch;
+    U may be capacity-trimmed below N); lr_ref: (1,) SMEM; grads_ref:
+    (B*F, D) HBM pooled grads; table_ref/table_out: (H, D) HBM aliased;
+    accum_ref/accum_out: (H, 1) HBM aliased; row_vmem: (1, D); acc_vmem:
+    (1, 1); gbuf: (2, 1, D) f32 double-buffered grad staging; gacc: (1, D)
+    f32 accumulator; sems: 4 DMA semaphores (row, accum, grad slot 0/1).
     """
     i = pl.program_id(0)
     ix = uniq_ref[i]
@@ -60,17 +62,34 @@ def _fused_kernel(uniq_ref, off_ref, bag_ref, lr_ref, grads_ref, table_ref,
         cp_a.start()
         gacc[...] = jnp.zeros_like(gacc)
 
+        lo = off_ref[i]
+        hi = off_ref[i + 1]
+
+        def grad_copy(j):
+            # slot = parity of the ABSOLUTE bag position, so start(j+1)
+            # and wait(j) always address different slots/semaphores; one
+            # descriptor builder serves start AND wait (see embedding_bag)
+            slot = jax.lax.rem(j, 2)
+            return pltpu.make_async_copy(
+                grads_ref.at[pl.ds(bag_ref[j], 1)], gbuf.at[slot],
+                sems.at[2 + slot])
+
+        @pl.when(lo < hi)
+        def _():
+            grad_copy(lo).start()
+
         def body(j, carry):
-            cp_g = pltpu.make_async_copy(
-                grads_ref.at[pl.ds(bag_ref[j], 1)], gbuf, sems.at[2])
-            cp_g.start()
-            cp_g.wait()
+            @pl.when(j + 1 < hi)
+            def _():
+                grad_copy(j + 1).start()    # fetch bag j+1 behind bag j
+            grad_copy(j).wait()
             # flat-batch bag order (the planner's stable sort) — keeps the
             # accumulation bit-identical to the legacy scatter-add
-            gacc[...] = gacc[...] + gbuf[...].astype(jnp.float32)
+            gacc[...] = gacc[...] + \
+                gbuf[jax.lax.rem(j, 2)].astype(jnp.float32)
             return carry
 
-        jax.lax.fori_loop(off_ref[i], off_ref[i + 1], body, 0)
+        jax.lax.fori_loop(lo, hi, body, 0)
         cp_r.wait()
         cp_a.wait()
 
@@ -126,9 +145,9 @@ def fused_bag_backward_adagrad_kernel(table: jax.Array, accum: jax.Array,
             scratch_shapes=[
                 MemorySpace.VMEM((1, d), table.dtype),
                 MemorySpace.VMEM((1, 1), jnp.float32),
+                MemorySpace.VMEM((2, 1, d), jnp.float32),
                 MemorySpace.VMEM((1, d), jnp.float32),
-                MemorySpace.VMEM((1, d), jnp.float32),
-                SemaphoreType.DMA((3,)),
+                SemaphoreType.DMA((4,)),
             ],
         ),
         out_shape=[jax.ShapeDtypeStruct((h, d), table.dtype),

@@ -23,6 +23,10 @@ tests/test_analysis.py.
 `sparse_backward_traffic` is the companion analytic model for the sparse
 optimizer path: intermediate bytes the legacy vs fused backward materialize
 between autodiff's pooled gradients and the table update.
+`embedding_forward_traffic` mirrors it for the forward: bytes between the
+mega table and the pooled bags for the legacy per-slot gather vs the
+plan-driven dedup'd gather, with `zipf_expected_unique` supplying the
+deterministic unique-row count of a bounded-Zipf access stream.
 """
 from __future__ import annotations
 
@@ -69,6 +73,74 @@ def sparse_backward_traffic(batch: int, n_features: int, truncation: int,
     fused = (2.0 * n + n + 1.0) * index_itemsize
     return {"legacy_bytes": legacy, "fused_bytes": fused,
             "reduction": legacy / fused}
+
+
+def embedding_forward_traffic(batch: int, n_features: int, truncation: int,
+                              embed_dim: int, n_unique: float,
+                              itemsize: int = 4, index_itemsize: int = 4,
+                              plan_shared: bool = True) -> dict[str, float]:
+    """Bytes the legacy vs dedup'd embedding FORWARD moves between the mega
+    table and the pooled (B, F, D) bags — the forward companion of
+    `sparse_backward_traffic`, same accounting discipline (tensors that
+    cross op/kernel boundaries, counted once each per step).
+
+    legacy (per-slot gather, `lookup` without a plan / embedding_bag_kernel):
+      * one HBM row read per lookup slot — the kernel DMAs every slot, pads
+        included, so legacy_row_reads = B*F*L;
+      * three full-width (B*F*L, D) per-slot tensors on the jnp path: the
+        gather result, the validity-masked fp32 copy, and the pooling
+        pass's re-read of it.
+    dedup (plan-driven gather, `lookup(plan=...)` / dedup_embedding_bag):
+      * each plan entry (unique row) read from the table exactly once —
+        dedup_row_reads = n_unique, the batch duplication factor fewer;
+      * the int32 CSR plan — counted here only when `plan_shared=False`:
+        the plan-once-used-thrice contract builds it per batch for the
+        BACKWARD's model (`sparse_backward_traffic` already charges
+        (3N+1) index bytes), and the forward rides the same artifact.
+
+    `n_unique` is the batch's unique-row count (or its static plan
+    capacity): measure it, or use `zipf_expected_unique` for the
+    deterministic bounded-Zipf expectation. Returns legacy/dedup bytes and
+    row reads with their ratios; the ISSUE acceptance asserts
+    reduction >= truncation at the prod shape in the Zipf-head reuse
+    regime (tests/test_dedup_forward.py).
+    """
+    n = batch * n_features * truncation
+    legacy = 3.0 * n * embed_dim * itemsize
+    plan_bytes = 0.0 if plan_shared else (3.0 * n + 1.0) * index_itemsize
+    dedup = n_unique * embed_dim * itemsize + plan_bytes
+    return {"legacy_bytes": legacy, "dedup_bytes": dedup,
+            "reduction": legacy / dedup,
+            "legacy_row_reads": float(n),
+            "dedup_row_reads": float(n_unique),
+            "row_read_reduction": n / n_unique}
+
+
+def zipf_expected_unique(n_draws: float, hash_size: int,
+                         alpha: float = 1.05,
+                         chunk: int = 1_000_000) -> float:
+    """Expected number of DISTINCT rows among `n_draws` i.i.d. draws from
+    the bounded Zipf(alpha) over [0, hash_size) (the
+    `data.synthetic.bounded_zipf_rows` distribution):
+
+        E[unique] = sum_r 1 - (1 - p_r)^n,   p_r ∝ (r+1)^-alpha.
+
+    Exact chunked float64 sum — deterministic (no sampling), O(hash_size),
+    fine up to the paper's 2e7-row clip. This is the duplication-factor
+    denominator of `embedding_forward_traffic` for synthetic traffic."""
+    import numpy as np  # local: this module otherwise imports stdlib only
+    h = int(hash_size)
+    norm = 0.0
+    for lo in range(1, h + 1, chunk):
+        r = np.arange(lo, min(lo + chunk, h + 1), dtype=np.float64)
+        norm += float((r ** -alpha).sum())
+    total = 0.0
+    for lo in range(1, h + 1, chunk):
+        r = np.arange(lo, min(lo + chunk, h + 1), dtype=np.float64)
+        p = (r ** -alpha) / norm
+        # 1-(1-p)^n via expm1/log1p: stable for the tiny tail probabilities
+        total += float((-np.expm1(n_draws * np.log1p(-p))).sum())
+    return total
 
 
 # ---------------------------------------------------------------------------

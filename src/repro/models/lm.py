@@ -130,11 +130,10 @@ def lm_logits(params: dict, x: jax.Array, cfg: ModelConfig,
     if cfg.frontend == "audio":
         b, s, _ = logits.shape
         logits = logits.reshape(b, s, cfg.n_codebooks, cfg.vocab_size)
-    logits = shard_activation(
+    return shard_activation(
         logits, ("act_batch", "act_seq", "act_vocab")
         if logits.ndim == 3 else ("act_batch", "act_seq", None, "act_vocab"),
         rules)
-    return logits
 
 # ---------------------------------------------------------------------------
 # block application

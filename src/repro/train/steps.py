@@ -23,7 +23,7 @@ from repro.core.dlrm import dlrm_grads
 from repro.core.embedding import EmbeddingBagCollection
 from repro.kernels import ops as kernel_ops
 from repro.kernels import ref as kref
-from repro.kernels.sparse_plan import plan_from_batch
+from repro.kernels.sparse_plan import host_plan_from_batch, plan_from_batch
 from repro.models.lm import lm_loss
 from repro.nn.sharding import (TRAIN_RULES, LogicalRules,
                                _live_mesh_axis_names)
@@ -263,10 +263,12 @@ def _build_cached_inner(cfg: DLRMConfig, cc, dense_opt: Optimizer,
                         sparse_lr: float, sparse_eps: float,
                         interpret: bool, rules: LogicalRules) -> Callable:
     """Jitted device half shared by the sync and async cached steps:
-    forward/backward/update entirely against the (donated) cache slab. The
-    sparse update runs the fused bag backward on SLOT space — when the batch
-    carries a slot-relabelled plan (`CachedEmbeddingBagCollection.
-    plan_to_slots`), even the bucketing sort stays off the device."""
+    forward/backward/update entirely against the (donated) cache slab. A
+    slot-relabelled plan in the batch (`CachedEmbeddingBagCollection.
+    plan_to_slots`) is consumed TWICE here: the forward's lookup dedups its
+    slab gather through it (via `dlrm_grads` -> `ebc.lookup(plan=...)`) and
+    the fused bag backward buckets by it — the bucketing sort never runs on
+    the device."""
 
     def inner(dense_params, dense_state, cache, cache_accum, batch, step_idx):
         params = {**dense_params, "emb": {"mega": cache}}
@@ -313,7 +315,10 @@ def build_cached_dlrm_train_step(cfg: DLRMConfig, cc, dense_opt: Optimizer,
                                     sparse_eps, interpret, rules)
 
     def step(params, state, cache_state, batch, step_idx, next_batch=None):
-        local = cc.prepare(cache_state, batch["idx"], train=True)
+        # a hook-attached plan feeds the miss planner too (its live prefix
+        # IS the sorted unique row set) — the np.unique re-sort is gone
+        local = cc.prepare(cache_state, batch["idx"], train=True,
+                           plan=host_plan_from_batch(batch))
         dev_batch = {**batch, "idx": jnp.asarray(local)}
         dev_batch.pop("uniq_rows", None)
         if "plan_rows" in batch:
@@ -379,7 +384,8 @@ def build_async_cached_dlrm_train_step(cfg: DLRMConfig, cc,
 
     def step(params, state, astate, batch, step_idx, next_batch=None,
              prefetch_rows=None):
-        local = cc.take_async(astate, batch["idx"], train=True)
+        local = cc.take_async(astate, batch["idx"], train=True,
+                              plan=host_plan_from_batch(batch))
         dev_batch = {**batch, "idx": jnp.asarray(local)}
         dev_batch.pop("uniq_rows", None)
         if "plan_rows" in batch:
@@ -396,7 +402,8 @@ def build_async_cached_dlrm_train_step(cfg: DLRMConfig, cc,
             # dispatched after the jitted step: the fetch only READS the
             # tiers, so it overlaps the in-flight compute; its commit waits
             # for the next step boundary
-            cc.stage_async(astate, next_batch["idx"], train=True)
+            cc.stage_async(astate, next_batch["idx"], train=True,
+                           plan=host_plan_from_batch(next_batch))
         if not strict_sync and prefetch_rows is not None:
             cc.stage_rows(astate, prefetch_rows)
         return new_dense, {"dense": new_dense_state}, metrics

@@ -5,7 +5,7 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks.diff_bench import diff, load_rows, main  # noqa: E402
+from benchmarks.diff_bench import diff, load_rows, main, trend  # noqa: E402
 
 
 def _rows(**kv):
@@ -69,20 +69,60 @@ def test_quality_row_also_checked_for_time():
     assert len(regs) == 1 and "us_per_call" in regs[0]
 
 
-def test_cli_end_to_end(tmp_path):
-    def write(name, rows):
-        p = tmp_path / name
-        p.write_text(json.dumps(
-            {"rows": [{"name": n, "us_per_call": u, "derived": d}
-                      for n, (u, d) in rows.items()], "failures": 0}))
-        return str(p)
+def _write(tmp_path, name, rows):
+    p = tmp_path / name
+    p.write_text(json.dumps(
+        {"rows": [{"name": n, "us_per_call": u, "derived": d}
+                  for n, (u, d) in rows.items()], "failures": 0}))
+    return str(p)
 
-    base = write("base.json", _rows(**{"cache/hit_x": (1000.0, 0.8),
-                                       "cache/step_y": (5000.0, 10.0)}))
-    good = write("good.json", _rows(**{"cache/hit_x": (1010.0, 0.81),
-                                       "cache/step_y": (5100.0, 10.0)}))
-    bad = write("bad.json", _rows(**{"cache/hit_x": (1000.0, 0.5),
-                                     "cache/step_y": (5000.0, 10.0)}))
+
+def test_cli_end_to_end(tmp_path):
+    base = _write(tmp_path, "base.json",
+                  _rows(**{"cache/hit_x": (1000.0, 0.8),
+                           "cache/step_y": (5000.0, 10.0)}))
+    good = _write(tmp_path, "good.json",
+                  _rows(**{"cache/hit_x": (1010.0, 0.81),
+                           "cache/step_y": (5100.0, 10.0)}))
+    bad = _write(tmp_path, "bad.json",
+                 _rows(**{"cache/hit_x": (1000.0, 0.5),
+                          "cache/step_y": (5000.0, 10.0)}))
     assert main([base, good]) == 0
     assert main([base, bad]) == 1
     assert load_rows(base)["cache/hit_x"] == (1000.0, 0.8)
+
+
+def test_trend_report_tracks_history_worst_drift_first(tmp_path):
+    """The longer-horizon trend report: per-row sequences across the whole
+    artifact history, end-to-end deltas, worst time drift ordered first,
+    rows absent from some artifacts shown with gaps."""
+    a = _write(tmp_path, "a.json", _rows(**{"k/slow": (100.0, 1.0),
+                                            "k/fast": (100.0, 2.0)}))
+    b = _write(tmp_path, "b.json", _rows(**{"k/slow": (130.0, 1.0),
+                                            "k/fast": (90.0, 2.0),
+                                            "k/new": (10.0, 5.0)}))
+    c = _write(tmp_path, "c.json", _rows(**{"k/slow": (180.0, 0.9),
+                                            "k/fast": (95.0, 2.2),
+                                            "k/new": (11.0, 5.0)}))
+    lines = trend([a, b, c])
+    assert lines[0].startswith("# trend over 3 artifacts")
+    body = lines[1:]
+    # worst drift (k/slow, +80%) first
+    assert body[0].startswith("k/slow:")
+    assert "+80.0%" in body[0]
+    assert "100.0 -> 130.0 -> 180.0" in body[0]
+    # gap rendering for the late-appearing row
+    new_line = next(ln for ln in body if ln.startswith("k/new:"))
+    assert "- -> 10.0 -> 11.0" in new_line
+    # derived deltas tracked too
+    fast_line = next(ln for ln in body if ln.startswith("k/fast:"))
+    assert "+10.0%" in fast_line
+
+
+def test_trend_cli_never_fails(tmp_path):
+    a = _write(tmp_path, "a.json", _rows(**{"cache/hit_x": (1000.0, 0.8)}))
+    b = _write(tmp_path, "b.json", _rows(**{"cache/hit_x": (1000.0, 0.1)}))
+    # a catastrophic hit-rate drop still exits 0 under --trend: the
+    # pairwise diff is the only gate
+    assert main(["--trend", a, b]) == 0
+    assert main([a, b]) == 1

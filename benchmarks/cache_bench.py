@@ -19,13 +19,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, time_fn, time_interleaved
 from repro.configs import get_config
-from repro.core.cache import CachedEmbeddingBagCollection
+from repro.core.cache import (CachedEmbeddingBagCollection,
+                              MultiHostCachedEmbeddingBagCollection)
 from repro.core.design_space import reduced, test_suite_config
 from repro.core.dlrm import dlrm_param_specs
 from repro.core.embedding import EmbeddingBagCollection
 from repro.data.synthetic import bounded_zipf_rows, make_dlrm_batch
+from repro.launch.analysis import (multihost_exchange_traffic,
+                                   zipf_expected_unique)
 from repro.nn.params import init_params
 from repro.optim.optimizers import adagrad
 from repro.train.steps import (build_async_cached_dlrm_train_step,
@@ -52,34 +55,115 @@ def _traffic(cfg, ebc, alpha: float, step: int) -> np.ndarray:
 
 
 def hit_rate_sweep():
-    """derived = measured steady-state hit rate; us = prepare+lookup time."""
+    """derived = measured steady-state hit rate; us = prepare+lookup time.
+
+    All (alpha, cache-fraction) candidates are timed ROUND-ROBIN through
+    `benchmarks.common.time_interleaved` — not back-to-back blocks — so
+    slow drift on a noisy shared runner hits every config equally and the
+    us columns stay comparable run-over-run (the same discipline as the
+    kernels bench; the multihost rows below gate against these). Traffic
+    is unchanged: each candidate consumes the SAME per-step seed sequence
+    as before, so the deterministic hit-rate derived values are identical
+    to the committed BENCH_baseline.json.
+    """
     cfg = test_suite_config(n_dense=64, n_sparse=2, hash_size=25_000,
                             mlp_width=64, mlp_layers=1, embed_dim=32)
     ebc = EmbeddingBagCollection.build(cfg, n_shards=1,
                                       strategy="cached_host")
     total = ebc.plan.total_rows
     mega = jnp.zeros((total, cfg.embed_dim), jnp.float32)
-    for alpha in (1.05, 1.2, 1.5):
-        # 5% is the floor: the cache must at least hold one batch's unique
-        # working set (~1.8k rows at alpha=1.05), or prepare() thrashes
-        for frac in (0.05, 0.10, 0.25):
-            cc = CachedEmbeddingBagCollection.build(
-                cfg, cache_rows=max(64, int(total * frac)))
-            state = cc.init_state(mega)
-            t_total = 0.0
-            for step in range(WARM_STEPS + MEASURE_STEPS):
-                idx = _traffic(cfg, ebc, alpha, step)
-                if step == WARM_STEPS:
-                    h0, m0 = state.stats.hits, state.stats.misses
-                t0 = time.perf_counter()
-                out = cc.lookup(state, idx, train=False)
-                jax.block_until_ready(out)
-                t_total += time.perf_counter() - t0
-            hits = state.stats.hits - h0
-            misses = state.stats.misses - m0
-            rate = hits / max(hits + misses, 1)
-            us = t_total / (WARM_STEPS + MEASURE_STEPS) * 1e6
-            emit(f"cache/hit_a{alpha}_c{int(frac * 100)}pct", us, rate)
+    # 5% is the floor: the cache must at least hold one batch's unique
+    # working set (~1.8k rows at alpha=1.05), or prepare() thrashes
+    combos = [(alpha, frac) for alpha in (1.05, 1.2, 1.5)
+              for frac in (0.05, 0.10, 0.25)]
+    states, fns = [], []
+    for alpha, frac in combos:
+        cc = CachedEmbeddingBagCollection.build(
+            cfg, cache_rows=max(64, int(total * frac)))
+        state = cc.init_state(mega)
+        box = [0]                       # per-candidate step cursor
+
+        def one(cc=cc, state=state, alpha=alpha, box=box):
+            idx = _traffic(cfg, ebc, alpha, box[0])
+            box[0] += 1
+            jax.block_until_ready(cc.lookup(state, idx, train=False))
+
+        states.append(state)
+        fns.append(one)
+    for _ in range(WARM_STEPS):         # round-robin warm-up, steps [0, 40)
+        for fn in fns:
+            fn()
+    marks = [(s.stats.hits, s.stats.misses) for s in states]
+    argsets = [() for _ in fns]
+    medians = time_interleaved(fns, argsets, warmup=0, iters=MEASURE_STEPS)
+    for (alpha, frac), state, (h0, m0), us in zip(combos, states, marks,
+                                                  medians):
+        hits = state.stats.hits - h0
+        misses = state.stats.misses - m0
+        rate = hits / max(hits + misses, 1)
+        emit(f"cache/hit_a{alpha}_c{int(frac * 100)}pct", us, rate)
+
+
+def multihost_sweep():
+    """The multi-host tier's deterministic rows (docs/cache.md "Multi-host
+    coherence"): aggregate steady-state hit rate of H per-host caches over
+    the row-sharded capacity tier under the SAME seeded Zipf(1.05) traffic
+    as the single-host sweep, plus the exchange-traffic model's
+    routing-bytes reduction (analytic unique counts from
+    `zipf_expected_unique` + the measured hit rate — no timing anywhere in
+    the derived columns, so diff_bench gates them at the tight threshold
+    from run one). Host-count candidates are timed round-robin like
+    `hit_rate_sweep`'s, so the us columns inherit the same
+    drift-comparability."""
+    cfg = test_suite_config(n_dense=64, n_sparse=2, hash_size=25_000,
+                            mlp_width=64, mlp_layers=1, embed_dim=32)
+    warm, measure = 10, 10
+    # 10% sizing base shared with hit_rate_sweep's single-host rows
+    base = EmbeddingBagCollection.build(cfg, n_shards=1,
+                                       strategy="cached_host"
+                                       ).plan.total_rows
+    hostset = (4, 8)
+    states, fns = [], []
+    for hosts in hostset:
+        mc = MultiHostCachedEmbeddingBagCollection.build(
+            cfg, n_hosts=hosts, cache_rows=max(64, int(base * 0.10)))
+        state = mc.init_state(jnp.zeros((mc.ebc.plan.total_rows,
+                                         cfg.embed_dim), jnp.float32))
+        box = [0]
+
+        def one(mc=mc, state=state, box=box):
+            idx = _traffic(cfg, mc.ebc, 1.05, box[0])
+            box[0] += 1
+            jax.block_until_ready(mc.lookup(state, idx))
+
+        states.append(state)
+        fns.append(one)
+    for _ in range(warm):                    # round-robin, steps [0, warm)
+        for fn in fns:
+            fn()
+    marks = [(s.stats.hits, s.stats.misses) for s in states]
+    medians = time_interleaved(fns, [() for _ in fns], warmup=0,
+                               iters=measure)
+    for hosts, state, (h0, m0), us in zip(hostset, states, marks, medians):
+        hits = state.stats.hits - h0
+        misses = state.stats.misses - m0
+        rate = hits / max(hits + misses, 1)
+        emit(f"cache/multihost_hit_h{hosts}_c10pct", us, rate)
+        # routing bytes: expected per-host/global unique rows of the
+        # bounded-Zipf stream (exact, no sampling) + the measured hit rate
+        u_host = sum(zipf_expected_unique(BATCH // hosts * LOOKUPS, hs,
+                                          1.05) for hs in cfg.hash_sizes)
+        u_glob = sum(zipf_expected_unique(BATCH * LOOKUPS, hs, 1.05)
+                     for hs in cfg.hash_sizes)
+        model = multihost_exchange_traffic(
+            BATCH, cfg.n_sparse_features, LOOKUPS, cfg.embed_dim, hosts,
+            unique_per_host=u_host, unique_global=u_glob, hit_rate=rate)
+        # two variants: the repo's bit-exact per-pair routing, and the
+        # production per-(host,row) partial-sum routing it upper-bounds
+        emit(f"cache/multihost_routing_bytes_reduction_h{hosts}", 0.0,
+             model["reduction"])
+        emit(f"cache/multihost_routing_bytes_rowsum_reduction_h{hosts}",
+             0.0, model["rowsum_reduction"])
 
 
 def step_bench():
@@ -224,6 +308,7 @@ def overlap_sweep():
 
 def main():
     hit_rate_sweep()
+    multihost_sweep()
     step_bench()
     overlap_sweep()
 

@@ -1,4 +1,5 @@
-"""granite-moe-1b-a400m [moe] — 32 experts top-8. [hf:ibm-granite/granite-3.0-1b-a400m-base; hf]"""
+"""granite-moe-1b-a400m [moe] — 32 experts top-8.
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf]"""
 from repro.configs.base import ModelConfig
 
 CONFIG = ModelConfig(

@@ -1,4 +1,5 @@
-"""stablelm-1.6b [dense] — MHA, partial rotary 25%. [hf:stabilityai/stablelm-2-1_6b; unverified]"""
+"""stablelm-1.6b [dense] — MHA, partial rotary 25%.
+[hf:stabilityai/stablelm-2-1_6b; unverified]"""
 from repro.configs.base import ModelConfig
 
 CONFIG = ModelConfig(

@@ -166,6 +166,29 @@ class AsyncCacheState:
         return int((self.slot_row >= 0).sum())
 
 
+def _pick_slots(slot_row: np.ndarray, freq: np.ndarray, n: int,
+                protect: np.ndarray, thrash_detail: str
+                ) -> tuple[np.ndarray, np.ndarray]:
+    """The ONE slot-selection policy of every admission path (sync, async,
+    and per-host multi-host): free slots first, then the coldest
+    unprotected residents (stable argsort of the LFU scores), with the
+    cache-thrash guard raised when the protected working set leaves too
+    few victims. Returns (slots (n,), victims) — victims occupy the TAIL
+    of `slots`, the layout the exchange worklists rely on."""
+    free = np.flatnonzero(slot_row < 0)
+    need = n - len(free)
+    victims = np.empty((0,), np.int64)
+    if need > 0:
+        evictable = np.flatnonzero((slot_row >= 0) & ~protect)
+        if len(evictable) < need:
+            raise ValueError(
+                f"cache thrash: need {need} evictions but only "
+                f"{len(evictable)} unprotected slots — {thrash_detail}")
+        order = np.argsort(np.asarray(freq)[evictable], kind="stable")
+        victims = evictable[order[:need]]
+    return np.concatenate([free[:min(n, len(free))], victims])[:n], victims
+
+
 @dataclasses.dataclass(frozen=True)
 class CachedEmbeddingBagCollection:
     """EmbeddingBagCollection whose device working set is a hot-row cache.
@@ -269,21 +292,10 @@ class CachedEmbeddingBagCollection:
         n = len(missing)
         if n == 0:
             return 0
-        free = np.flatnonzero(state.slot_row < 0)
-        need = n - len(free)
-        victims = np.empty((0,), np.int64)
-        if need > 0:
-            evictable = np.flatnonzero((state.slot_row >= 0) & ~protect)
-            if len(evictable) < need:
-                raise ValueError(
-                    f"cache thrash: need {need} evictions but only "
-                    f"{len(evictable)} unprotected slots — the batch working "
-                    f"set exceeds cache_rows={state.cache_rows}; raise the "
-                    "HBM budget or shrink the batch")
-            freq_host = np.asarray(state.freq)
-            order = np.argsort(freq_host[evictable], kind="stable")
-            victims = evictable[order[:need]]
-        slots = np.concatenate([free[:min(n, len(free))], victims])[:n]
+        slots, victims = _pick_slots(
+            state.slot_row, state.freq, n, protect,
+            f"the batch working set exceeds cache_rows={state.cache_rows};"
+            " raise the HBM budget or shrink the batch")
         evicted_rows = state.slot_row[victims]
         wb_mask = state.dirty[victims]
         # worklist: dirty victims write back; every admitted slot fetches
@@ -544,25 +556,17 @@ class CachedEmbeddingBagCollection:
         batch working sets)."""
         self._drain_if_fetching_queued_victims(astate, missing)
         protect = self._protected_mask(astate) | extra_protect
-        free = np.flatnonzero(astate.slot_row < 0)
-        evictable = np.flatnonzero((astate.slot_row >= 0) & ~protect)
         if not strict:
-            missing = missing[:len(free) + len(evictable)]
+            free = int((astate.slot_row < 0).sum())
+            evictable = int(((astate.slot_row >= 0) & ~protect).sum())
+            missing = missing[:free + evictable]
             seed = seed[:len(missing)]
         n = len(missing)
-        need = n - len(free)
-        victims = np.empty((0,), np.int64)
-        if need > 0:
-            if len(evictable) < need:
-                raise ValueError(
-                    f"cache thrash: need {need} evictions but only "
-                    f"{len(evictable)} unprotected slots — the staged + "
-                    "in-flight working sets exceed cache_rows="
-                    f"{astate.cache_rows}; raise the HBM budget, shrink the "
-                    "batch, or reduce the lookahead depth")
-            order = np.argsort(astate.freq[evictable], kind="stable")
-            victims = evictable[order[:need]]
-        slots = np.concatenate([free[:min(n, len(free))], victims])[:n]
+        slots, victims = _pick_slots(
+            astate.slot_row, astate.freq, n, protect,
+            "the staged + in-flight working sets exceed cache_rows="
+            f"{astate.cache_rows}; raise the HBM budget, shrink the "
+            "batch, or reduce the lookahead depth")
         evicted_rows = astate.slot_row[victims]
         wb_mask = astate.dirty[victims]
         evict_rows = np.full((n,), -1, np.int64)
@@ -742,3 +746,405 @@ class CachedEmbeddingBagCollection:
         same batch sequence (asserted in tests/test_cache_async.py)."""
         self.flush_async(astate)
         return astate.capacity, astate.cap_accum
+
+
+# ---------------------------------------------------------------------------
+# Multi-host cache coherence (docs/cache.md "Multi-host coherence")
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RouteStats:
+    """Per-row traffic counters of the multi-host tier: which shard served
+    each capacity-tier touch. `local` means the touching host owns the row
+    (owner == host); `remote` rows crossed the host interconnect — the
+    all-to-all legs the exchange-traffic model prices
+    (launch/analysis.py multihost_exchange_traffic)."""
+    fetch_local: int = 0       # miss rows served by the host's own shard
+    fetch_remote: int = 0      # miss rows pulled from a remote owner
+    refresh_local: int = 0     # post-update working-set rows, own shard
+    refresh_remote: int = 0    # ... returned by a remote owner
+    grad_pairs_local: int = 0  # (row, bag) grads aggregated at a local owner
+    grad_pairs_remote: int = 0  # pairs routed to a remote owner
+    dup_rows: int = 0          # rows in >1 host's working set (reduced ONCE
+                               # at the owner instead of updated twice)
+    invalidations: int = 0     # cached copies dropped after a remote update
+    steps: int = 0
+
+    @property
+    def remote_fetch_fraction(self) -> float:
+        total = self.fetch_local + self.fetch_remote
+        return self.fetch_remote / total if total else 0.0
+
+    def snapshot(self) -> dict[str, float]:
+        return {"route_fetch_local": float(self.fetch_local),
+                "route_fetch_remote": float(self.fetch_remote),
+                "route_refresh_remote": float(self.refresh_remote),
+                "route_grad_pairs_remote": float(self.grad_pairs_remote),
+                "route_dup_rows": float(self.dup_rows),
+                "route_invalidations": float(self.invalidations),
+                "route_remote_fetch_fraction": self.remote_fetch_fraction}
+
+
+@dataclasses.dataclass
+class MultiHostCacheState:
+    """State of the data-parallel cached tier: ONE row-sharded capacity
+    tier (owner h holds rows [h*shard_rows, (h+1)*shard_rows)) under H
+    independent per-host hot caches over the WHOLE row space.
+
+    Cached copies are CLEAN BY CONSTRUCTION — the coherence invariant that
+    replaces the single-host dirty-bit machinery: sparse updates are routed
+    to the owning shard and applied there ONCE (duplicate rows reduced in
+    host order), each host's working set is refreshed from the post-update
+    capacity inside the same step, and copies a REMOTE update left stale
+    are invalidated before the next batch plans. Eviction therefore never
+    writes back, and the AdaGrad accumulator never leaves the owner."""
+    capacity: jax.Array        # (R, d) row-sharded capacity tier
+    cap_accum: jax.Array       # (R,) fp32 AdaGrad accumulator, owner-only
+    caches: jax.Array          # (H, C, d) per-host clean hot caches
+    freq: np.ndarray           # (H, C) host fp32 LFU-with-decay scores
+    slot_row: np.ndarray       # (H, C) int64: row held by slot, -1 free
+    row_slot: np.ndarray       # (H, R) int32: slot holding row, -1 uncached
+    stats: CacheStats          # aggregate over hosts
+    route: RouteStats
+
+    @property
+    def n_hosts(self) -> int:
+        return int(self.caches.shape[0])
+
+    @property
+    def cache_rows(self) -> int:
+        return int(self.caches.shape[1])
+
+
+@dataclasses.dataclass
+class MultiHostStepPlan:
+    """One batch's host-planned device worklist: every array the jitted
+    multi-host step consumes (train/steps.py). All index arrays are
+    -1-padded to static shapes so the step compiles once."""
+    local_idx: np.ndarray      # (H, B/H, F, L) slot-space remap
+    miss_rows: np.ndarray      # (H, M) capacity rows to install pre-forward
+    miss_slots: np.ndarray     # (H, M) destination cache slots
+    ws_rows: np.ndarray        # (H, M) working-set rows to refresh post-update
+    ws_slots: np.ndarray       # (H, M) their cache slots
+    seg_rows: np.ndarray       # (H, U) OWNER-LOCAL unique rows per segment
+    seg_offsets: np.ndarray    # (H, U+1) absolute positions into bag_ids
+    seg_base: np.ndarray       # (H,) owner row bases
+    bag_ids: np.ndarray        # (N,) shared flat-bag list of the global plan
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiHostCachedEmbeddingBagCollection:
+    """The cached embedding tier under data parallelism (ROADMAP multi-host
+    coherence item; MTrainS's heterogeneous-memory tier): H hosts each run
+    a `cache_rows` hot cache over a capacity tier row-sharded across the
+    SAME H hosts. Misses resolve through a plan-driven all-to-all against
+    the owning shard — the per-batch SparsePlan's sorted live prefix IS the
+    miss set grouped by owner (searchsorted on shard boundaries, no sort) —
+    and gradients for rows cached on several hosts are routed to the owner
+    and reduced once before the fused AdaGrad update (per-owner segments,
+    kernels/sparse_update.py).
+
+    Numerics contract: with the data-parallel batch split h -> examples
+    [h*B/H, (h+1)*B/H), owner-side reduction concatenates host runs in
+    host order == flat-batch order, so the whole tier is BIT-EXACT vs the
+    dense single-host oracle (asserted in tests/test_cache_multihost.py).
+    """
+    ebc: EmbeddingBagCollection
+    n_hosts: int
+    cache_rows: int
+    decay: float = 0.98
+    use_kernel: bool | None = None
+    interpret: bool = False
+
+    @classmethod
+    def build(cls, cfg: DLRMConfig, n_hosts: int,
+              cache_rows: int | None = None, decay: float = 0.98,
+              use_kernel: bool | None = None, interpret: bool = False
+              ) -> MultiHostCachedEmbeddingBagCollection:
+        ebc = EmbeddingBagCollection.build(cfg, n_shards=n_hosts,
+                                           strategy="cached_host",
+                                           capacity_shards=n_hosts)
+        rows = cache_rows if cache_rows is not None else ebc.plan.cache_rows
+        assert rows > 0, "cached_host plan produced an empty cache"
+        return cls(ebc, int(n_hosts), int(rows), decay, use_kernel,
+                   interpret)
+
+    @property
+    def shard_rows(self) -> int:
+        return self.ebc.plan.shard_rows
+
+    # -- state ---------------------------------------------------------------
+
+    def init_state(self, mega: jax.Array, accum: jax.Array | None = None,
+                   capacity_sharding=None) -> MultiHostCacheState:
+        """mega: (total_rows, d) capacity tier; accum: optional (rows,)
+        fp32. `capacity_sharding` (e.g. NamedSharding(mesh, plan.pspec))
+        places the copied capacity arrays on the host mesh — the train
+        step's shard_map update then runs against real shards.
+
+        A mega SHORTER than total_rows (a single-host layout, whose tail
+        padding is 8-aligned rather than H*8-aligned) is zero-padded into
+        the sharded layout; pad rows are unreachable by construction
+        (indices stay below the logical row count)."""
+        r, d = mega.shape
+        total = self.ebc.plan.total_rows
+        assert r <= total, (r, total)
+        h, c = self.n_hosts, self.cache_rows
+        if accum is None:
+            accum = jnp.zeros((r,), jnp.float32)
+        capacity = jnp.zeros((total, d), mega.dtype).at[:r].set(mega)
+        cap_accum = jnp.zeros((total,), jnp.float32).at[:r].set(
+            jnp.asarray(accum, jnp.float32))
+        if capacity_sharding is not None:
+            capacity = jax.device_put(capacity, capacity_sharding)
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            cap_sh = NamedSharding(capacity_sharding.mesh,
+                                   P(*capacity_sharding.spec[:1]))
+            cap_accum = jax.device_put(cap_accum, cap_sh)
+        return MultiHostCacheState(
+            capacity=capacity,
+            cap_accum=cap_accum,
+            caches=jnp.zeros((h, c, d), mega.dtype),
+            freq=np.zeros((h, c), np.float32),
+            slot_row=np.full((h, c), -1, np.int64),
+            row_slot=np.full((h, total), -1, np.int32),
+            stats=CacheStats(),
+            route=RouteStats())
+
+    # -- per-host admission --------------------------------------------------
+
+    def _admit_host(self, state: MultiHostCacheState, h: int,
+                    missing: np.ndarray, counts: np.ndarray,
+                    protect: np.ndarray) -> np.ndarray:
+        """Assign cache slots on host h for `missing` rows: free slots
+        first, then the coldest unprotected residents. Clean caches make
+        eviction writeback-free — the displaced copy is dropped (its
+        authoritative value lives at the owner). Returns the slots."""
+        n = len(missing)
+        if n == 0:
+            return np.empty((0,), np.int64)
+        slots, victims = _pick_slots(
+            state.slot_row[h], state.freq[h], n, protect,
+            f"host {h}'s batch working set exceeds cache_rows="
+            f"{state.cache_rows}; raise the HBM budget or shrink the "
+            "per-host batch")
+        evicted = state.slot_row[h, victims]
+        state.row_slot[h, evicted] = -1
+        state.slot_row[h, slots] = missing
+        state.row_slot[h, missing] = slots.astype(np.int32)
+        state.freq[h, slots] = counts.astype(np.float32)
+        state.stats.fetches += n
+        state.stats.evictions += len(victims)
+        return slots
+
+    # -- step planning -------------------------------------------------------
+
+    def plan_step(self, state: MultiHostCacheState, idx,
+                  host_plans=None, global_plan=None,
+                  train: bool = True) -> MultiHostStepPlan:
+        """Plan one global batch: per host, split its contiguous sub-batch
+        into hits/misses off its sub-plan (`kernels.split_plan_by_host` —
+        the live prefix IS the host's sorted unique row set, so miss dedup
+        stays sort-free), admit misses (LFU eviction, clean drop), and
+        remap to slot space. Cross-host legs are booked in RouteStats by
+        grouping each host's rows by owning shard (a row // shard_rows,
+        order-preserving on the sorted prefix). When `train`, also slices
+        the global plan into per-owner update segments
+        (`split_plan_by_owner`) and invalidates cached copies that this
+        step's REMOTE updates will leave stale (working-set copies are
+        exempt — the step refreshes them from the post-update capacity).
+
+        idx: (B, F, L) OFFSET global rows, B divisible by n_hosts;
+        host_plans/global_plan: hook-attached artifacts
+        (`kernels.host_plans_from_batch` / `host_plan_from_batch`), built
+        here when absent. Mutates the host maps; returns the device
+        worklist for the jitted step half."""
+        from repro.kernels.sparse_plan import (build_sparse_plan_host,
+                                               split_plan_by_host,
+                                               split_plan_by_owner)
+        idx = np.asarray(idx)
+        b, f, lk = idx.shape
+        hn = self.n_hosts
+        assert b % hn == 0, (b, hn)
+        bh = b // hn
+        if global_plan is None:
+            global_plan = build_sparse_plan_host(idx)
+        if host_plans is None:
+            host_plans = split_plan_by_host(global_plan, hn, bh * f)
+        m = bh * f * lk                       # per-host worklist capacity
+        local_idx = np.empty((hn, bh, f, lk), np.int32)
+        miss_rows = np.full((hn, m), -1, np.int32)
+        miss_slots = np.full((hn, m), -1, np.int32)
+        ws_rows = np.full((hn, m), -1, np.int32)
+        ws_slots = np.full((hn, m), -1, np.int32)
+        g_rows = np.asarray(global_plan.unique_rows)
+        n_live = int((g_rows >= 0).sum())
+        dup = -n_live
+        for h in range(hn):
+            sub = idx[h * bh:(h + 1) * bh]
+            (sub, valid, rows, counts, hit_slots, hit_counts, missing,
+             miss_counts) = CachedEmbeddingBagCollection._split_batch(
+                sub, state.row_slot[h], self.cache_rows, host_plans[h])
+            dup += len(rows)
+            # host LFU: decay everything, bump hits; admissions seed below
+            state.freq[h] *= np.float32(self.decay)
+            state.freq[h, hit_slots] += hit_counts.astype(np.float32)
+            protect = np.zeros((self.cache_rows,), bool)
+            protect[hit_slots] = True
+            slots = self._admit_host(state, h, missing, miss_counts,
+                                     protect)
+            miss_rows[h, :len(missing)] = missing
+            miss_slots[h, :len(missing)] = slots
+            ws_rows[h, :len(rows)] = rows
+            ws_slots[h, :len(rows)] = state.row_slot[h, rows]
+            local_idx[h] = CachedEmbeddingBagCollection._remap(
+                state.row_slot[h], sub, valid)
+            state.stats.hits += int(counts.sum()) - len(missing)
+            state.stats.misses += len(missing)
+            owner_m = missing // self.shard_rows
+            state.route.fetch_remote += int((owner_m != h).sum())
+            state.route.fetch_local += int((owner_m == h).sum())
+            if train:
+                owner_w = rows // self.shard_rows
+                remote = owner_w != h
+                state.route.refresh_remote += int(remote.sum())
+                state.route.refresh_local += int((~remote).sum())
+                state.route.grad_pairs_remote += int(counts[remote].sum())
+                state.route.grad_pairs_local += int(counts[~remote].sum())
+        state.stats.steps += 1
+        state.route.steps += 1
+        state.route.dup_rows += max(dup, 0)
+        if train:
+            touched = g_rows[:n_live].astype(np.int64)
+            for h in range(hn):
+                slots_t = state.row_slot[h, touched]
+                resident = slots_t >= 0
+                in_ws = np.zeros((self.cache_rows,), bool)
+                wss = ws_slots[h]
+                in_ws[wss[wss >= 0]] = True
+                kill = resident & ~in_ws[np.clip(slots_t, 0, None)]
+                state.slot_row[h, slots_t[kill]] = -1
+                state.row_slot[h, touched[kill]] = -1
+                state.freq[h, slots_t[kill]] = 0.0
+                state.route.invalidations += int(kill.sum())
+            seg_rows, seg_offs, seg_base = split_plan_by_owner(
+                global_plan, self.shard_rows, hn, seg_cap=len(g_rows))
+        else:
+            u = len(g_rows)
+            seg_rows = np.full((hn, u), -1, np.int32)
+            seg_offs = np.zeros((hn, u + 1), np.int32)
+            seg_base = np.zeros((hn,), np.int32)
+        return MultiHostStepPlan(
+            local_idx, miss_rows, miss_slots, ws_rows, ws_slots,
+            seg_rows, seg_offs, seg_base,
+            np.asarray(global_plan.bag_ids, np.int32))
+
+    # -- slab install (shared by the jitted step and the eager paths) --------
+
+    def fill_slabs(self, caches: jax.Array, source: jax.Array,
+                   rows, slots) -> jax.Array:
+        """Install `rows` gathered from `source` (the capacity tier) into
+        each host's slab at `slots` (-1 pads drop). Pure jnp — traced
+        inside the multi-host train step's jit (miss install AND
+        post-update refresh) and run eagerly by eval lookups/prefetch, so
+        every install leg is the same operation bit for bit.
+
+        caches: (H, C, d); rows/slots: (H, M) int32, -1-padded."""
+        c = self.cache_rows
+        out = []
+        for h in range(self.n_hosts):
+            rows_h = jnp.asarray(rows[h], jnp.int32)
+            slots_h = jnp.asarray(slots[h], jnp.int32)
+            vals = jnp.take(source, jnp.maximum(rows_h, 0), axis=0)
+            dst = jnp.where(slots_h >= 0, slots_h, c)
+            out.append(caches[h].at[dst].set(vals.astype(caches.dtype),
+                                             mode="drop"))
+        return jnp.stack(out)
+
+    # -- eval / serving ------------------------------------------------------
+
+    def install_misses(self, state: MultiHostCacheState,
+                       splan: MultiHostStepPlan) -> None:
+        """Resolve the planned misses eagerly (the all-to-all fetch leg):
+        gather each host's missing rows from the owning shards and install
+        them in its slab. The train step performs this INSIDE its jit; this
+        eager twin serves eval lookups and prefetch."""
+        state.caches = self.fill_slabs(state.caches, state.capacity,
+                                       splan.miss_rows, splan.miss_slots)
+
+    def lookup(self, state: MultiHostCacheState, idx,
+               host_plans=None, global_plan=None) -> jax.Array:
+        """plan + fetch + per-host pooled lookup, concatenated back to the
+        global batch: numerically identical to the uncached collection on
+        the same indices. Eval path (no update legs)."""
+        splan = self.plan_step(state, idx, host_plans, global_plan,
+                               train=False)
+        self.install_misses(state, splan)
+        pooled = [self.ebc.lookup({"mega": state.caches[h]},
+                                  jnp.asarray(splan.local_idx[h]))
+                  for h in range(self.n_hosts)]
+        return jnp.concatenate(pooled, axis=0)
+
+    # -- prefetch ------------------------------------------------------------
+
+    def prefetch(self, state: MultiHostCacheState, idx,
+                 host_plans=None, global_plan=None) -> int:
+        """Best-effort admission of the NEXT batch's per-host miss rows so
+        the owner fetch overlaps the in-flight step's device compute (the
+        dispatch ordering guarantees post-update values — the gather
+        consumes the updated capacity array). Never evicts a requested
+        resident; overflow beyond free+evictable space is dropped. Returns
+        rows admitted."""
+        from repro.kernels.sparse_plan import (build_sparse_plan_host,
+                                               split_plan_by_host)
+        idx = np.asarray(idx)
+        b, f, _ = idx.shape
+        hn = self.n_hosts
+        if global_plan is None:
+            global_plan = build_sparse_plan_host(idx)
+        if host_plans is None:
+            host_plans = split_plan_by_host(global_plan, hn, b // hn * f)
+        caches = state.caches
+        c = self.cache_rows
+        total = 0
+        for h in range(hn):
+            prows = np.asarray(host_plans[h].unique_rows)
+            rows = prows[:int((prows >= 0).sum())].astype(np.int64)
+            missing = rows[state.row_slot[h, rows] < 0]
+            protect = np.zeros((c,), bool)
+            keep = state.row_slot[h, rows[state.row_slot[h, rows] >= 0]]
+            protect[keep] = True
+            evictable = int(((state.slot_row[h] >= 0) & ~protect).sum())
+            free = int((state.slot_row[h] < 0).sum())
+            missing = missing[:free + evictable]
+            slots = self._admit_host(state, h, missing,
+                                     np.ones((len(missing),), np.float32),
+                                     protect)
+            if len(missing):
+                vals = jnp.take(state.capacity,
+                                jnp.asarray(missing, jnp.int32), axis=0)
+                caches = caches.at[h, jnp.asarray(slots, jnp.int32)].set(
+                    vals)
+            owner = missing // self.shard_rows
+            state.route.fetch_remote += int((owner != h).sum())
+            state.route.fetch_local += int((owner == h).sum())
+            total += len(missing)
+        state.caches = caches
+        state.stats.prefetched += total
+        return total
+
+    def mark_updated(self, state: MultiHostCacheState, capacity: jax.Array,
+                     cap_accum: jax.Array, caches: jax.Array) -> None:
+        """Install the jitted step's outputs (post-update capacity shards +
+        refreshed host slabs)."""
+        state.capacity = capacity
+        state.cap_accum = cap_accum
+        state.caches = caches
+
+    def materialize(self, state: MultiHostCacheState
+                    ) -> tuple[jax.Array, jax.Array]:
+        """The up-to-date (mega, accum) capacity arrays. No flush needed:
+        caches are clean by construction — every update already lives at
+        its owner."""
+        return state.capacity, state.cap_accum

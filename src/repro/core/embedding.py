@@ -38,13 +38,15 @@ class EmbeddingBagCollection:
     @classmethod
     def build(cls, cfg: DLRMConfig, n_shards: int,
               strategy: str | None = None,
-              second_axis_size: int = 1) -> EmbeddingBagCollection:
+              second_axis_size: int = 1,
+              capacity_shards: int = 1) -> EmbeddingBagCollection:
         plan = plan_placement(
             cfg.hash_sizes, cfg.mean_lookups, cfg.embed_dim, n_shards,
             hbm_budget_bytes=cfg.hbm_budget_gb * 1e9,
             itemsize=4 if cfg.param_dtype == "float32" else 2,
             strategy=strategy or cfg.placement,
-            second_axis_size=second_axis_size)
+            second_axis_size=second_axis_size,
+            capacity_shards=capacity_shards)
         return cls(cfg, plan)
 
     # -- params ------------------------------------------------------------

@@ -25,6 +25,13 @@ plan fixes each table's row offset and the mega table's PartitionSpec:
                budget; Fig. 6/7's skewed, size-uncorrelated access makes a
                small cache capture most traffic. The legacy `host_offload`
                strategy string maps here, keeping configs portable.
+
+               Under data parallelism (`capacity_shards > 1`, the MTrainS
+               heterogeneous-memory regime) the capacity tier is ROW-SHARDED
+               across hosts — host h owns the contiguous range
+               [h*shard_rows, (h+1)*shard_rows) — while every host still
+               runs its own `cache_rows`-sized hot cache over the WHOLE row
+               space (core/cache.py MultiHostCachedEmbeddingBagCollection).
 """
 from __future__ import annotations
 
@@ -53,6 +60,10 @@ class PlacementPlan:
     load_per_shard: tuple[float, ...] = ()
     # cached_host only: device-cache slots backing the host-resident table
     cache_rows: int = 0
+    # cached_host under data parallelism: hosts the capacity tier is
+    # row-sharded across (1 = the single-host tier) and rows per host shard
+    capacity_shards: int = 1
+    shard_rows: int = 0
 
     @property
     def load_imbalance(self) -> float:
@@ -75,7 +86,8 @@ def plan_placement(hash_sizes: Sequence[int],
                    strategy: str = "auto",
                    model_axis: str = "model",
                    second_axis: str = "data",
-                   second_axis_size: int = 1) -> PlacementPlan:
+                   second_axis_size: int = 1,
+                   capacity_shards: int = 1) -> PlacementPlan:
     """Build a placement plan for one EmbeddingBagCollection.
 
     hbm_budget_bytes is the per-shard capacity available for embeddings
@@ -137,20 +149,32 @@ def plan_placement(hash_sizes: Sequence[int],
                            hbm_budget_bytes, itemsize, model_axis)
 
     if strategy == "cached_host":
-        # capacity tier: the whole mega table, replicated in slow memory
-        # (host DRAM / pooled HBM — no model-axis sharding to plan). The
-        # device tier is a hot-row cache sized so payload + per-row AdaGrad
-        # accumulator + LFU score fit the per-chip budget.
+        # capacity tier: the whole mega table in slow memory (host DRAM /
+        # pooled HBM). Single-host (capacity_shards=1): replicated, no
+        # sharding to plan. Data-parallel (capacity_shards=H): ROW-SHARDED
+        # over the hosts' second (data) axis — each host owns a contiguous
+        # shard_rows range and serves other hosts' misses for it. The
+        # device tier either way is a per-host hot-row cache sized so
+        # payload + per-row AdaGrad accumulator + LFU score fit the
+        # per-chip budget.
         offsets, rows = _contiguous(hash_sizes, pad_mult=8)
+        rows = _round_up(rows, max(8, capacity_shards * 8))
+        shard_rows = rows // capacity_shards
         row_bytes = embed_dim * itemsize + CACHED_ROW_META_BYTES
         cache_rows = int(hbm_budget_bytes // row_bytes)
         cache_rows = max(8, min(cache_rows // 8 * 8, rows))
-        return PlacementPlan("cached_host", offsets, rows, P(None, None),
+        pspec = P(None, None) if capacity_shards == 1 \
+            else P(second_axis, None)
+        per_host = cache_rows * row_bytes + (
+            0 if capacity_shards == 1
+            else shard_rows * embed_dim * itemsize)
+        return PlacementPlan("cached_host", offsets, rows, pspec,
                              None, n_shards,
-                             bytes_per_shard=(cache_rows * row_bytes,)
-                             * n_shards,
+                             bytes_per_shard=(per_host,) * n_shards,
                              load_per_shard=(sum(loads),) * n_shards,
-                             cache_rows=cache_rows)
+                             cache_rows=cache_rows,
+                             capacity_shards=capacity_shards,
+                             shard_rows=shard_rows)
 
     raise ValueError(f"unknown placement strategy {strategy!r}")
 

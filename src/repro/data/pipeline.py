@@ -223,7 +223,8 @@ def dedup_indices_hook(table_offsets: Sequence[int], key: str = "idx",
 
 def sparse_plan_hook(table_offsets: Sequence[int], key: str = "idx",
                      out_key: str = "uniq_rows",
-                     capacity: int | None = None
+                     capacity: int | None = None,
+                     n_hosts: int | None = None
                      ) -> Callable[[dict[str, np.ndarray]],
                                    dict[str, np.ndarray]]:
     """`dedup_indices_hook` + the shared sparse bucketing plan.
@@ -244,14 +245,31 @@ def sparse_plan_hook(table_offsets: Sequence[int], key: str = "idx",
     `capacity` trims the plan's unique arrays to a static budget (smaller
     forward gathers and backward grids); batches whose unique count
     overflows it fail loudly in the reader thread.
+
+    `n_hosts` additionally splits the plan into per-host sub-plans
+    (`kernels.sparse_plan.split_plan_by_host` — the data-parallel batch
+    split of the multi-host cached tier, docs/cache.md), stacked under
+    batch["hplan_rows"/"hplan_offsets"/"hplan_bags"] with shape (H, ...):
+    the split, too, runs in the reader thread, so each host's miss
+    planning consumes a ready-made sorted unique row set.
     """
-    from repro.kernels.sparse_plan import build_sparse_plan_host
+    from repro.kernels.sparse_plan import (build_sparse_plan_host,
+                                           split_plan_by_host)
     base = dedup_indices_hook(table_offsets, key, out_key)
 
     def hook(batch: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
         out = base(batch)
         plan = build_sparse_plan_host(out[key], capacity=capacity)
         out.update(plan.to_batch())
+        if n_hosts is not None and n_hosts > 1:
+            b, f, _ = out[key].shape
+            subs = split_plan_by_host(plan, n_hosts, b // n_hosts * f)
+            out["hplan_rows"] = np.stack(
+                [np.asarray(p.unique_rows) for p in subs])
+            out["hplan_offsets"] = np.stack(
+                [np.asarray(p.bag_offsets) for p in subs])
+            out["hplan_bags"] = np.stack(
+                [np.asarray(p.bag_ids) for p in subs])
         return out
 
     return hook

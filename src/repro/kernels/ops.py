@@ -24,7 +24,9 @@ from repro.kernels.embedding_bag import (dedup_embedding_bag_kernel,
 from repro.kernels.flash_attention import flash_attention_kernel
 from repro.kernels.rowwise_adagrad import rowwise_adagrad_kernel
 from repro.kernels.sparse_plan import SparsePlan, build_sparse_plan
-from repro.kernels.sparse_update import fused_bag_backward_adagrad_kernel
+from repro.kernels.sparse_update import (
+    fused_bag_backward_adagrad_kernel,
+    fused_bag_backward_adagrad_segments_kernel)
 
 LANE = 128
 SUBLANE = 8
@@ -266,6 +268,51 @@ def fused_sparse_backward(table: jax.Array, accum: jax.Array,
     return ref.fused_bag_backward_adagrad_ref(
         table, accum, plan.unique_rows, plan.bag_offsets, plan.bag_ids,
         pooled2, lr, eps)
+
+
+def fused_sparse_backward_segments(table: jax.Array, accum: jax.Array,
+                                   seg_rows: jax.Array,
+                                   seg_offsets: jax.Array,
+                                   bag_ids: jax.Array,
+                                   pooled_grad: jax.Array, lr,
+                                   seg_base: jax.Array | None = None,
+                                   eps: float = 1e-8,
+                                   use_kernel: bool | None = None,
+                                   interpret: bool = False
+                                   ) -> tuple[jax.Array, jax.Array]:
+    """`fused_sparse_backward` over PER-OWNER SEGMENTS of one plan — the
+    routed update of the multi-host cached tier (docs/cache.md): segment s
+    covers the rows the s-th capacity shard owns, with SEGMENT-LOCAL row
+    ids rebased by seg_base[s] (`kernels.sparse_plan.split_plan_by_owner`).
+
+    seg_rows: (S, C) int32 -1-padded; seg_offsets: (S, C+1) int32 ABSOLUTE
+    into bag_ids (N,); pooled_grad: (B, F, D) or (B*F, D); seg_base
+    defaults to all-zero (segments already in table row space — the
+    shard_map per-owner body, where `table` IS the owner's shard). Each
+    covered row updates with bits identical to the unsegmented
+    `fused_sparse_backward` (asserted in tests/test_cache_multihost.py).
+    """
+    h, d = table.shape
+    s = seg_rows.shape[0]
+    if seg_base is None:
+        seg_base = jnp.zeros((s,), jnp.int32)
+    pooled2 = pooled_grad.reshape(-1, d)
+    if _use_pallas(use_kernel) or interpret:
+        tp, gp, lr_eff = _pad_scale_lr(table, pooled2, lr)
+        new_t, new_a = fused_bag_backward_adagrad_segments_kernel(
+            tp, accum, seg_rows, seg_offsets, bag_ids, gp, lr_eff,
+            jnp.asarray(seg_base, jnp.int32), eps=eps, interpret=interpret)
+        return new_t[:, :d], new_a[:, 0]
+    # jnp path: segments are disjoint row ranges of one plan, so the
+    # flattened (rows rebased, offsets kept absolute) view is itself a
+    # valid abs-offset plan over the whole table
+    rows_flat = jnp.where(seg_rows >= 0,
+                          seg_rows + jnp.asarray(seg_base, jnp.int32)[:, None],
+                          -1).reshape(-1)
+    offs_flat = jnp.concatenate(
+        [seg_offsets[:, :-1].reshape(-1), seg_offsets[-1:, -1]])
+    return ref.fused_bag_backward_adagrad_abs_ref(
+        table, accum, rows_flat, offs_flat, bag_ids, pooled2, lr, eps)
 
 
 # ---------------------------------------------------------------------------

@@ -181,6 +181,51 @@ def fused_bag_backward_adagrad_ref(table: jax.Array, accum: jax.Array,
     return new_table.astype(table.dtype), new_accum
 
 
+def bag_grad_sums_abs(bag_offsets: jax.Array, bag_ids: jax.Array,
+                      pooled: jax.Array) -> jax.Array:
+    """`bag_grad_sums` for a SEGMENT whose offsets are ABSOLUTE positions
+    into the shared `bag_ids` (a contiguous per-owner slice of a plan,
+    `kernels.sparse_plan.split_plan_by_owner`): pairs before bag_offsets[0]
+    or at/after bag_offsets[U] belong to other owners and drop; padded rows
+    are empty runs (their offsets equal the segment end). Accumulation per
+    run stays in ascending pair position — flat-batch order — so each row's
+    sum is bit-identical to the unsegmented `bag_grad_sums`'s."""
+    n = bag_ids.shape[0]
+    u = bag_offsets.shape[0] - 1
+    pos = jnp.arange(n)
+    # run id per pair: offsets are nondecreasing, so the count of offsets
+    # <= pos names the run even across empty (padded) runs
+    seg = jnp.searchsorted(bag_offsets, pos, side="right") - 1
+    in_seg = (pos >= bag_offsets[0]) & (pos < bag_offsets[u])
+    seg = jnp.where(in_seg, jnp.clip(seg, 0, u - 1), u)  # u = dropped
+    contrib = pooled[bag_ids].astype(jnp.float32)
+    return jax.ops.segment_sum(contrib, seg, num_segments=u + 1)[:u]
+
+
+def fused_bag_backward_adagrad_abs_ref(table: jax.Array, accum: jax.Array,
+                                       unique_rows: jax.Array,
+                                       bag_offsets: jax.Array,
+                                       bag_ids: jax.Array,
+                                       pooled: jax.Array,
+                                       lr, eps: float = 1e-8):
+    """`fused_bag_backward_adagrad_ref` over a segment plan with ABSOLUTE
+    offsets (see `bag_grad_sums_abs`) — the jnp oracle behind the per-owner
+    segmented update of the multi-host cached tier (docs/cache.md). Rows
+    the segment doesn't cover are untouched; covered rows update with the
+    exact unsegmented bits."""
+    h, _ = table.shape
+    gsum = bag_grad_sums_abs(bag_offsets, bag_ids, pooled)
+    valid = unique_rows >= 0
+    safe = jnp.where(valid, unique_rows, 0)
+    drop = jnp.where(valid, unique_rows, h)          # h = dropped
+    g2 = jnp.mean(jnp.square(gsum), axis=-1)
+    acc_rows = accum[safe] + g2
+    upd = lr * gsum * jax.lax.rsqrt(acc_rows[:, None] + eps)
+    new_table = table.at[drop].add(-upd.astype(table.dtype), mode="drop")
+    new_accum = accum.at[drop].set(acc_rows, mode="drop")
+    return new_table.astype(table.dtype), new_accum
+
+
 def cache_exchange_ref(capacity: jax.Array, cache: jax.Array,
                        cap_accum: jax.Array, cache_accum: jax.Array,
                        freq: jax.Array, slots: jax.Array,

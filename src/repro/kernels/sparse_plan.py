@@ -82,6 +82,105 @@ def host_plan_from_batch(batch: dict) -> SparsePlan | None:
                       np.asarray(batch["plan_bags"]))
 
 
+def host_plans_from_batch(batch: dict) -> list[SparsePlan] | None:
+    """numpy views of the PER-HOST sub-plans a `data.sparse_plan_hook`
+    configured with `n_hosts` attaches (stacked under hplan_* keys) — what
+    the multi-host cached tier's per-host miss planning consumes."""
+    if "hplan_rows" not in batch:
+        return None
+    rows = np.asarray(batch["hplan_rows"])
+    offs = np.asarray(batch["hplan_offsets"])
+    bags = np.asarray(batch["hplan_bags"])
+    return [SparsePlan(rows[h], offs[h], bags[h])
+            for h in range(rows.shape[0])]
+
+
+def split_plan_by_host(plan: SparsePlan, n_hosts: int,
+                       bags_per_host: int) -> list[SparsePlan]:
+    """Split a GLOBAL host-built plan into per-host sub-plans by bag range
+    (host h owns the contiguous flat bags [h*bags_per_host,
+    (h+1)*bags_per_host) — the data-parallel batch split). Each sub-plan is
+    in HOST-LOCAL bag space and equals `build_sparse_plan_host` run on that
+    host's sub-batch (asserted in tests/test_cache_multihost.py): the
+    multiset of (row, bag) pairs partitions the global plan's and the
+    ascending-rows live prefix survives per host.
+
+    No sort runs here: the global plan's runs are row-ascending and each
+    run's bags are flat-order ascending, so a host's pairs are found by a
+    mask + stable selection and its rows by run-head detection.
+    """
+    rows = np.asarray(plan.unique_rows)
+    offs = np.asarray(plan.bag_offsets).astype(np.int64)
+    bags = np.asarray(plan.bag_ids).astype(np.int64)
+    nh = bags.shape[0] // n_hosts          # per-host lookup capacity
+    n_live = int((rows >= 0).sum())
+    n_valid = int(offs[n_live])
+    host_of = bags[:n_valid] // bags_per_host
+    # run id per live pair: offsets' live prefix is sorted, pads trail
+    run_of = np.searchsorted(offs[:n_live + 1], np.arange(n_valid),
+                             side="right") - 1
+    out = []
+    for h in range(n_hosts):
+        sel = np.flatnonzero(host_of == h)  # ascending pair position ==
+        r_sel = run_of[sel]                 # ascending (row, local bag)
+        sub_rows = np.full((nh,), -1, np.int32)
+        sub_offs = np.zeros((nh + 1,), np.int32)
+        sub_bags = np.zeros((nh,), np.int32)
+        if len(sel):
+            change = np.empty(len(sel), bool)
+            change[0] = True
+            change[1:] = r_sel[1:] != r_sel[:-1]
+            head_pos = np.flatnonzero(change)
+            k = len(head_pos)
+            sub_rows[:k] = rows[r_sel[head_pos]]
+            ends = np.append(head_pos[1:], len(sel)).astype(np.int64)
+            sub_offs[:k + 1] = np.concatenate([[0], ends])
+            sub_offs[k + 1:] = ends[-1]
+            sub_bags[:len(sel)] = bags[sel] - h * bags_per_host
+        out.append(SparsePlan(sub_rows, sub_offs, sub_bags))
+    return out
+
+
+def split_plan_by_owner(plan: SparsePlan, shard_rows: int, n_shards: int,
+                        seg_cap: int | None = None
+                        ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Slice a plan into per-OWNER segments for the routed sparse update:
+    owner s of the row-sharded capacity tier holds rows [s*shard_rows,
+    (s+1)*shard_rows). Because the plan's live prefix is sorted ascending
+    and owners are contiguous row ranges, each owner's rows — and its
+    (row, bag) pairs in `bag_ids` — form a CONTIGUOUS slice: the split is
+    two searchsorted calls and pure slicing, no sort.
+
+    Returns (seg_rows (S, cap) int32 OWNER-LOCAL rows -1-padded,
+    seg_offsets (S, cap+1) int32 ABSOLUTE positions into the shared
+    `bag_ids` with pad entries equal to the segment's bag end, and
+    seg_base (S,) int32 owner row bases). `seg_cap` fixes the per-segment
+    capacity for stable jit shapes (raises on overflow); default is the
+    tight per-step maximum.
+    """
+    rows = np.asarray(plan.unique_rows)
+    offs = np.asarray(plan.bag_offsets).astype(np.int64)
+    n_live = int((rows >= 0).sum())
+    live = rows[:n_live].astype(np.int64)
+    cuts = np.searchsorted(live, np.arange(n_shards + 1) * shard_rows)
+    widest = int(np.diff(cuts).max()) if n_shards else 0
+    cap = widest if seg_cap is None else seg_cap
+    if widest > cap:
+        raise ValueError(
+            f"owner segment overflow: widest owner holds {widest} unique "
+            f"rows > seg_cap={cap}")
+    seg_rows = np.full((n_shards, cap), -1, np.int32)
+    seg_offs = np.zeros((n_shards, cap + 1), np.int32)
+    for s in range(n_shards):
+        a, b = int(cuts[s]), int(cuts[s + 1])
+        k = b - a
+        seg_rows[s, :k] = live[a:b] - s * shard_rows
+        seg_offs[s, :k + 1] = offs[a:b + 1]
+        seg_offs[s, k + 1:] = offs[b]
+    seg_base = (np.arange(n_shards) * shard_rows).astype(np.int32)
+    return seg_rows, seg_offs, seg_base
+
+
 def build_sparse_plan(idx: jax.Array,
                       lookups_per_bag: int | None = None,
                       capacity: int | None = None) -> SparsePlan:

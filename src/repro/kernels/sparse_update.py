@@ -36,34 +36,42 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.compat import MemorySpace, SemaphoreType
 
 
-def _fused_kernel(uniq_ref, off_ref, bag_ref, lr_ref, grads_ref, table_ref,
-                  accum_ref, table_out, accum_out, row_vmem, acc_vmem,
-                  gbuf, gacc, sems, *, eps: float):
-    """Grid step i updates unique row uniq_ref[i].
+def _fused_kernel(uniq_ref, off_ref, bag_ref, base_ref, lr_ref, grads_ref,
+                  table_ref, accum_ref, table_out, accum_out, row_vmem,
+                  acc_vmem, gbuf, gacc, sems, *, eps: float):
+    """Grid step (s, i) updates segment s's unique row uniq_ref[s, i].
 
-    uniq_ref: (U,), off_ref: (U+1,), bag_ref: (N,) SMEM (scalar prefetch;
-    U may be capacity-trimmed below N); lr_ref: (1,) SMEM; grads_ref:
-    (B*F, D) HBM pooled grads; table_ref/table_out: (H, D) HBM aliased;
+    The grid is (S, C): S per-owner SEGMENTS of C rows each (the routed
+    multi-host update groups a plan's rows by owning capacity shard —
+    docs/cache.md; the single-plan path is simply S=1). Rows are
+    SEGMENT-LOCAL; base_ref[s] rebases them into this table.
+
+    uniq_ref: (S, C), off_ref: (S, C+1) ABSOLUTE positions into bag_ref,
+    bag_ref: (N,), base_ref: (S,) SMEM (scalar prefetch; C may be
+    capacity-trimmed below N); lr_ref: (1,) SMEM; grads_ref: (B*F, D) HBM
+    pooled grads; table_ref/table_out: (H, D) HBM aliased;
     accum_ref/accum_out: (H, 1) HBM aliased; row_vmem: (1, D); acc_vmem:
     (1, 1); gbuf: (2, 1, D) f32 double-buffered grad staging; gacc: (1, D)
     f32 accumulator; sems: 4 DMA semaphores (row, accum, grad slot 0/1).
     """
-    i = pl.program_id(0)
-    ix = uniq_ref[i]
+    s = pl.program_id(0)
+    i = pl.program_id(1)
+    ix = uniq_ref[s, i]
 
     @pl.when(ix >= 0)
     def _():
+        row = base_ref[s] + ix
         # row + accumulator fetches overlap the bag-gradient stream
-        cp_r = pltpu.make_async_copy(table_ref.at[pl.ds(ix, 1)], row_vmem,
+        cp_r = pltpu.make_async_copy(table_ref.at[pl.ds(row, 1)], row_vmem,
                                      sems.at[0])
-        cp_a = pltpu.make_async_copy(accum_ref.at[pl.ds(ix, 1)], acc_vmem,
+        cp_a = pltpu.make_async_copy(accum_ref.at[pl.ds(row, 1)], acc_vmem,
                                      sems.at[1])
         cp_r.start()
         cp_a.start()
         gacc[...] = jnp.zeros_like(gacc)
 
-        lo = off_ref[i]
-        hi = off_ref[i + 1]
+        lo = off_ref[s, i]
+        hi = off_ref[s, i + 1]
 
         def grad_copy(j):
             # slot = parity of the ABSOLUTE bag position, so start(j+1)
@@ -102,9 +110,9 @@ def _fused_kernel(uniq_ref, off_ref, bag_ref, lr_ref, grads_ref, table_ref,
         row_vmem[...] = w_new.astype(row_vmem.dtype)
         acc_vmem[...] = acc_new.astype(acc_vmem.dtype)
 
-        cp_wr = pltpu.make_async_copy(row_vmem, table_out.at[pl.ds(ix, 1)],
+        cp_wr = pltpu.make_async_copy(row_vmem, table_out.at[pl.ds(row, 1)],
                                       sems.at[0])
-        cp_wa = pltpu.make_async_copy(acc_vmem, accum_out.at[pl.ds(ix, 1)],
+        cp_wa = pltpu.make_async_copy(acc_vmem, accum_out.at[pl.ds(row, 1)],
                                       sems.at[1])
         cp_wr.start()
         cp_wa.start()
@@ -113,25 +121,25 @@ def _fused_kernel(uniq_ref, off_ref, bag_ref, lr_ref, grads_ref, table_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "interpret"))
-def fused_bag_backward_adagrad_kernel(table: jax.Array, accum: jax.Array,
-                                      unique_rows: jax.Array,
-                                      bag_offsets: jax.Array,
-                                      bag_ids: jax.Array,
-                                      pooled_grads: jax.Array,
-                                      lr: jax.Array, eps: float = 1e-8,
-                                      interpret: bool = False):
-    """table: (H, D) D % 128 == 0; accum: (H,) or (H, 1) fp32; plan arrays
-    from kernels/sparse_plan.py (int32); pooled_grads: (B*F, D) fp32;
-    lr: () fp32. Returns (new_table (H, D), new_accum (H, 1)) updated in
-    place (io aliasing)."""
+def fused_bag_backward_adagrad_segments_kernel(
+        table: jax.Array, accum: jax.Array, seg_rows: jax.Array,
+        seg_offsets: jax.Array, bag_ids: jax.Array, pooled_grads: jax.Array,
+        lr: jax.Array, seg_base: jax.Array, eps: float = 1e-8,
+        interpret: bool = False):
+    """Per-owner-segment generalization: seg_rows (S, C) SEGMENT-LOCAL rows
+    (-1 pads), seg_offsets (S, C+1) ABSOLUTE into bag_ids (N,), seg_base
+    (S,) per-segment row bases (`kernels.sparse_plan.split_plan_by_owner`'s
+    layout); table: (H, D) D % 128 == 0; accum: (H,) or (H, 1) fp32;
+    pooled_grads: (B*F, D) fp32; lr: () fp32. Grid (S, C), rows update in
+    place (io aliasing). Returns (new_table (H, D), new_accum (H, 1))."""
     h, d = table.shape
-    n = unique_rows.shape[0]
+    s, c = seg_rows.shape
     kernel = functools.partial(_fused_kernel, eps=eps)
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=3,
-            grid=(n,),
+            num_scalar_prefetch=4,
+            grid=(s, c),
             in_specs=[
                 pl.BlockSpec(memory_space=MemorySpace.SMEM),  # lr
                 pl.BlockSpec(memory_space=MemorySpace.ANY),   # pooled grads
@@ -152,9 +160,28 @@ def fused_bag_backward_adagrad_kernel(table: jax.Array, accum: jax.Array,
         ),
         out_shape=[jax.ShapeDtypeStruct((h, d), table.dtype),
                    jax.ShapeDtypeStruct((h, 1), jnp.float32)],
-        input_output_aliases={5: 0, 6: 1},
+        input_output_aliases={6: 0, 7: 1},
         interpret=interpret,
-    )(unique_rows, bag_offsets, bag_ids,
+    )(seg_rows, seg_offsets, bag_ids, seg_base.astype(jnp.int32),
       jnp.asarray(lr, jnp.float32).reshape(1),
       pooled_grads.astype(jnp.float32), table,
       accum.reshape(h, 1).astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def fused_bag_backward_adagrad_kernel(table: jax.Array, accum: jax.Array,
+                                      unique_rows: jax.Array,
+                                      bag_offsets: jax.Array,
+                                      bag_ids: jax.Array,
+                                      pooled_grads: jax.Array,
+                                      lr: jax.Array, eps: float = 1e-8,
+                                      interpret: bool = False):
+    """table: (H, D) D % 128 == 0; accum: (H,) or (H, 1) fp32; plan arrays
+    from kernels/sparse_plan.py (int32); pooled_grads: (B*F, D) fp32;
+    lr: () fp32. Returns (new_table (H, D), new_accum (H, 1)) updated in
+    place (io aliasing). The ONE-segment case of the segmented kernel
+    above (a plan's bag_offsets are already absolute when unsegmented)."""
+    return fused_bag_backward_adagrad_segments_kernel(
+        table, accum, unique_rows[None, :], bag_offsets[None, :], bag_ids,
+        pooled_grads, lr, jnp.zeros((1,), jnp.int32), eps=eps,
+        interpret=interpret)

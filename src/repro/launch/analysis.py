@@ -27,6 +27,9 @@ between autodiff's pooled gradients and the table update.
 mega table and the pooled bags for the legacy per-slot gather vs the
 plan-driven dedup'd gather, with `zipf_expected_unique` supplying the
 deterministic unique-row count of a bounded-Zipf access stream.
+`multihost_exchange_traffic` prices the multi-host cached tier's three
+all-to-all legs (miss fetch, routed grads, working-set refresh) against
+the coherence-free per-lookup PS exchange.
 """
 from __future__ import annotations
 
@@ -114,6 +117,64 @@ def embedding_forward_traffic(batch: int, n_features: int, truncation: int,
             "legacy_row_reads": float(n),
             "dedup_row_reads": float(n_unique),
             "row_read_reduction": n / n_unique}
+
+
+def multihost_exchange_traffic(batch: int, n_features: int, truncation: int,
+                               embed_dim: int, n_hosts: int,
+                               unique_per_host: float, unique_global: float,
+                               hit_rate: float, itemsize: int = 4,
+                               index_itemsize: int = 4) -> dict[str, float]:
+    """Cross-host bytes per step of the multi-host cached tier
+    (docs/cache.md "Multi-host coherence") — the companion of
+    `sparse_backward_traffic` / `embedding_forward_traffic` for the three
+    all-to-all legs, under a uniform row->owner map (a remote-owner
+    fraction of (H-1)/H, which row-sharding a hashed id space achieves):
+
+      fetch    each host's misses leave the owning shards:
+               H * U_h * (1 - hit_rate) rows of payload;
+      grads    each (row, bag) pair whose pooled gradient must reach a
+               remote owner ships (D * itemsize) — pairs = B*F*L valid
+               lookups (the repo routes per-bag grads so owner reduction
+               keeps flat-batch order, i.e. bit-exactness; a production
+               per-(host,row) partial-sum variant would ship H*U_h rows
+               instead, reported as `grad_rowsum_bytes`);
+      refresh  every working-set row returns post-update from its owner:
+               H * U_h rows of payload.
+
+    The baseline is the coherence-free alternative the paper's PS
+    architecture implies at this scale: every host pushes PER-LOOKUP
+    gradients and pulls per-lookup rows for its whole batch slice —
+    2 * B*F*L * (H-1)/H * D * itemsize — with no dedup and no cache.
+    `dup_rows` counts the per-step rows reduced once at the owner instead
+    of updated H_dup times (H * U_h - U_g). Returns the per-leg bytes,
+    their `total_bytes`, the baseline, and `reduction` = baseline / total.
+    H = 1 degenerates to zero cross-host bytes (reduction = inf guarded
+    to the baseline itself).
+    """
+    remote = (n_hosts - 1) / n_hosts
+    row_bytes = embed_dim * itemsize
+    pairs = float(batch * n_features * truncation)
+    fetch_bytes = (n_hosts * unique_per_host * (1.0 - hit_rate)
+                   * remote * (row_bytes + index_itemsize))
+    grad_bytes = pairs * remote * (row_bytes + index_itemsize)
+    grad_rowsum_bytes = (n_hosts * unique_per_host * remote
+                         * (row_bytes + index_itemsize))
+    refresh_bytes = n_hosts * unique_per_host * remote * row_bytes
+    total = fetch_bytes + grad_bytes + refresh_bytes
+    baseline = 2.0 * pairs * remote * row_bytes
+    return {"fetch_bytes": fetch_bytes,
+            "grad_bytes": grad_bytes,
+            "grad_rowsum_bytes": grad_rowsum_bytes,
+            "refresh_bytes": refresh_bytes,
+            "total_bytes": total,
+            "rowsum_total_bytes": (fetch_bytes + grad_rowsum_bytes
+                                   + refresh_bytes),
+            "baseline_bytes": baseline,
+            "dup_rows": n_hosts * unique_per_host - unique_global,
+            "reduction": baseline / total if total else baseline,
+            "rowsum_reduction": (baseline / (fetch_bytes + grad_rowsum_bytes
+                                             + refresh_bytes)
+                                 if n_hosts > 1 else baseline)}
 
 
 def zipf_expected_unique(n_draws: float, hash_size: int,

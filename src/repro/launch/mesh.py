@@ -23,3 +23,11 @@ def make_test_mesh(shape=(2, 4), axes=("data", "model")) -> jax.sharding.Mesh:
     """Small mesh for CPU integration tests (requires
     xla_force_host_platform_device_count >= prod(shape))."""
     return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n_hosts: int, axis: str = "data") -> jax.sharding.Mesh:
+    """1-D mesh over the data-parallel hosts of the multi-host cached tier
+    (core/cache.py): the capacity tier row-shards over this axis and the
+    routed sparse update shard_maps over it (train/steps.py
+    build_multihost_cached_train_step)."""
+    return jax.make_mesh((n_hosts,), (axis,))

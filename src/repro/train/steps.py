@@ -19,11 +19,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import DLRMConfig, ModelConfig
-from repro.core.dlrm import dlrm_grads
+from repro.core.dlrm import _bce, dlrm_forward_dense, dlrm_grads
 from repro.core.embedding import EmbeddingBagCollection
 from repro.kernels import ops as kernel_ops
 from repro.kernels import ref as kref
-from repro.kernels.sparse_plan import host_plan_from_batch, plan_from_batch
+from repro.kernels.sparse_plan import (host_plan_from_batch,
+                                       host_plans_from_batch,
+                                       plan_from_batch)
 from repro.models.lm import lm_loss
 from repro.nn.sharding import (TRAIN_RULES, LogicalRules,
                                _live_mesh_axis_names)
@@ -406,6 +408,146 @@ def build_async_cached_dlrm_train_step(cfg: DLRMConfig, cc,
                            plan=host_plan_from_batch(next_batch))
         if not strict_sync and prefetch_rows is not None:
             cc.stage_rows(astate, prefetch_rows)
+        return new_dense, {"dense": new_dense_state}, metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# DLRM with the multi-host cached tier (docs/cache.md "Multi-host coherence")
+# ---------------------------------------------------------------------------
+
+
+def build_multihost_cached_train_step(cfg: DLRMConfig, mc,
+                                      dense_opt: Optimizer,
+                                      sparse_lr: float = 0.05,
+                                      sparse_eps: float = 1e-8,
+                                      interpret: bool = False,
+                                      rules: LogicalRules = TRAIN_RULES,
+                                      strict_sync: bool = False,
+                                      mesh=None,
+                                      host_axis: str = "data") -> Callable:
+    """Train step for `MultiHostCachedEmbeddingBagCollection`: H hosts each
+    run a hot cache over a capacity tier row-sharded across the same hosts.
+
+    Split execution per step (docs/cache.md):
+      HOST   `mc.plan_step` — per-host hit/miss split off the reader
+             thread's sub-plans, LFU admission, owner grouping (the
+             plan-driven all-to-all worklist), stale-copy invalidation;
+      DEVICE one jitted dispatch: (1) install planned misses from the
+             owning shards, (2) per-host pooled lookup against the slabs,
+             concatenated back to the global batch for the dense
+             forward/backward, (3) the ROUTED sparse update — per-owner
+             segments of the global plan, each owner reducing duplicate
+             rows once in host order before its fused AdaGrad apply
+             (shard_map over `mesh`'s host axis when given, the segmented
+             single-launch kernel otherwise), (4) refresh each host's
+             working set from the post-update capacity.
+
+    The batch split (host h owns examples [h*B/H, (h+1)*B/H)) makes owner
+    reduction order == flat-batch order, so the tier is BIT-EXACT vs the
+    dense single-host oracle — and on 1 host vs the single-host cached
+    path (tests/test_cache_multihost.py).
+
+    `strict_sync=True` disables the only overlapped piece (the next-batch
+    prefetch); results are bit-identical either way. Returns step(params,
+    state, mstate, batch, step_idx, next_batch=None) -> (params, state,
+    metrics); batch carries OFFSET global indices and, optionally, the
+    hook-attached plan artifacts (`data.sparse_plan_hook(n_hosts=H)`)."""
+
+    hn = mc.n_hosts
+    ebc = mc.ebc
+
+    def inner(dense_params, dense_state, capacity, cap_accum, caches, dev,
+              step_idx):
+        # 1) the fetch all-to-all: planned misses leave the owning shards
+        #    (mc.fill_slabs is the SAME install the eager eval/prefetch
+        #    paths run — one operation, traced here)
+        caches = mc.fill_slabs(caches, capacity, dev["miss_rows"],
+                               dev["miss_slots"])
+        # 2) per-host pooled lookups, concatenated to the global batch —
+        #    pooling is per-example, so this is bitwise the oracle's lookup
+        pooled = jnp.concatenate(
+            [ebc.lookup({"mega": caches[h]}, dev["local_idx"][h], rules)
+             for h in range(hn)], axis=0)
+
+        def loss_fn(dp, pl_):
+            logits = dlrm_forward_dense({**dp, "emb": None}, dev["dense"],
+                                        pl_, cfg, interpret)
+            return _bce(logits, dev["label"])
+
+        loss, (g_dense, g_pooled) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1))(dense_params, pooled)
+        new_dense, new_dense_state = dense_opt.apply(
+            dense_params, g_dense, dense_state, step_idx)
+        pooled2 = g_pooled.astype(jnp.float32).reshape(-1, caches.shape[-1])
+        # 3) the routed update: per-owner segments, duplicates reduced once
+        if mesh is not None:
+            from jax.sharding import PartitionSpec as SP
+
+            from repro.compat import shard_map
+
+            def owner_update(cap_sh, acc_sh, rows_sh, offs_sh, bags, g2):
+                return kernel_ops.fused_sparse_backward_segments(
+                    cap_sh, acc_sh, rows_sh, offs_sh, bags, g2, sparse_lr,
+                    eps=sparse_eps, use_kernel=mc.use_kernel,
+                    interpret=interpret)
+
+            new_cap, new_acc = shard_map(
+                owner_update, mesh=mesh,
+                in_specs=(SP(host_axis, None), SP(host_axis),
+                          SP(host_axis, None), SP(host_axis, None),
+                          SP(None), SP(None, None)),
+                out_specs=(SP(host_axis, None), SP(host_axis)),
+                check_vma=False,
+            )(capacity, cap_accum, dev["seg_rows"], dev["seg_offsets"],
+              dev["bag_ids"], pooled2)
+        else:
+            new_cap, new_acc = kernel_ops.fused_sparse_backward_segments(
+                capacity, cap_accum, dev["seg_rows"], dev["seg_offsets"],
+                dev["bag_ids"], pooled2, sparse_lr,
+                seg_base=dev["seg_base"], eps=sparse_eps,
+                use_kernel=mc.use_kernel, interpret=interpret)
+        # 4) the return all-to-all: refresh working sets post-update so
+        #    every cached copy a host will hit again is current
+        caches = mc.fill_slabs(caches, new_cap, dev["ws_rows"],
+                               dev["ws_slots"])
+        lookups = jnp.sum(dev["local_idx"] >= 0).astype(jnp.float32)
+        return (new_dense, new_dense_state, new_cap, new_acc, caches,
+                {"loss": loss, "lookups": lookups})
+
+    inner_jit = jax.jit(inner, donate_argnums=(2, 3, 4))
+
+    def step(params, state, mstate, batch, step_idx, next_batch=None):
+        splan = mc.plan_step(mstate, batch["idx"],
+                             host_plans=host_plans_from_batch(batch),
+                             global_plan=host_plan_from_batch(batch),
+                             train=True)
+        dev = {"dense": jnp.asarray(batch["dense"]),
+               "label": jnp.asarray(batch["label"]),
+               "local_idx": jnp.asarray(splan.local_idx),
+               "miss_rows": jnp.asarray(splan.miss_rows),
+               "miss_slots": jnp.asarray(splan.miss_slots),
+               "ws_rows": jnp.asarray(splan.ws_rows),
+               "ws_slots": jnp.asarray(splan.ws_slots),
+               "seg_rows": jnp.asarray(splan.seg_rows),
+               "seg_offsets": jnp.asarray(splan.seg_offsets),
+               "seg_base": jnp.asarray(splan.seg_base),
+               "bag_ids": jnp.asarray(splan.bag_ids)}
+        (new_dense, new_dense_state, new_cap, new_acc, new_caches,
+         metrics) = inner_jit(params, state["dense"], mstate.capacity,
+                              mstate.cap_accum, mstate.caches, dev,
+                              step_idx)
+        mc.mark_updated(mstate, new_cap, new_acc, new_caches)
+        # snapshot BEFORE the prefetch so step metrics cover run batches
+        metrics = {**metrics, **mstate.stats.snapshot(),
+                   **mstate.route.snapshot()}
+        if not strict_sync and next_batch is not None:
+            # dispatched after the jitted step: the gather consumes the
+            # POST-update capacity array, so prefetched copies are current
+            mc.prefetch(mstate, next_batch["idx"],
+                        host_plans=host_plans_from_batch(next_batch),
+                        global_plan=host_plan_from_batch(next_batch))
         return new_dense, {"dense": new_dense_state}, metrics
 
     return step

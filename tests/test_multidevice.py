@@ -7,6 +7,13 @@ import os
 import subprocess
 import sys
 
+import pytest
+
+# exercised on BOTH jax floors: these subprocess tests drive shard_map
+# and mesh construction through the compat shims — see pyproject markers
+# and the CI jax-floor leg
+pytestmark = pytest.mark.compat
+
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 

@@ -26,6 +26,11 @@ from repro.train.steps import build_dlrm_train_step, dlrm_init_state
 
 from conftest import requires_hypothesis  # noqa: E402  (pytest test path)
 
+# exercised on BOTH jax floors: this module drives the compat-shim surfaces
+# (Pallas memory spaces, shard_map, kernel interpret paths) — see pyproject
+# markers and the CI jax-floor leg
+pytestmark = pytest.mark.compat
+
 # ---------------------------------------------------------------------------
 # index corpora: the ISSUE's stress patterns
 # ---------------------------------------------------------------------------

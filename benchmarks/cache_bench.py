@@ -26,8 +26,11 @@ from repro.core.cache import (CachedEmbeddingBagCollection,
 from repro.core.design_space import reduced, test_suite_config
 from repro.core.dlrm import dlrm_param_specs
 from repro.core.embedding import EmbeddingBagCollection
+from repro.core.placement import frequency_reorder
+from repro.data.pipeline import dedup_indices_hook
 from repro.data.synthetic import bounded_zipf_rows, make_dlrm_batch
-from repro.launch.analysis import (multihost_exchange_traffic,
+from repro.launch.analysis import (cache_admission_traffic,
+                                   multihost_exchange_traffic,
                                    zipf_expected_unique)
 from repro.nn.params import init_params
 from repro.optim.optimizers import adagrad
@@ -164,6 +167,117 @@ def multihost_sweep():
              model["reduction"])
         emit(f"cache/multihost_routing_bytes_rowsum_reduction_h{hosts}",
              0.0, model["rowsum_reduction"])
+
+
+def admission_sweep():
+    """The frequency-aware admission rows (docs/cache.md "EMA admission"):
+    EMA seeding + ids-by-frequency reorder + chunk-granular transfers vs
+    first-touch single-row admission, on the SAME deterministic traffic at
+    H = 200k per table under Zipf(1.05).
+
+    Traffic per step per table: 2048 Zipf(1.05) draws over a seeded
+    scatter permutation of the id space (so the reorder is non-trivial),
+    plus every other step a "trending block" burst with two halves:
+    512 recurring contiguous ids rotating over 4 blocks (session/seasonal
+    locality — each block returns every 8 steps) and 256 fresh contiguous
+    ids that never repeat (trending onset). The recurring half is the
+    first-touch pathology: its rows admit at seed ~1 and decay below the
+    per-step cold churn before the block returns, so first-touch re-fetches
+    every block every time; EMA re-seeds them at historical frequency
+    (~1/(1-0.98^8) ≈ 6.7) and they stay resident across the off-period (the
+    monotone-admission property of tests/test_cache_admission.py). The
+    fresh half is cold for BOTH arms but contiguous after the frequency
+    reorder, so the EMA arm moves it in chunk-granular blocks (one
+    descriptor per 8 rows) while first-touch pays per-row descriptors.
+
+    Derived columns are fully deterministic (seeded traffic, policy-only
+    divergence): steady-state hit rate per arm, their ratio (`hit_gain`,
+    must be > 1), and the exchange-bytes reduction from
+    `cache_admission_traffic` priced on each arm's measured fetch stats
+    (must be > 1: fewer re-fetches + block descriptors beat per-row DMAs).
+    """
+    hash_size, lookups, n_zipf = 200_000, 8, 2048
+    rec_rows, fresh_rows, burst_every, n_blocks = 512, 256, 2, 4
+    warm, measure = 24, 24
+    cfg = test_suite_config(n_dense=8, n_sparse=2, hash_size=hash_size,
+                            mlp_width=16, mlp_layers=1, embed_dim=32,
+                            lookups=lookups)
+    f = cfg.n_sparse_features
+    scat = [np.random.RandomState(123 + t).permutation(hash_size)
+            for t in range(f)]
+
+    def traffic(step: int) -> np.ndarray:
+        """(1, F, n_zipf + rec + fresh) per-table ids, -1 pads off-burst."""
+        idx = np.full((1, f, n_zipf + rec_rows + fresh_rows), -1, np.int64)
+        for t in range(f):
+            rng = np.random.RandomState(7000 + 1000 * t + step)
+            ranks = bounded_zipf_rows(rng, hash_size, n_zipf, 1.05)
+            idx[0, t, :n_zipf] = scat[t][ranks]
+            if step % burst_every == 0:
+                k = step // burst_every
+                base = 50_000 + (k % n_blocks) * rec_rows
+                idx[0, t, n_zipf:n_zipf + rec_rows] = np.arange(
+                    base, base + rec_rows)
+                fresh = 100_000 + k * fresh_rows
+                idx[0, t, n_zipf + rec_rows:] = np.arange(
+                    fresh, fresh + fresh_rows)
+        return idx
+
+    ebc = EmbeddingBagCollection.build(cfg, n_shards=1,
+                                      strategy="cached_host")
+    total = ebc.plan.total_rows
+    offs = ebc.plan.table_offsets
+    # offline ids-by-frequency reorder from a warmup counting pass over the
+    # SAME deterministic stream (the CacheEmbedding reorder recipe)
+    counts = np.zeros((total,), np.float64)
+    plain = dedup_indices_hook(offs)
+    for s in range(warm + measure):
+        glob = plain({"idx": traffic(s)})["idx"]
+        counts += np.bincount(glob[glob >= 0].ravel(), minlength=total)
+    remap, _ = frequency_reorder(offs, cfg.hash_sizes, counts, total)
+
+    arms = [("ema", True, 8, remap), ("first_touch", False, 1, None)]
+    mega = jnp.zeros((total, cfg.embed_dim), jnp.float32)
+    states, fns, hooks = [], [], []
+    for _, ema, chunk, rmap in arms:
+        cc = CachedEmbeddingBagCollection.build(
+            cfg, cache_rows=12288, ema_admission=ema, fetch_chunk=chunk)
+        state = cc.init_state(mega)
+        hook = dedup_indices_hook(offs, row_remap=rmap)
+        box = [0]
+
+        def one(cc=cc, state=state, hook=hook, box=box):
+            glob = hook({"idx": traffic(box[0])})["idx"]
+            box[0] += 1
+            jax.block_until_ready(cc.lookup(state, glob, train=False))
+
+        states.append(state)
+        fns.append(one)
+    for _ in range(warm):                    # round-robin, steps [0, warm)
+        for fn in fns:
+            fn()
+    marks = [(s.stats.hits, s.stats.misses, s.stats.fetches,
+              s.stats.fetch_chunks, s.stats.overfetch_rows) for s in states]
+    medians = time_interleaved(fns, [() for _ in fns], warmup=0,
+                               iters=measure)
+    out = {}
+    for (name, _, _, _), state, mark, us in zip(arms, states, marks,
+                                                medians):
+        h0, m0, f0, c0, o0 = mark
+        hits = state.stats.hits - h0
+        misses = state.stats.misses - m0
+        rate = hits / max(hits + misses, 1)
+        model = cache_admission_traffic(
+            float(state.stats.fetches - f0), cfg.embed_dim,
+            fetch_chunks=float(state.stats.fetch_chunks - c0),
+            overfetch_rows=float(state.stats.overfetch_rows - o0))
+        out[name] = (rate, model, us)
+        emit(f"cache/admission_hit_{name}_a1.05_h200k", us, rate)
+    rate_a, model_a, _ = out["ema"]
+    rate_b, model_b, _ = out["first_touch"]
+    emit("cache/admission_hit_gain_a1.05_h200k", 0.0, rate_a / rate_b)
+    emit("cache/admission_exchange_bytes_reduction_a1.05_h200k", 0.0,
+         model_b["single_row_bytes"] / model_a["chunked_bytes"])
 
 
 def step_bench():
@@ -309,6 +423,7 @@ def overlap_sweep():
 def main():
     hit_rate_sweep()
     multihost_sweep()
+    admission_sweep()
     step_bench()
     overlap_sweep()
 

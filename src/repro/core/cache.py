@@ -39,6 +39,7 @@ import numpy as np
 from repro.configs.base import DLRMConfig
 from repro.core.embedding import EmbeddingBagCollection
 from repro.kernels import cache_ops
+from repro.kernels.sparse_plan import coalesce_rows
 
 
 @dataclasses.dataclass
@@ -54,25 +55,34 @@ class CacheStats:
     evictions: int = 0         # slots whose resident row was displaced
     writebacks: int = 0        # dirty evictions flushed to capacity
     prefetched: int = 0        # rows admitted ahead of use (pipeline hook)
+    fetch_chunks: int = 0      # DMA descriptors issued by chunked fetches
+    overfetch_rows: int = 0    # padding rows chunked fetches over-read
     steps: int = 0
 
     @property
     def hit_rate(self) -> float:
+        """hits / (hits + misses); 0.0 before any traffic."""
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
 
     def snapshot(self) -> dict[str, float]:
+        """Flat metrics dict (the train-loop logging payload)."""
         return {"cache_hits": float(self.hits),
                 "cache_misses": float(self.misses),
                 "cache_hit_rate": self.hit_rate,
                 "cache_fetches": float(self.fetches),
                 "cache_evictions": float(self.evictions),
                 "cache_writebacks": float(self.writebacks),
-                "cache_prefetched": float(self.prefetched)}
+                "cache_prefetched": float(self.prefetched),
+                "cache_fetch_chunks": float(self.fetch_chunks),
+                "cache_overfetch_rows": float(self.overfetch_rows)}
 
 
 @dataclasses.dataclass
 class CacheState:
+    """Mutable two-tier state: device hot-row cache over a host capacity
+    tier, plus the host-side slot maps and frequency counters."""
+
     capacity: jax.Array        # (R, d) slow tier — the full mega table
     cap_accum: jax.Array       # (R,) fp32 AdaGrad accumulator, slow tier
     cache: jax.Array           # (C, d) device tier — hot rows
@@ -81,14 +91,19 @@ class CacheState:
     slot_row: np.ndarray       # (C,) int64: global row held by slot, -1 free
     row_slot: np.ndarray       # (R,) int32: slot holding row, -1 uncached
     dirty: np.ndarray          # (C,) bool: slot updated since fetch
+    ema: np.ndarray            # (R,) fp32 EMA-decayed per-row access counts
+    ema_tick: np.ndarray       # (R,) int64 tick of each row's last EMA touch
+    tick: int                  # EMA clock: one tick per planned batch
     stats: CacheStats
 
     @property
     def cache_rows(self) -> int:
+        """Device-tier height C (slots)."""
         return int(self.cache.shape[0])
 
     @property
     def resident(self) -> int:
+        """Number of occupied cache slots."""
         return int((self.slot_row >= 0).sum())
 
 
@@ -107,8 +122,10 @@ class PendingCommit:
     rows: np.ndarray           # (n,) global rows being admitted
     victim_slots: np.ndarray   # (v,) slots whose resident was displaced
     ws_mask: np.ndarray        # (C,) bool: staged batch's full working set
-    shadow: jax.Array | None        # (n, d) fetched rows
-    shadow_accum: jax.Array | None  # (n,) fetched accumulators
+    shadow: jax.Array | None        # (m, d) fetched rows, m >= n if chunked
+    shadow_accum: jax.Array | None  # (m,) fetched accumulators
+    src_pos: np.ndarray | None = None  # (n,) shadow row per entry (chunked
+                                       # fetch); None = one row per entry
 
 
 @dataclasses.dataclass
@@ -155,14 +172,19 @@ class AsyncCacheState:
     pending: list[PendingCommit]
     inflight_mask: np.ndarray | None   # (C,) bool: in-flight working set
     staged: StagedBatch | None
+    ema: np.ndarray            # (R,) fp32 EMA-decayed per-row access counts
+    ema_tick: np.ndarray       # (R,) int64 tick of each row's last EMA touch
+    tick: int                  # EMA clock: one tick per planned batch
     stats: CacheStats
 
     @property
     def cache_rows(self) -> int:
+        """Device-tier height C (slots)."""
         return int(self.cache.shape[0])
 
     @property
     def resident(self) -> int:
+        """Number of occupied cache slots."""
         return int((self.slot_row >= 0).sum())
 
 
@@ -189,6 +211,108 @@ def _pick_slots(slot_row: np.ndarray, freq: np.ndarray, n: int,
     return np.concatenate([free[:min(n, len(free))], victims])[:n], victims
 
 
+def _ema_score(ema: np.ndarray, ema_tick: np.ndarray, rows: np.ndarray,
+               now: int, decay: float) -> np.ndarray:
+    """Lazily-decayed EMA read: each row's counter decays by `decay` per
+    tick, but only the touched rows are ever written — the decay owed since
+    a row's last touch is applied on read (score = ema * decay**age), so
+    the (R,)-sized state needs no per-step dense pass."""
+    age = (now - ema_tick[rows]).astype(np.float32)
+    return ema[rows] * np.power(np.float32(decay), age)
+
+
+def _ema_touch(ema: np.ndarray, ema_tick: np.ndarray, rows: np.ndarray,
+               counts: np.ndarray, now: int, decay: float) -> None:
+    """Fold one batch's access counts into the per-row EMA (in place):
+    settle each touched row's owed decay, add its counts, stamp the tick.
+    After the call `ema[rows]` holds the post-touch scores — the admission
+    seeds of the EMA policy (a re-admitted row re-enters at its historical
+    frequency instead of this batch's count, so one cold burst cannot
+    churn it out of the cache before the burst rows themselves decay)."""
+    ema[rows] = _ema_score(ema, ema_tick, rows, now, decay) \
+        + counts.astype(np.float32)
+    ema_tick[rows] = now
+
+
+def _gate_admission(slot_row: np.ndarray, freq: np.ndarray,
+                    protect: np.ndarray, missing: np.ndarray,
+                    scores: np.ndarray) -> np.ndarray:
+    """The adaptive admission threshold of the EMA policy, for best-effort
+    paths (prefetch / stage_rows with `gate=True`): rows that fit free
+    slots always admit; beyond that, candidates (EMA scores descending)
+    admit only while they STRICTLY beat the coldest unprotected residents
+    (slot freq ascending) — so admission is monotone in a row's access
+    frequency and a one-off cold burst (score ~1) cannot displace the hot
+    head (asserted in tests/test_cache_admission.py). Returns a (len
+    (missing),) bool keep-mask; strict planned batches never gate (every
+    planned row MUST become resident for bit-exactness)."""
+    n = len(missing)
+    free = int((slot_row < 0).sum())
+    if n <= free:
+        return np.ones((n,), bool)
+    evictable = np.flatnonzero((slot_row >= 0) & ~protect)
+    vic_scores = np.sort(np.asarray(freq)[evictable])
+    order = np.argsort(-scores, kind="stable")
+    admit = np.zeros((n,), bool)
+    admit[order[:free]] = True
+    rest = order[free:]
+    k = min(len(rest), len(vic_scores))
+    if k:
+        beats = scores[rest[:k]] > vic_scores[:k]
+        # descending candidates vs ascending victims: the first failure
+        # ends the admitted prefix
+        n_admit = k if beats.all() else int(np.argmin(beats))
+        admit[rest[:n_admit]] = True
+    return admit
+
+
+def _chunk_min_fill(chunk: int) -> int:
+    """Minimum member rows for a coalesced block to beat per-row DMAs:
+    blocks at least ~3/4 full keep the over-fetch payload below the
+    descriptor savings (launch/analysis.cache_admission_traffic prices the
+    trade); sparser blocks fall back to the per-row fetch path."""
+    return max(2, (3 * chunk + 3) // 4)
+
+
+def _chunked_shadow_fetch(capacity: jax.Array, cap_accum: jax.Array,
+                          missing: np.ndarray, chunk: int, stats: CacheStats,
+                          use_kernel: bool | None, interpret: bool
+                          ) -> tuple[jax.Array, jax.Array, np.ndarray]:
+    """Chunk-granular shadow fetch with density-adaptive fallback, shared
+    by the sync and async admission paths: coalesce the sorted miss list
+    into contiguous blocks, fetch dense blocks block-wise
+    (cache_ops.cache_fetch_chunked — one DMA descriptor per block) and the
+    isolated remainder row-wise, concatenated into one shadow slab. Books
+    `fetch_chunks` (descriptors) and `overfetch_rows` (block padding) on
+    `stats`. Returns (shadow, shadow_accum, src_pos) — src_pos[i] is miss
+    i's row inside the slab, the `cache_ops.cache_commit` install remap."""
+    total = int(capacity.shape[0])
+    chunk = min(chunk, total)
+    starts, pos = coalesce_rows(missing, chunk, total,
+                                min_fill=_chunk_min_fill(chunk))
+    single = np.flatnonzero(pos < 0)
+    src_pos = pos.copy()
+    src_pos[single] = len(starts) * chunk + np.arange(len(single),
+                                                      dtype=np.int32)
+    parts = []
+    if len(starts):
+        parts.append(cache_ops.cache_fetch_chunked(
+            capacity, cap_accum, jnp.asarray(starts), chunk,
+            use_kernel=use_kernel, interpret=interpret))
+    if len(single):
+        parts.append(cache_ops.cache_fetch(
+            capacity, cap_accum, jnp.asarray(missing[single], jnp.int32),
+            use_kernel=use_kernel, interpret=interpret))
+    if len(parts) == 2:
+        shadow = jnp.concatenate([parts[0][0], parts[1][0]])
+        shadow_accum = jnp.concatenate([parts[0][1], parts[1][1]])
+    else:
+        shadow, shadow_accum = parts[0]
+    stats.fetch_chunks += len(starts) + len(single)
+    stats.overfetch_rows += len(starts) * chunk - (len(missing) - len(single))
+    return shadow, shadow_accum, src_pos
+
+
 @dataclasses.dataclass(frozen=True)
 class CachedEmbeddingBagCollection:
     """EmbeddingBagCollection whose device working set is a hot-row cache.
@@ -203,16 +327,28 @@ class CachedEmbeddingBagCollection:
                                # adapts faster but churns the tail more)
     use_kernel: bool | None = None
     interpret: bool = False
+    ema_admission: bool = True  # seed admitted slots with the row's EMA
+                                # score (historical frequency) instead of
+                                # this batch's count — False restores
+                                # first-touch count seeding
+    fetch_chunk: int = 1       # capacity->cache transfer granularity in
+                               # rows: >1 coalesces the sorted miss list
+                               # into contiguous blocks (one DMA descriptor
+                               # per block); 1 = per-row transfers
 
     @classmethod
     def build(cls, cfg: DLRMConfig, cache_rows: int | None = None,
               strategy: str = "cached_host", decay: float = 0.98,
               use_kernel: bool | None = None,
-              interpret: bool = False) -> CachedEmbeddingBagCollection:
+              interpret: bool = False, ema_admission: bool = True,
+              fetch_chunk: int = 1) -> CachedEmbeddingBagCollection:
+        """Build over a fresh single-shard EmbeddingBagCollection; see the
+        class fields for the knobs."""
         ebc = EmbeddingBagCollection.build(cfg, n_shards=1, strategy=strategy)
         rows = cache_rows if cache_rows is not None else ebc.plan.cache_rows
         assert rows > 0, "cached_host plan produced an empty cache"
-        return cls(ebc, int(rows), decay, use_kernel, interpret)
+        return cls(ebc, int(rows), decay, use_kernel, interpret,
+                   ema_admission, int(fetch_chunk))
 
     # -- state ---------------------------------------------------------------
 
@@ -240,6 +376,9 @@ class CachedEmbeddingBagCollection:
             slot_row=np.full((c,), -1, np.int64),
             row_slot=np.full((r,), -1, np.int32),
             dirty=np.zeros((c,), bool),
+            ema=np.zeros((r,), np.float32),
+            ema_tick=np.zeros((r,), np.int64),
+            tick=0,
             stats=CacheStats())
 
     # -- admission -----------------------------------------------------------
@@ -285,9 +424,11 @@ class CachedEmbeddingBagCollection:
         return np.where(valid, local, -1).astype(np.int32)
 
     def _admit(self, state: CacheState, missing: np.ndarray,
-               counts: np.ndarray, protect: np.ndarray) -> int:
-        """Bring `missing` global rows into cache slots, evicting the coldest
-        unprotected slots. `protect` is a (C,) bool mask of slots that must
+               seeds: np.ndarray, protect: np.ndarray) -> int:
+        """Bring `missing` global rows (SORTED ascending) into cache slots,
+        evicting the coldest unprotected slots. `seeds` holds the slots'
+        initial LFU scores (batch counts, or EMA scores under the EMA
+        admission policy); `protect` is a (C,) bool mask of slots that must
         survive (the current working set). Returns rows written back."""
         n = len(missing)
         if n == 0:
@@ -302,14 +443,35 @@ class CachedEmbeddingBagCollection:
         evict_rows = np.full((n,), -1, np.int64)
         evict_rows[len(slots) - len(victims):] = np.where(
             wb_mask, evicted_rows, -1)
-        (state.capacity, state.cache, state.cap_accum, state.cache_accum,
-         state.freq) = cache_ops.cache_exchange(
-            state.capacity, state.cache, state.cap_accum, state.cache_accum,
-            state.freq, jnp.asarray(slots, jnp.int32),
-            jnp.asarray(evict_rows, jnp.int32),
-            jnp.asarray(missing, jnp.int32),
-            jnp.asarray(counts, jnp.float32),
-            use_kernel=self.use_kernel, interpret=self.interpret)
+        if self.fetch_chunk > 1:
+            # chunk-granular transfer: coalesce the sorted miss list into
+            # contiguous blocks, fetch dense blocks block-wise (isolated
+            # misses fall back row-wise), install row-wise through the
+            # commit's src_pos remap — bit-identical to the fused exchange
+            # (values are copies either way)
+            shadow, shadow_accum, pos = _chunked_shadow_fetch(
+                state.capacity, state.cap_accum, missing, self.fetch_chunk,
+                state.stats, self.use_kernel, self.interpret)
+            (state.capacity, state.cache, state.cap_accum,
+             state.cache_accum) = cache_ops.cache_commit(
+                state.capacity, state.cache, state.cap_accum,
+                state.cache_accum, shadow, shadow_accum,
+                jnp.asarray(slots, jnp.int32),
+                jnp.asarray(evict_rows, jnp.int32),
+                jnp.asarray(missing, jnp.int32),
+                use_kernel=self.use_kernel, interpret=self.interpret,
+                src_pos=jnp.asarray(pos))
+            state.freq = state.freq.at[jnp.asarray(slots, jnp.int32)].set(
+                jnp.asarray(seeds, jnp.float32))
+        else:
+            (state.capacity, state.cache, state.cap_accum, state.cache_accum,
+             state.freq) = cache_ops.cache_exchange(
+                state.capacity, state.cache, state.cap_accum,
+                state.cache_accum, state.freq, jnp.asarray(slots, jnp.int32),
+                jnp.asarray(evict_rows, jnp.int32),
+                jnp.asarray(missing, jnp.int32),
+                jnp.asarray(seeds, jnp.float32),
+                use_kernel=self.use_kernel, interpret=self.interpret)
         # host maps
         state.row_slot[evicted_rows] = -1
         state.slot_row[slots] = missing
@@ -336,13 +498,22 @@ class CachedEmbeddingBagCollection:
          miss_counts) = self._split_batch(idx, state.row_slot,
                                           state.cache_rows, plan)
         # LFU accounting: decay everything, bump hit slots; admitted slots
-        # are seeded with their batch counts by the exchange below.
+        # are seeded by _admit below.
         state.freq = cache_ops.lfu_touch(
             state.freq, jnp.asarray(hit_slots, jnp.int32),
             jnp.asarray(hit_counts, jnp.float32), decay=self.decay)
+        # per-ROW EMA (capacity row space, survives eviction): one tick per
+        # planned batch, decay settled lazily on touch
+        state.tick += 1
+        _ema_touch(state.ema, state.ema_tick, rows, counts, state.tick,
+                   self.decay)
         protect = np.zeros((state.cache_rows,), bool)
         protect[hit_slots] = True
-        self._admit(state, missing, miss_counts, protect)
+        # EMA admission: a re-admitted row re-enters at its historical
+        # frequency (post-touch EMA score) instead of this batch's count
+        seeds = state.ema[missing] if self.ema_admission \
+            else miss_counts.astype(np.float32)
+        self._admit(state, missing, seeds, protect)
         state.stats.hits += int(counts.sum()) - len(missing)
         state.stats.misses += len(missing)
         state.stats.steps += 1
@@ -350,24 +521,38 @@ class CachedEmbeddingBagCollection:
             state.dirty[state.row_slot[rows]] = True
         return self._remap(state.row_slot, idx, valid)
 
-    def prefetch(self, state: CacheState, rows) -> int:
+    def prefetch(self, state: CacheState, rows, gate: bool = False) -> int:
         """Best-effort admission of `rows` (unique global rows, e.g. the
         NEXT batch's deduplicated indices from the pipeline hook) so the
         capacity-tier fetch overlaps the current step's compute. Does not
         touch hit/miss accounting and never evicts the rows it brings in;
-        overflow beyond free+evictable space is dropped. Returns the number
-        of rows admitted."""
+        overflow beyond free+evictable space is dropped. `gate=True` adds
+        the EMA admission threshold (`_gate_admission`): beyond the free
+        slots, a row is admitted only if its EMA score strictly beats the
+        coldest unprotected resident's — speculative admissions cannot
+        churn the hot head. Returns the number of rows admitted."""
         rows = np.unique(np.asarray(rows))
         rows = rows[rows >= 0]
         missing = rows[state.row_slot[rows] < 0]
         protect = np.zeros((state.cache_rows,), bool)
         keep = state.row_slot[rows[state.row_slot[rows] >= 0]]
         protect[keep] = True
+        # seed = EMA score + 1 (this request counts as one access; EMA
+        # itself is only touched by planned batches), or 1.0 first-touch
+        if self.ema_admission:
+            seeds = _ema_score(state.ema, state.ema_tick, missing,
+                               state.tick, self.decay) + np.float32(1.0)
+        else:
+            seeds = np.ones((len(missing),), np.float32)
+        if gate and len(missing):
+            keep_mask = _gate_admission(state.slot_row,
+                                        np.asarray(state.freq), protect,
+                                        missing, seeds)
+            missing, seeds = missing[keep_mask], seeds[keep_mask]
         evictable = int(((state.slot_row >= 0) & ~protect).sum())
         free = int((state.slot_row < 0).sum())
-        missing = missing[:free + evictable]
-        self._admit(state, missing, np.ones((len(missing),), np.float32),
-                    protect)
+        missing, seeds = missing[:free + evictable], seeds[:free + evictable]
+        self._admit(state, missing, seeds, protect)
         state.stats.prefetched += len(missing)
         return len(missing)
 
@@ -506,6 +691,9 @@ class CachedEmbeddingBagCollection:
             pending=[],
             inflight_mask=None,
             staged=None,
+            ema=np.zeros((r,), np.float32),
+            ema_tick=np.zeros((r,), np.int64),
+            tick=0,
             stats=CacheStats())
 
     def _protected_mask(self, astate: AsyncCacheState) -> np.ndarray:
@@ -542,21 +730,27 @@ class CachedEmbeddingBagCollection:
 
     def _admit_async(self, astate: AsyncCacheState, missing: np.ndarray,
                      extra_protect: np.ndarray, seed: np.ndarray,
-                     strict: bool) -> PendingCommit:
+                     strict: bool, gate: bool = False) -> PendingCommit:
         """Shared admission core of `_plan_async` and `stage_rows`: drain
         the queue if a missing row's dirty eviction is still pending,
         choose free slots then coldest unprotected victims, dispatch the
         shadow fetch, flip the host maps eagerly, and queue the commit.
 
-        `seed` holds per-missing-row LFU seeds (batch counts for plans,
-        1.0 for prefetch). `strict=True` raises on overflow (a planned
-        batch MUST become resident); `strict=False` truncates `missing`
-        (best-effort prefetch). Returns the queued PendingCommit, whose
-        ws_mask covers the admitted slots (callers widen it for full
-        batch working sets)."""
+        `seed` holds per-missing-row LFU seeds (EMA scores under the EMA
+        admission policy, else batch counts for plans / 1.0 for prefetch).
+        `strict=True` raises on overflow (a planned batch MUST become
+        resident); `strict=False` truncates `missing` (best-effort
+        prefetch), and with `gate=True` also applies the EMA admission
+        threshold (`_gate_admission`) first. Returns the queued
+        PendingCommit, whose ws_mask covers the admitted slots (callers
+        widen it for full batch working sets)."""
         self._drain_if_fetching_queued_victims(astate, missing)
         protect = self._protected_mask(astate) | extra_protect
         if not strict:
+            if gate and len(missing):
+                keep = _gate_admission(astate.slot_row, astate.freq,
+                                       protect, missing, seed)
+                missing, seed = missing[keep], seed[keep]
             free = int((astate.slot_row < 0).sum())
             evictable = int(((astate.slot_row >= 0) & ~protect).sum())
             missing = missing[:free + evictable]
@@ -572,13 +766,20 @@ class CachedEmbeddingBagCollection:
         evict_rows = np.full((n,), -1, np.int64)
         evict_rows[len(slots) - len(victims):] = np.where(
             wb_mask, evicted_rows, -1)
+        src_pos = None
         if n:
             # fetch into a fresh shadow slab — reads the tiers only, so it
             # overlaps the in-flight batch's device compute
-            shadow, shadow_accum = cache_ops.cache_fetch(
-                astate.capacity, astate.cap_accum,
-                jnp.asarray(missing, jnp.int32),
-                use_kernel=self.use_kernel, interpret=self.interpret)
+            if self.fetch_chunk > 1:
+                shadow, shadow_accum, src_pos = _chunked_shadow_fetch(
+                    astate.capacity, astate.cap_accum, missing,
+                    self.fetch_chunk, astate.stats, self.use_kernel,
+                    self.interpret)
+            else:
+                shadow, shadow_accum = cache_ops.cache_fetch(
+                    astate.capacity, astate.cap_accum,
+                    jnp.asarray(missing, jnp.int32),
+                    use_kernel=self.use_kernel, interpret=self.interpret)
         else:
             shadow = shadow_accum = None
         epoch = astate.epoch + 1
@@ -598,7 +799,7 @@ class CachedEmbeddingBagCollection:
         astate.stats.writebacks += int(wb_mask.sum())
         pending = PendingCommit(epoch, slots.astype(np.int64), evict_rows,
                                 missing, victims, ws_mask, shadow,
-                                shadow_accum)
+                                shadow_accum, src_pos)
         if n:                                  # nothing to commit for all-hit
             astate.pending.append(pending)
         return pending
@@ -616,10 +817,16 @@ class CachedEmbeddingBagCollection:
         # decay everything, bump hit slots; admitted slots seeded by admit
         astate.freq *= np.float32(self.decay)
         astate.freq[hit_slots] += hit_counts.astype(np.float32)
+        # per-ROW EMA, same clock discipline as the sync `prepare`
+        astate.tick += 1
+        _ema_touch(astate.ema, astate.ema_tick, rows, counts, astate.tick,
+                   self.decay)
         extra = np.zeros((astate.cache_rows,), bool)
         extra[hit_slots] = True
         n = len(missing)
-        pending = self._admit_async(astate, missing, extra, miss_counts,
+        seeds = astate.ema[missing] if self.ema_admission \
+            else miss_counts.astype(np.float32)
+        pending = self._admit_async(astate, missing, extra, seeds,
                                     strict=True)
         ws_slots = astate.row_slot[rows]
         pending.ws_mask[ws_slots] = True       # widen: full batch working set
@@ -642,11 +849,13 @@ class CachedEmbeddingBagCollection:
         astate.staged = staged
         return staged.local
 
-    def stage_rows(self, astate: AsyncCacheState, rows) -> int:
+    def stage_rows(self, astate: AsyncCacheState, rows,
+                   gate: bool = False) -> int:
         """Best-effort k-step-lookahead admission (the async twin of
         `prefetch`): queue a fetch for `rows` without hit/miss accounting
         and without evicting any protected slot; overflow beyond
-        free+evictable space is dropped. Returns rows admitted."""
+        free+evictable space is dropped. `gate=True` adds the EMA admission
+        threshold (see `prefetch`). Returns rows admitted."""
         rows = np.unique(np.asarray(rows))
         rows = rows[rows >= 0]
         missing = rows[astate.row_slot[rows] < 0]
@@ -655,10 +864,13 @@ class CachedEmbeddingBagCollection:
         extra = np.zeros((astate.cache_rows,), bool)
         keep = astate.row_slot[rows[astate.row_slot[rows] >= 0]]
         extra[keep] = True                     # requested residents survive
-        pending = self._admit_async(astate, missing,
-                                    extra, np.ones((len(missing),),
-                                                   np.float32),
-                                    strict=False)
+        if self.ema_admission:
+            seeds = _ema_score(astate.ema, astate.ema_tick, missing,
+                               astate.tick, self.decay) + np.float32(1.0)
+        else:
+            seeds = np.ones((len(missing),), np.float32)
+        pending = self._admit_async(astate, missing, extra, seeds,
+                                    strict=False, gate=gate)
         n = len(pending.rows)
         astate.stats.prefetched += n
         return n
@@ -705,7 +917,9 @@ class CachedEmbeddingBagCollection:
                 jnp.asarray(p.slots, jnp.int32),
                 jnp.asarray(p.evict_rows, jnp.int32),
                 jnp.asarray(p.rows, jnp.int32),
-                use_kernel=self.use_kernel, interpret=self.interpret)
+                use_kernel=self.use_kernel, interpret=self.interpret,
+                src_pos=None if p.src_pos is None
+                else jnp.asarray(p.src_pos, jnp.int32))
             done += 1
         astate.pending.clear()
         return done
@@ -769,20 +983,25 @@ class RouteStats:
     dup_rows: int = 0          # rows in >1 host's working set (reduced ONCE
                                # at the owner instead of updated twice)
     invalidations: int = 0     # cached copies dropped after a remote update
+    fetch_chunks: int = 0      # per-(host, owner) DMA descriptors after
+                               # run-coalescing the miss messages
     steps: int = 0
 
     @property
     def remote_fetch_fraction(self) -> float:
+        """Fraction of fetched rows served by a REMOTE owner shard."""
         total = self.fetch_local + self.fetch_remote
         return self.fetch_remote / total if total else 0.0
 
     def snapshot(self) -> dict[str, float]:
+        """Flat metrics dict (the train-loop logging payload)."""
         return {"route_fetch_local": float(self.fetch_local),
                 "route_fetch_remote": float(self.fetch_remote),
                 "route_refresh_remote": float(self.refresh_remote),
                 "route_grad_pairs_remote": float(self.grad_pairs_remote),
                 "route_dup_rows": float(self.dup_rows),
                 "route_invalidations": float(self.invalidations),
+                "route_fetch_chunks": float(self.fetch_chunks),
                 "route_remote_fetch_fraction": self.remote_fetch_fraction}
 
 
@@ -805,15 +1024,20 @@ class MultiHostCacheState:
     freq: np.ndarray           # (H, C) host fp32 LFU-with-decay scores
     slot_row: np.ndarray       # (H, C) int64: row held by slot, -1 free
     row_slot: np.ndarray       # (H, R) int32: slot holding row, -1 uncached
+    ema: np.ndarray            # (R,) fp32 EMA-decayed GLOBAL per-row counts
+    ema_tick: np.ndarray       # (R,) int64 tick of each row's last EMA touch
+    tick: int                  # EMA clock: one tick per planned batch
     stats: CacheStats          # aggregate over hosts
     route: RouteStats
 
     @property
     def n_hosts(self) -> int:
+        """Host count H (one hot cache each)."""
         return int(self.caches.shape[0])
 
     @property
     def cache_rows(self) -> int:
+        """Per-host device-tier height C (slots)."""
         return int(self.caches.shape[1])
 
 
@@ -856,22 +1080,33 @@ class MultiHostCachedEmbeddingBagCollection:
     decay: float = 0.98
     use_kernel: bool | None = None
     interpret: bool = False
+    ema_admission: bool = True  # same policy as the single-host tier; the
+                                # EMA is GLOBAL (row space), shared by all
+                                # hosts' admission decisions
+    fetch_chunk: int = 1       # all-to-all miss-message granularity in
+                               # rows: >1 coalesces each (host, owner)
+                               # message's sorted rows into contiguous
+                               # blocks (booked in RouteStats.fetch_chunks)
 
     @classmethod
     def build(cls, cfg: DLRMConfig, n_hosts: int,
               cache_rows: int | None = None, decay: float = 0.98,
-              use_kernel: bool | None = None, interpret: bool = False
+              use_kernel: bool | None = None, interpret: bool = False,
+              ema_admission: bool = True, fetch_chunk: int = 1
               ) -> MultiHostCachedEmbeddingBagCollection:
+        """Build over a fresh `n_hosts`-sharded EmbeddingBagCollection; see
+        the class fields for the knobs."""
         ebc = EmbeddingBagCollection.build(cfg, n_shards=n_hosts,
                                            strategy="cached_host",
                                            capacity_shards=n_hosts)
         rows = cache_rows if cache_rows is not None else ebc.plan.cache_rows
         assert rows > 0, "cached_host plan produced an empty cache"
         return cls(ebc, int(n_hosts), int(rows), decay, use_kernel,
-                   interpret)
+                   interpret, ema_admission, int(fetch_chunk))
 
     @property
     def shard_rows(self) -> int:
+        """Capacity rows owned by each host shard."""
         return self.ebc.plan.shard_rows
 
     # -- state ---------------------------------------------------------------
@@ -909,18 +1144,23 @@ class MultiHostCachedEmbeddingBagCollection:
             freq=np.zeros((h, c), np.float32),
             slot_row=np.full((h, c), -1, np.int64),
             row_slot=np.full((h, total), -1, np.int32),
+            ema=np.zeros((total,), np.float32),
+            ema_tick=np.zeros((total,), np.int64),
+            tick=0,
             stats=CacheStats(),
             route=RouteStats())
 
     # -- per-host admission --------------------------------------------------
 
     def _admit_host(self, state: MultiHostCacheState, h: int,
-                    missing: np.ndarray, counts: np.ndarray,
+                    missing: np.ndarray, seeds: np.ndarray,
                     protect: np.ndarray) -> np.ndarray:
         """Assign cache slots on host h for `missing` rows: free slots
-        first, then the coldest unprotected residents. Clean caches make
-        eviction writeback-free — the displaced copy is dropped (its
-        authoritative value lives at the owner). Returns the slots."""
+        first, then the coldest unprotected residents. `seeds` holds the
+        slots' initial LFU scores (EMA scores under the EMA admission
+        policy, else batch counts). Clean caches make eviction
+        writeback-free — the displaced copy is dropped (its authoritative
+        value lives at the owner). Returns the slots."""
         n = len(missing)
         if n == 0:
             return np.empty((0,), np.int64)
@@ -933,7 +1173,7 @@ class MultiHostCachedEmbeddingBagCollection:
         state.row_slot[h, evicted] = -1
         state.slot_row[h, slots] = missing
         state.row_slot[h, missing] = slots.astype(np.int32)
-        state.freq[h, slots] = counts.astype(np.float32)
+        state.freq[h, slots] = seeds.astype(np.float32)
         state.stats.fetches += n
         state.stats.evictions += len(victims)
         return slots
@@ -981,6 +1221,7 @@ class MultiHostCachedEmbeddingBagCollection:
         g_rows = np.asarray(global_plan.unique_rows)
         n_live = int((g_rows >= 0).sum())
         dup = -n_live
+        state.tick += 1          # one EMA tick per planned global batch
         for h in range(hn):
             sub = idx[h * bh:(h + 1) * bh]
             (sub, valid, rows, counts, hit_slots, hit_counts, missing,
@@ -990,10 +1231,15 @@ class MultiHostCachedEmbeddingBagCollection:
             # host LFU: decay everything, bump hits; admissions seed below
             state.freq[h] *= np.float32(self.decay)
             state.freq[h, hit_slots] += hit_counts.astype(np.float32)
+            # GLOBAL per-row EMA: hosts touch sequentially, so shared rows
+            # accumulate every host's counts at this tick
+            _ema_touch(state.ema, state.ema_tick, rows, counts, state.tick,
+                       self.decay)
             protect = np.zeros((self.cache_rows,), bool)
             protect[hit_slots] = True
-            slots = self._admit_host(state, h, missing, miss_counts,
-                                     protect)
+            seeds = state.ema[missing] if self.ema_admission \
+                else miss_counts.astype(np.float32)
+            slots = self._admit_host(state, h, missing, seeds, protect)
             miss_rows[h, :len(missing)] = missing
             miss_slots[h, :len(missing)] = slots
             ws_rows[h, :len(rows)] = rows
@@ -1005,6 +1251,26 @@ class MultiHostCachedEmbeddingBagCollection:
             owner_m = missing // self.shard_rows
             state.route.fetch_remote += int((owner_m != h).sum())
             state.route.fetch_local += int((owner_m == h).sum())
+            if self.fetch_chunk > 1 and len(missing):
+                # chunk the per-(host, owner) all-to-all messages: each
+                # owner's slice of the sorted miss list coalesces on its
+                # own (blocks never straddle shard boundaries)
+                chunk = min(self.fetch_chunk, self.shard_rows)
+                cuts = np.searchsorted(
+                    missing, np.arange(hn + 1) * self.shard_rows)
+                for s in range(hn):
+                    a, b_ = int(cuts[s]), int(cuts[s + 1])
+                    if b_ > a:
+                        starts, pos = coalesce_rows(
+                            missing[a:b_] - s * self.shard_rows, chunk,
+                            self.shard_rows,
+                            min_fill=_chunk_min_fill(chunk))
+                        n_single = int((pos < 0).sum())
+                        descs = len(starts) + n_single
+                        state.route.fetch_chunks += descs
+                        state.stats.fetch_chunks += descs
+                        state.stats.overfetch_rows += \
+                            len(starts) * chunk - (b_ - a - n_single)
             if train:
                 owner_w = rows // self.shard_rows
                 remote = owner_w != h
@@ -1089,13 +1355,15 @@ class MultiHostCachedEmbeddingBagCollection:
     # -- prefetch ------------------------------------------------------------
 
     def prefetch(self, state: MultiHostCacheState, idx,
-                 host_plans=None, global_plan=None) -> int:
+                 host_plans=None, global_plan=None,
+                 gate: bool = False) -> int:
         """Best-effort admission of the NEXT batch's per-host miss rows so
         the owner fetch overlaps the in-flight step's device compute (the
         dispatch ordering guarantees post-update values — the gather
         consumes the updated capacity array). Never evicts a requested
-        resident; overflow beyond free+evictable space is dropped. Returns
-        rows admitted."""
+        resident; overflow beyond free+evictable space is dropped.
+        `gate=True` adds the EMA admission threshold per host (see the
+        single-host `prefetch`). Returns rows admitted."""
         from repro.kernels.sparse_plan import (build_sparse_plan_host,
                                                split_plan_by_host)
         idx = np.asarray(idx)
@@ -1115,12 +1383,21 @@ class MultiHostCachedEmbeddingBagCollection:
             protect = np.zeros((c,), bool)
             keep = state.row_slot[h, rows[state.row_slot[h, rows] >= 0]]
             protect[keep] = True
+            if self.ema_admission:
+                seeds = _ema_score(state.ema, state.ema_tick, missing,
+                                   state.tick, self.decay) + np.float32(1.0)
+            else:
+                seeds = np.ones((len(missing),), np.float32)
+            if gate and len(missing):
+                keep_mask = _gate_admission(state.slot_row[h],
+                                            state.freq[h], protect,
+                                            missing, seeds)
+                missing, seeds = missing[keep_mask], seeds[keep_mask]
             evictable = int(((state.slot_row[h] >= 0) & ~protect).sum())
             free = int((state.slot_row[h] < 0).sum())
-            missing = missing[:free + evictable]
-            slots = self._admit_host(state, h, missing,
-                                     np.ones((len(missing),), np.float32),
-                                     protect)
+            missing, seeds = (missing[:free + evictable],
+                              seeds[:free + evictable])
+            slots = self._admit_host(state, h, missing, seeds, protect)
             if len(missing):
                 vals = jnp.take(state.capacity,
                                 jnp.asarray(missing, jnp.int32), axis=0)

@@ -41,6 +41,8 @@ def _mlp_specs(dims, in_dim: int, in_ax: str, out_ax: str):
 
 
 def dlrm_param_specs(cfg: DLRMConfig, ebc: EmbeddingBagCollection) -> dict:
+    """ParamSpec tree for the full DLRM: bottom/top MLPs + the embedding
+    collection's mega table."""
     bottom, bot_out = _mlp_specs(cfg.bottom_mlp, cfg.n_dense_features,
                                  None, "dense_ff")
     assert bot_out == cfg.embed_dim, (
@@ -100,6 +102,7 @@ def _lookup(params, batch, cfg, ebc, rules):
 def dlrm_forward(params: dict, batch: dict, cfg: DLRMConfig,
                  ebc: EmbeddingBagCollection,
                  interpret: bool = False, rules=None) -> jax.Array:
+    """Full forward pass: embedding lookup + dense tower -> logits."""
     pooled = _lookup(params, batch, cfg, ebc, rules)
     return dlrm_forward_dense(params, batch["dense"], pooled, cfg, interpret)
 
@@ -145,6 +148,7 @@ def dlrm_grads(params: dict, batch: dict, cfg: DLRMConfig,
     dense_params = {"bottom": params["bottom"], "top": params["top"]}
 
     def loss_fn(dp, pl_):
+        """BCE loss over the dense tower, pooled embeddings as a leaf."""
         logits = dlrm_forward_dense({**dp, "emb": None}, batch["dense"],
                                     pl_, cfg, interpret)
         return _bce(logits, batch["label"])

@@ -32,6 +32,9 @@ from repro.nn.params import ParamSpec
 
 @dataclasses.dataclass(frozen=True)
 class EmbeddingBagCollection:
+    """All embedding tables fused into one (total_rows, d) mega table,
+    looked up bag-pooled per feature under a placement plan."""
+
     cfg: DLRMConfig
     plan: PlacementPlan
 
@@ -40,6 +43,7 @@ class EmbeddingBagCollection:
               strategy: str | None = None,
               second_axis_size: int = 1,
               capacity_shards: int = 1) -> EmbeddingBagCollection:
+        """Plan placement for cfg's tables and wrap it."""
         plan = plan_placement(
             cfg.hash_sizes, cfg.mean_lookups, cfg.embed_dim, n_shards,
             hbm_budget_bytes=cfg.hbm_budget_gb * 1e9,
@@ -52,6 +56,7 @@ class EmbeddingBagCollection:
     # -- params ------------------------------------------------------------
 
     def param_specs(self) -> dict:
+        """The fused mega-table ParamSpec."""
         dt = jnp.float32 if self.cfg.param_dtype == "float32" else jnp.bfloat16
         return {"mega": ParamSpec(
             (self.plan.total_rows, self.cfg.embed_dim),
@@ -64,9 +69,11 @@ class EmbeddingBagCollection:
                                    dtype=jnp.float32, init="zeros")}
 
     def pspecs(self) -> dict:
+        """Partition specs for the params, from the plan."""
         return {"mega": self.plan.pspec}
 
     def optimizer_pspecs(self) -> dict:
+        """Partition specs for the optimizer state (row dim only)."""
         return {"accum": jax.sharding.PartitionSpec(*self.plan.pspec[:1])}
 
     # -- index preprocessing -----------------------------------------------
@@ -103,6 +110,7 @@ class EmbeddingBagCollection:
 
         if plan is None:
             def take(flat):                  # flat: (n,) clipped global rows
+                """Direct mega-table gather."""
                 return jnp.take(mega, flat, axis=0)
         else:
             compact = jnp.take(mega, jnp.maximum(plan.unique_rows, 0),
@@ -111,10 +119,12 @@ class EmbeddingBagCollection:
                              jnp.iinfo(jnp.int32).max)
 
             def take(flat):
+                """Gather via the plan's deduplicated compact slab."""
                 return jnp.take(compact, jnp.searchsorted(sent, flat),
                                 axis=0)
 
         def pool_one(_, idx_f):
+            """Pool one feature's bags; scanned over the feature axis."""
             # idx_f: (b, lk) one feature's bags
             valid = idx_f >= 0
             rows = take(jnp.maximum(idx_f, 0).reshape(-1))
@@ -155,6 +165,7 @@ class EmbeddingBagCollection:
         d = self.cfg.embed_dim
 
         def local_fn(mega_shard, idx_local):
+            """Per-shard masked lookup; psum recombines across shards."""
             shard = jax.lax.axis_index(model_axis)
             lo = shard * rows_local
             loc = jnp.where((idx_local >= lo)
@@ -217,8 +228,10 @@ class EmbeddingBagCollection:
     # -- stats ---------------------------------------------------------------
 
     def table_bytes(self) -> int:
+        """Total mega-table bytes at the param dtype."""
         item = 4 if self.cfg.param_dtype == "float32" else 2
         return self.plan.total_rows * self.cfg.embed_dim * item
 
     def lookups_per_example(self) -> float:
+        """Mean pooled lookups per example across features."""
         return float(sum(self.cfg.mean_lookups))

@@ -49,6 +49,9 @@ CACHED_ROW_META_BYTES = 8
 
 @dataclasses.dataclass(frozen=True)
 class PlacementPlan:
+    """Where every table's rows live: the fused mega-table layout, its
+    sharding spec, and (cached_host) the device-cache sizing."""
+
     strategy: str   # replicated|table_wise|row_wise|column_wise|cached_host
     table_offsets: tuple[int, ...]   # row offset of each table in the mega table
     total_rows: int                  # padded row count of the mega table
@@ -67,6 +70,7 @@ class PlacementPlan:
 
     @property
     def load_imbalance(self) -> float:
+        """max/mean expected lookup load across shards (1.0 = balanced)."""
         if not self.load_per_shard or max(self.load_per_shard) == 0:
             return 1.0
         mean = float(np.mean(self.load_per_shard))
@@ -177,6 +181,47 @@ def plan_placement(hash_sizes: Sequence[int],
                              shard_rows=shard_rows)
 
     raise ValueError(f"unknown placement strategy {strategy!r}")
+
+
+def frequency_reorder(table_offsets: Sequence[int],
+                      hash_sizes: Sequence[int],
+                      freq: np.ndarray,
+                      total_rows: int) -> tuple[np.ndarray, np.ndarray]:
+    """Build a per-table ids-by-frequency row permutation of the mega table.
+
+    The CacheEmbedding trick (`ChunkParamMgr.reorder`): renumber each
+    table's rows so the most-frequent ids come first. Afterward the Zipf
+    head occupies a CONTIGUOUS prefix of every table's row span, which is
+    what makes chunk-granular capacity<->cache transfers (fetch_chunk > 1)
+    pull in mostly-hot neighbours instead of random cold rows.
+
+    Args:
+      table_offsets: row offset of each table in the mega table.
+      hash_sizes: logical (unpadded) row count of each table.
+      freq: (total_rows,) observed access count / EMA per GLOBAL row.
+      total_rows: padded row count of the mega table.
+
+    Returns:
+      (remap, inverse): int64 arrays of shape (total_rows,).
+      ``remap[old_global_row] = new_global_row`` — apply to incoming ids.
+      ``inverse[new_global_row] = old_global_row`` — recover the original
+      layout (e.g. to permute pretrained weights to match). Rows outside
+      every table span (padding) map to themselves; the permutation never
+      crosses a table boundary, so the placement plan is unchanged.
+    """
+    freq = np.asarray(freq)
+    if freq.shape != (total_rows,):
+        raise ValueError(
+            f"freq must have shape ({total_rows},), got {freq.shape}")
+    remap = np.arange(total_rows, dtype=np.int64)
+    for o, h in zip(table_offsets, hash_sizes):
+        # stable sort: equal-frequency rows keep their original order,
+        # making the reorder deterministic for a given counter state
+        order = np.argsort(-freq[o:o + h], kind="stable")
+        remap[o + order] = o + np.arange(h, dtype=np.int64)
+    inverse = np.empty_like(remap)
+    inverse[remap] = np.arange(total_rows, dtype=np.int64)
+    return remap, inverse
 
 
 def _contiguous(hash_sizes, pad_mult: int):

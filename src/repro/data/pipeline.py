@@ -193,7 +193,8 @@ class ShardedLoader:
 
 
 def dedup_indices_hook(table_offsets: Sequence[int], key: str = "idx",
-                       out_key: str = "uniq_rows"
+                       out_key: str = "uniq_rows",
+                       row_remap: np.ndarray | None = None
                        ) -> Callable[[dict[str, np.ndarray]],
                                      dict[str, np.ndarray]]:
     """Prefetch hook for the cached embedding tier (core/cache.py).
@@ -206,13 +207,24 @@ def dedup_indices_hook(table_offsets: Sequence[int], key: str = "idx",
     `CachedEmbeddingBagCollection.prefetch(state, batch["uniq_rows"])` the
     capacity-tier fetch overlaps the previous step's device compute instead
     of serializing with it.
+
+    `row_remap` (from `core.placement.frequency_reorder`) is an optional
+    (total_rows,) permutation applied to the offset global rows — the
+    ids-by-frequency reorder that makes the Zipf head contiguous so
+    chunk-granular fetches (`fetch_chunk > 1`) stay dense. It runs here, in
+    the reader thread, next to plan building, so no downstream consumer
+    ever sees un-remapped ids.
     """
     offsets = np.asarray(table_offsets, np.int64)
+    remap = None if row_remap is None else np.asarray(row_remap, np.int64)
 
     def hook(batch: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
         idx = batch[key]
-        glob = np.where(idx >= 0, idx + offsets[None, :, None],
-                        -1).astype(np.int32)
+        valid = idx >= 0
+        glob = np.where(valid, idx + offsets[None, :, None], -1)
+        if remap is not None:
+            glob = np.where(valid, remap[glob], -1)
+        glob = glob.astype(np.int32)
         out = dict(batch)
         out[key] = glob
         out[out_key] = np.unique(glob[glob >= 0]).astype(np.int64)
@@ -224,7 +236,8 @@ def dedup_indices_hook(table_offsets: Sequence[int], key: str = "idx",
 def sparse_plan_hook(table_offsets: Sequence[int], key: str = "idx",
                      out_key: str = "uniq_rows",
                      capacity: int | None = None,
-                     n_hosts: int | None = None
+                     n_hosts: int | None = None,
+                     row_remap: np.ndarray | None = None
                      ) -> Callable[[dict[str, np.ndarray]],
                                    dict[str, np.ndarray]]:
     """`dedup_indices_hook` + the shared sparse bucketing plan.
@@ -252,10 +265,15 @@ def sparse_plan_hook(table_offsets: Sequence[int], key: str = "idx",
     batch["hplan_rows"/"hplan_offsets"/"hplan_bags"] with shape (H, ...):
     the split, too, runs in the reader thread, so each host's miss
     planning consumes a ready-made sorted unique row set.
+
+    `row_remap` is forwarded to `dedup_indices_hook`: the frequency reorder
+    is applied BEFORE the plan is built, so the plan's sorted unique rows —
+    and the per-host sub-plans' all-to-all messages — chunk over the
+    remapped (hot-head-contiguous) row space.
     """
     from repro.kernels.sparse_plan import (build_sparse_plan_host,
                                            split_plan_by_host)
-    base = dedup_indices_hook(table_offsets, key, out_key)
+    base = dedup_indices_hook(table_offsets, key, out_key, row_remap)
 
     def hook(batch: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
         out = base(batch)

@@ -257,21 +257,103 @@ def cache_fetch_kernel(capacity: jax.Array, cap_accum: jax.Array,
     )(fetch_rows, capacity, cap_accum.reshape(r, 1).astype(jnp.float32))
 
 
-def _commit_kernel(slots_ref, evict_ref, fetch_ref, shadow_ref,
+def _fetch_chunked_kernel(starts_ref, capacity_ref, cap_acc_ref, shadow_out,
+                          shadow_acc_out, blk_vmem, acc_vmem, sems, *,
+                          chunk: int):
+    """Grid step k gathers the `chunk`-row capacity block at starts_ref[k]
+    into shadow rows [k*chunk, (k+1)*chunk) — ONE DMA descriptor per block
+    instead of one per row.
+
+    starts: (K,) SMEM scalar-prefetch (-1 = pad, zero-fills the block);
+    capacity: (R, D), cap_acc: (R, 1) HBM read-only; shadow_out:
+    (K*chunk, D), shadow_acc_out: (K*chunk, 1) HBM; blk_vmem: (chunk, D);
+    acc_vmem: (chunk, 1)."""
+    k = pl.program_id(0)
+    s = starts_ref[k]
+
+    @pl.when(s >= 0)
+    def _gather():
+        cp_r = pltpu.make_async_copy(capacity_ref.at[pl.ds(s, chunk)],
+                                     blk_vmem, sems.at[0])
+        cp_a = pltpu.make_async_copy(cap_acc_ref.at[pl.ds(s, chunk)],
+                                     acc_vmem, sems.at[1])
+        cp_r.start()
+        cp_a.start()
+        cp_r.wait()
+        cp_a.wait()
+
+    @pl.when(s < 0)
+    def _zero():
+        blk_vmem[...] = jnp.zeros(blk_vmem.shape, blk_vmem.dtype)
+        acc_vmem[...] = jnp.zeros(acc_vmem.shape, acc_vmem.dtype)
+
+    cp_wr = pltpu.make_async_copy(
+        blk_vmem, shadow_out.at[pl.ds(k * chunk, chunk)], sems.at[0])
+    cp_wa = pltpu.make_async_copy(
+        acc_vmem, shadow_acc_out.at[pl.ds(k * chunk, chunk)], sems.at[1])
+    cp_wr.start()
+    cp_wa.start()
+    cp_wr.wait()
+    cp_wa.wait()
+
+
+# NO donation, same reason as cache_fetch_kernel: read-only on the tiers.
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def cache_fetch_chunked_kernel(capacity: jax.Array, cap_accum: jax.Array,
+                               chunk_starts: jax.Array, chunk: int,
+                               interpret: bool = False):
+    """capacity: (R, D) with D % 128 == 0; cap_accum: (R,) fp32;
+    chunk_starts: (K,) int32 block starts, clamped so start+chunk <= R
+    (-1 = pad). Returns (shadow (K*chunk, D), shadow_accum (K*chunk, 1))
+    — a fresh slab, the tiers are untouched."""
+    r, d = capacity.shape
+    k = chunk_starts.shape[0]
+    return pl.pallas_call(
+        functools.partial(_fetch_chunked_kernel, chunk=chunk),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(k,),
+            in_specs=[
+                pl.BlockSpec(memory_space=MemorySpace.ANY),  # capacity
+                pl.BlockSpec(memory_space=MemorySpace.ANY),  # cap_acc
+            ],
+            out_specs=[
+                pl.BlockSpec(memory_space=MemorySpace.ANY),
+                pl.BlockSpec(memory_space=MemorySpace.ANY),
+            ],
+            scratch_shapes=[
+                MemorySpace.VMEM((chunk, d), capacity.dtype),
+                MemorySpace.VMEM((chunk, 1), jnp.float32),
+                SemaphoreType.DMA((2,)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((k * chunk, d), capacity.dtype),
+            jax.ShapeDtypeStruct((k * chunk, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(chunk_starts, capacity, cap_accum.reshape(r, 1).astype(jnp.float32))
+
+
+def _commit_kernel(slots_ref, evict_ref, fetch_ref, src_pos_ref, shadow_ref,
                    shadow_acc_ref, capacity_ref, cache_ref, cap_acc_ref,
                    cache_acc_ref, capacity_out, cache_out, cap_acc_out,
                    cache_acc_out, row_vmem, acc_vmem, sems):
-    """Grid step i installs shadow row i into cache slot slots_ref[i],
-    writing the slot's dirty victim back to capacity row evict_ref[i] first.
+    """Grid step i installs shadow row src_pos_ref[i] into cache slot
+    slots_ref[i], writing the slot's dirty victim back to capacity row
+    evict_ref[i] first.
 
-    slots/evict/fetch: (N,) SMEM scalar-prefetch (-1 = skip; fetch gates the
-    install — pure-writeback entries keep the slot); shadow: (N, D),
-    shadow_acc: (N, 1) HBM read-only; capacity/(R, D), cache/(C, D),
-    cap_acc/(R, 1), cache_acc/(C, 1) HBM io-aliased in->out."""
+    slots/evict/fetch/src_pos: (N,) SMEM scalar-prefetch (-1 = skip; fetch
+    gates the install — pure-writeback entries keep the slot; src_pos is
+    arange(N) for a one-row-per-entry shadow or the coalescer's `pos` for a
+    chunk-granular slab); shadow: (M, D), shadow_acc: (M, 1) HBM read-only
+    with M >= N; capacity/(R, D), cache/(C, D), cap_acc/(R, 1),
+    cache_acc/(C, 1) HBM io-aliased in->out."""
     i = pl.program_id(0)
     s = slots_ref[i]
     ev = evict_ref[i]
     ft = fetch_ref[i]
+    sp = src_pos_ref[i]
 
     @pl.when((s >= 0) & (ev >= 0))
     def _writeback():
@@ -294,10 +376,10 @@ def _commit_kernel(slots_ref, evict_ref, fetch_ref, shadow_ref,
 
     @pl.when((s >= 0) & (ft >= 0))
     def _install():
-        cp_r = pltpu.make_async_copy(shadow_ref.at[pl.ds(i, 1)], row_vmem,
+        cp_r = pltpu.make_async_copy(shadow_ref.at[pl.ds(sp, 1)], row_vmem,
                                      sems.at[0])
-        cp_a = pltpu.make_async_copy(shadow_acc_ref.at[pl.ds(i, 1)], acc_vmem,
-                                     sems.at[1])
+        cp_a = pltpu.make_async_copy(shadow_acc_ref.at[pl.ds(sp, 1)],
+                                     acc_vmem, sems.at[1])
         cp_r.start()
         cp_a.start()
         cp_r.wait()
@@ -320,19 +402,22 @@ def cache_commit_kernel(capacity: jax.Array, cache: jax.Array,
                         cap_accum: jax.Array, cache_accum: jax.Array,
                         shadow: jax.Array, shadow_accum: jax.Array,
                         slots: jax.Array, evict_rows: jax.Array,
-                        fetch_rows: jax.Array, interpret: bool = False):
-    """capacity: (R, D), cache: (C, D), shadow: (N, D) with D % 128 == 0;
-    cap_accum: (R, 1), cache_accum: (C, 1), shadow_accum: (N, 1) fp32;
-    slots/evict_rows/fetch_rows: (N,) int32 (-1 = skip; fetch gates the
-    shadow install). Returns (capacity', cache', cap_accum', cache_accum')
-    updated in place (io aliasing)."""
+                        fetch_rows: jax.Array, src_pos: jax.Array,
+                        interpret: bool = False):
+    """capacity: (R, D), cache: (C, D), shadow: (M, D) with D % 128 == 0 and
+    M >= N; cap_accum: (R, 1), cache_accum: (C, 1), shadow_accum: (M, 1)
+    fp32; slots/evict_rows/fetch_rows/src_pos: (N,) int32 (-1 = skip; fetch
+    gates the shadow install, which reads shadow row src_pos[i]). Returns
+    (capacity', cache', cap_accum', cache_accum') updated in place
+    (io aliasing)."""
     r, d = capacity.shape
     c = cache.shape[0]
     n = slots.shape[0]
+    m = shadow.shape[0]
     return pl.pallas_call(
         _commit_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=3,
+            num_scalar_prefetch=4,
             grid=(n,),
             in_specs=[
                 pl.BlockSpec(memory_space=MemorySpace.ANY),  # shadow
@@ -360,10 +445,10 @@ def cache_commit_kernel(capacity: jax.Array, cache: jax.Array,
             jax.ShapeDtypeStruct((r, 1), jnp.float32),
             jax.ShapeDtypeStruct((c, 1), jnp.float32),
         ],
-        input_output_aliases={5: 0, 6: 1, 7: 2, 8: 3},
+        input_output_aliases={6: 0, 7: 1, 8: 2, 9: 3},
         interpret=interpret,
-    )(slots, evict_rows, fetch_rows, shadow, shadow_accum.reshape(n, 1),
-      capacity, cache,
+    )(slots, evict_rows, fetch_rows, src_pos, shadow,
+      shadow_accum.reshape(m, 1), capacity, cache,
       cap_accum.reshape(r, 1).astype(jnp.float32),
       cache_accum.reshape(c, 1).astype(jnp.float32))
 
@@ -438,12 +523,40 @@ def cache_fetch(capacity: jax.Array, cap_accum: jax.Array,
     return _fetch_ref_jit(capacity, cap_accum, fetch_rows)
 
 
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def _fetch_chunked_ref_jit(capacity, cap_accum, chunk_starts, chunk):
+    return ref.cache_fetch_chunked_ref(capacity, cap_accum, chunk_starts,
+                                       chunk)
+
+
+def cache_fetch_chunked(capacity: jax.Array, cap_accum: jax.Array,
+                        chunk_starts: jax.Array, chunk: int,
+                        use_kernel: bool | None = None,
+                        interpret: bool = False
+                        ) -> tuple[jax.Array, jax.Array]:
+    """CHUNK-granular fetch: gather K contiguous `chunk`-row capacity blocks
+    (+ accumulators) into one (K*chunk, D) shadow slab — one DMA descriptor
+    per BLOCK. `chunk_starts` comes from kernels/sparse_plan.coalesce_rows
+    (starts clamped so start+chunk <= R; -1 = pad, zero block). Read-only on
+    the tiers, same overlap contract as `cache_fetch`. Pair with
+    `cache_commit(..., src_pos=pos)` to install individual rows out of the
+    block slab. Returns (shadow (K*chunk, D), shadow_accum (K*chunk,))."""
+    chunk_starts = chunk_starts.astype(jnp.int32)
+    d = capacity.shape[1]
+    if (_use_pallas(use_kernel) and d % LANE == 0) or interpret:
+        shadow, shadow_acc = cache_fetch_chunked_kernel(
+            _pad_lane(capacity), cap_accum, chunk_starts, chunk,
+            interpret=interpret)
+        return shadow[:, :d], shadow_acc[:, 0]
+    return _fetch_chunked_ref_jit(capacity, cap_accum, chunk_starts, chunk)
+
+
 @functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3))
 def _commit_ref_jit(capacity, cache, cap_accum, cache_accum, shadow,
-                    shadow_accum, slots, evict_rows, fetch_rows):
+                    shadow_accum, slots, evict_rows, fetch_rows, src_pos):
     return ref.cache_commit_ref(capacity, cache, cap_accum, cache_accum,
                                 shadow, shadow_accum, slots, evict_rows,
-                                fetch_rows)
+                                fetch_rows, src_pos)
 
 
 def cache_commit(capacity: jax.Array, cache: jax.Array, cap_accum: jax.Array,
@@ -451,28 +564,37 @@ def cache_commit(capacity: jax.Array, cache: jax.Array, cap_accum: jax.Array,
                  shadow_accum: jax.Array, slots: jax.Array,
                  evict_rows: jax.Array, fetch_rows: jax.Array,
                  use_kernel: bool | None = None,
-                 interpret: bool = False
+                 interpret: bool = False,
+                 src_pos: jax.Array | None = None
                  ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """COMMIT half of the split async exchange: dirty-victim writeback
     (cache slot -> capacity row, reading the post-update cache) + shadow row
     -> cache slot install, at a step boundary. `fetch_rows` is the worklist
     the shadow slab was fetched with; -1 entries gate the install off
-    (pure writeback). The four tier arrays are DONATED (in-place row swap,
-    same contract as cache_exchange) — callers must use the returned
-    arrays. Returns (capacity', cache', cap_accum', cache_accum')."""
+    (pure writeback). `src_pos` maps worklist entry i to its shadow row
+    (default arange(n), the one-row-per-entry slab; pass the coalescer's
+    `pos` for a chunk-granular slab). The four tier arrays are DONATED
+    (in-place row swap, same contract as cache_exchange) — callers must use
+    the returned arrays. Returns (capacity', cache', cap_accum',
+    cache_accum')."""
     slots = slots.astype(jnp.int32)
     evict_rows = evict_rows.astype(jnp.int32)
     fetch_rows = fetch_rows.astype(jnp.int32)
+    n = slots.shape[0]
+    if src_pos is None:
+        src_pos = jnp.arange(n, dtype=jnp.int32)
+    else:
+        src_pos = src_pos.astype(jnp.int32)
     if _use_pallas(use_kernel) or interpret:
         d = capacity.shape[1]
         new_cap, new_cache, new_ca, new_cc = cache_commit_kernel(
             _pad_lane(capacity), _pad_lane(cache), cap_accum, cache_accum,
             _pad_lane(shadow), shadow_accum, slots, evict_rows, fetch_rows,
-            interpret=interpret)
+            src_pos, interpret=interpret)
         return new_cap[:, :d], new_cache[:, :d], new_ca[:, 0], new_cc[:, 0]
     return _commit_ref_jit(capacity, cache, cap_accum, cache_accum,
                            shadow, shadow_accum, slots, evict_rows,
-                           fetch_rows)
+                           fetch_rows, src_pos)
 
 
 @functools.partial(jax.jit, static_argnames=("decay",))

@@ -48,6 +48,7 @@ def _bag_kernel(idx_ref, table_ref, out_ref, rows_vmem, sems, *,
     d = out_ref.shape[-1]
 
     def row_copy(slot, j):
+        """DMA descriptor for bag row j into double-buffer slot."""
         # ONE descriptor builder serves both start() and wait(): a DMA must
         # be awaited with the descriptor it was started with (any slice of
         # equal shape happens to work, but a mismatched source is latent
@@ -59,6 +60,7 @@ def _bag_kernel(idx_ref, table_ref, out_ref, rows_vmem, sems, *,
     row_copy(0, 0).start()
 
     def body(j, carry):
+        """Pool one bag member; prefetches the next behind it."""
         acc, cnt = carry
         slot = jax.lax.rem(j, 2)
 
@@ -136,6 +138,7 @@ def _dedup_bag_kernel(uniq_ref, off_ref, bag_ref, table_ref, out_ref,
         out_ref[...] = jnp.zeros_like(out_ref)
 
     def row_copy(r):
+        """DMA descriptor for unique row r into its ring slot."""
         # same-descriptor start/wait discipline as _bag_kernel
         ix = jnp.maximum(uniq_ref[base + r], 0)
         slot = jax.lax.rem(r, nbuf)
@@ -143,6 +146,7 @@ def _dedup_bag_kernel(uniq_ref, off_ref, bag_ref, table_ref, out_ref,
                                      rows_vmem.at[slot], sems.at[slot])
 
     def start(r):
+        """Kick off row r's fetch (live rows only)."""
         @pl.when(uniq_ref[base + r] >= 0)
         def _():
             row_copy(r).start()
@@ -151,6 +155,7 @@ def _dedup_bag_kernel(uniq_ref, off_ref, bag_ref, table_ref, out_ref,
         start(r)
 
     def body(r, carry):
+        """Await row r, expand its CSR runs, refill the drained slot."""
         valid = uniq_ref[base + r] >= 0
 
         @pl.when(valid)
@@ -168,6 +173,7 @@ def _dedup_bag_kernel(uniq_ref, off_ref, bag_ref, table_ref, out_ref,
         @pl.when(valid)
         def _():
             def expand(j, c):
+                """Accumulate the row into bag j's output slot."""
                 bag = bag_ref[j]
                 out_ref[pl.ds(bag, 1)] = out_ref[pl.ds(bag, 1)] + row
                 return c

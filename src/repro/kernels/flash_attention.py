@@ -41,6 +41,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, kbuf, vbuf, sems, *,
         hi = nk
 
     def start(slot, ki):
+        """Kick off K/V block ki's DMAs into double-buffer slot."""
         pltpu.make_async_copy(
             k_ref.at[b, h, pl.ds(ki * block_k, block_k)],
             kbuf.at[slot], sems.at[slot, 0]).start()
@@ -49,6 +50,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, kbuf, vbuf, sems, *,
             vbuf.at[slot], sems.at[slot, 1]).start()
 
     def wait(slot):
+        """Await the K/V DMAs parked in slot."""
         pltpu.make_async_copy(k_ref.at[b, h, pl.ds(0, block_k)],
                               kbuf.at[slot], sems.at[slot, 0]).wait()
         pltpu.make_async_copy(v_ref.at[b, h, pl.ds(0, block_k)],
@@ -60,6 +62,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, kbuf, vbuf, sems, *,
         jnp.int32, (block_q, block_k), 0)
 
     def body(ki, carry):
+        """Online-softmax update over K/V block ki."""
         m, den, acc = carry
         slot = jax.lax.rem(ki, 2)
 

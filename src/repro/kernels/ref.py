@@ -281,19 +281,46 @@ def cache_fetch_ref(capacity: jax.Array, cap_accum: jax.Array,
     return shadow, shadow_accum
 
 
+def cache_fetch_chunked_ref(capacity: jax.Array, cap_accum: jax.Array,
+                            chunk_starts: jax.Array, chunk: int):
+    """Oracle for the CHUNK-granular fetch (cache_ops.cache_fetch_chunked).
+
+    Gathers K contiguous row blocks of height `chunk` from the capacity
+    tier into one (K*chunk, D) shadow slab — one DMA descriptor per block
+    instead of one per row. chunk_starts: (K,) block start rows, already
+    clamped so start+chunk <= R (kernels/sparse_plan.coalesce_rows); -1
+    entries produce zero blocks (padding). Individual rows are addressed
+    inside the slab as k*chunk + (row - chunk_starts[k]) — the `pos` array
+    the coalescer returns. Returns (shadow (K*chunk, D),
+    shadow_accum (K*chunk,)).
+    """
+    valid = chunk_starts >= 0
+    base = jnp.where(valid, chunk_starts, 0)                  # (K,)
+    rows = base[:, None] + jnp.arange(chunk)[None, :]         # (K, chunk)
+    rows = rows.reshape(-1)
+    keep = jnp.repeat(valid, chunk)
+    shadow = jnp.where(keep[:, None], capacity[rows].astype(jnp.float32),
+                       0.0).astype(capacity.dtype)
+    shadow_accum = jnp.where(keep, cap_accum[rows], 0.0)
+    return shadow, shadow_accum
+
+
 def cache_commit_ref(capacity: jax.Array, cache: jax.Array,
                      cap_accum: jax.Array, cache_accum: jax.Array,
                      shadow: jax.Array, shadow_accum: jax.Array,
                      slots: jax.Array, evict_rows: jax.Array,
-                     fetch_rows: jax.Array):
+                     fetch_rows: jax.Array,
+                     src_pos: jax.Array | None = None):
     """Oracle for the COMMIT half of the split async exchange
     (cache_ops.cache_commit): install a previously fetched shadow slab into
     the device cache at a step boundary. Entry i
       * writes cache slot slots[i] (post-update dirty victim) back to
         capacity row evict_rows[i] if >= 0, then
-      * overwrites the slot with shadow row i (+ accumulator) if
-        fetch_rows[i] >= 0 (the row the shadow slab holds at position i —
-        pure-writeback entries pass -1 and keep the slot's contents).
+      * overwrites the slot with shadow row src_pos[i] (+ accumulator) if
+        fetch_rows[i] >= 0 (pure-writeback entries pass -1 and keep the
+        slot's contents). src_pos defaults to arange(n) — the classic
+        one-row-per-entry shadow; a chunk-granular fetch passes the
+        coalescer's `pos` so entry i reads its row out of the block slab.
     slots[i] < 0 skips the entry. Worklist slots are distinct and the
     evict-row set is disjoint from the fetched rows (the manager's
     working-set protection guarantees both), so entry order does not
@@ -303,13 +330,17 @@ def cache_commit_ref(capacity: jax.Array, cache: jax.Array,
     """
     r = capacity.shape[0]
     c = cache.shape[0]
+    n = slots.shape[0]
+    if src_pos is None:
+        src_pos = jnp.arange(n)
     safe_slot = jnp.where(slots >= 0, slots, 0)
     wb = jnp.where((slots >= 0) & (evict_rows >= 0), evict_rows, r)  # r drops
     capacity = capacity.at[wb].set(cache[safe_slot], mode="drop")
     cap_accum = cap_accum.at[wb].set(cache_accum[safe_slot], mode="drop")
     dst = jnp.where((slots >= 0) & (fetch_rows >= 0), slots, c)      # c drops
-    cache = cache.at[dst].set(shadow.astype(cache.dtype), mode="drop")
-    cache_accum = cache_accum.at[dst].set(shadow_accum, mode="drop")
+    cache = cache.at[dst].set(shadow[src_pos].astype(cache.dtype),
+                              mode="drop")
+    cache_accum = cache_accum.at[dst].set(shadow_accum[src_pos], mode="drop")
     return capacity, cache, cap_accum, cache_accum
 
 

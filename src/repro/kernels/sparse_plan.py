@@ -181,6 +181,57 @@ def split_plan_by_owner(plan: SparsePlan, shard_rows: int, n_shards: int,
     return seg_rows, seg_offs, seg_base
 
 
+def coalesce_rows(rows: np.ndarray, chunk: int, total_rows: int,
+                  min_fill: int = 1) -> tuple[np.ndarray, np.ndarray]:
+    """Greedily cover a sorted row list with contiguous `chunk`-row blocks —
+    the run-coalescer behind the chunk-granular capacity<->cache transfers
+    (kernels/cache_ops.cache_fetch_chunked).
+
+    rows: (N,) int64/int32 ASCENDING capacity rows (the live prefix of a
+    plan's miss list — `split_plan_by_host` sub-plans and `_split_batch`
+    both emit sorted rows, so no sort runs here); chunk: block height >= 1;
+    total_rows: capacity height R, used to clamp block starts so
+    start+chunk <= R (a block may over-fetch rows below its first member —
+    harmless, the fetch is read-only).
+
+    `min_fill` is the density-adaptive fallback: blocks holding fewer than
+    `min_fill` member rows are DROPPED (their rows get pos = -1) so the
+    caller routes isolated misses through the per-row path instead of
+    paying (chunk - 1) rows of over-fetch each. min_fill = 1 keeps every
+    block (pure fixed-chunk coverage).
+
+    Returns (starts (K,) int32 block start rows, pos (N,) int32 with
+    pos[i] = k*chunk + (rows[i] - starts[k]) — row i's position inside the
+    (K*chunk, D) shadow slab, the `src_pos` a chunked
+    `cache_ops.cache_commit` consumes — or -1 for rows of dropped blocks).
+    Greedy left-to-right: a new block opens at min(row, R-chunk) whenever
+    the current block cannot hold the next row; on the frequency-reordered
+    Zipf head (core/placement.frequency_reorder) consecutive misses
+    collapse to K << N blocks.
+    """
+    rows = np.asarray(rows, np.int64)
+    n = rows.shape[0]
+    if chunk <= 1 or n == 0:
+        starts = rows.astype(np.int32)
+        return starts, np.arange(n, dtype=np.int32)
+    chunk = min(chunk, total_rows)
+    starts_list = []
+    pos = np.empty((n,), np.int32)
+    i = 0
+    while i < n:
+        start = min(int(rows[i]), total_rows - chunk)
+        # all rows the block covers: rows are ascending, so one searchsorted
+        j = int(np.searchsorted(rows, start + chunk, side="left"))
+        if j - i >= min_fill:
+            k = len(starts_list)
+            starts_list.append(start)
+            pos[i:j] = k * chunk + (rows[i:j] - start).astype(np.int32)
+        else:
+            pos[i:j] = -1
+        i = j
+    return np.asarray(starts_list, np.int32), pos
+
+
 def build_sparse_plan(idx: jax.Array,
                       lookups_per_bag: int | None = None,
                       capacity: int | None = None) -> SparsePlan:

@@ -74,6 +74,7 @@ def _fused_kernel(uniq_ref, off_ref, bag_ref, base_ref, lr_ref, grads_ref,
         hi = off_ref[s, i + 1]
 
         def grad_copy(j):
+            """DMA descriptor for bag j's grad row (parity-slotted)."""
             # slot = parity of the ABSOLUTE bag position, so start(j+1)
             # and wait(j) always address different slots/semaphores; one
             # descriptor builder serves start AND wait (see embedding_bag)
@@ -87,6 +88,7 @@ def _fused_kernel(uniq_ref, off_ref, bag_ref, base_ref, lr_ref, grads_ref,
             grad_copy(lo).start()
 
         def body(j, carry):
+            """Accumulate bag j's grad; prefetch bag j+1 behind it."""
             @pl.when(j + 1 < hi)
             def _():
                 grad_copy(j + 1).start()    # fetch bag j+1 behind bag j

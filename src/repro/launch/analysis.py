@@ -204,6 +204,49 @@ def zipf_expected_unique(n_draws: float, hash_size: int,
     return total
 
 
+def cache_admission_traffic(fetched_rows: float, embed_dim: int,
+                            fetch_chunks: float = 0.0,
+                            overfetch_rows: float = 0.0,
+                            itemsize: int = 4,
+                            accum_itemsize: int = 4,
+                            descriptor_bytes: int = 32) -> dict[str, float]:
+    """Capacity->cache transfer bytes of the cached tier's admission path
+    (docs/cache.md "Chunk-granular transfers") — companion of
+    `multihost_exchange_traffic` for the fetch leg's DMA shape.
+
+    Every admitted row moves `row_bytes` of payload (the fp32 embedding row
+    plus its row-wise AdaGrad accumulator, which rides every fetch so
+    optimizer state stays coherent across tiers). On top of the payload,
+    each DMA descriptor costs `descriptor_bytes` of control overhead — the
+    per-transfer setup cost that makes single-row gathers latency-bound.
+
+    Single-row transfers issue one descriptor per row. Chunk-granular
+    transfers issue one descriptor per contiguous block (`fetch_chunks`,
+    the `cache_fetch_chunks` stat) but over-fetch `overfetch_rows` of cold
+    padding (the `cache_overfetch_rows` stat). The crossover is the
+    admission-policy lever: EMA admission plus the ids-by-frequency reorder
+    (`core.placement.frequency_reorder`) keeps the Zipf head contiguous, so
+    blocks stay dense and the descriptor savings dominate the padding.
+
+    Feed per-arm stats from `CacheStats.snapshot()`; `fetch_chunks=0`
+    means the single-row path (descriptors = rows). Returns the payload
+    and descriptor bytes of both shapes for the GIVEN miss stream plus
+    `chunked_vs_single`, their ratio (< 1 when chunking wins).
+    """
+    row_bytes = float(embed_dim * itemsize + accum_itemsize)
+    single_bytes = fetched_rows * (row_bytes + descriptor_bytes)
+    n_desc = fetch_chunks if fetch_chunks > 0 else fetched_rows
+    chunked_bytes = ((fetched_rows + overfetch_rows) * row_bytes
+                     + n_desc * descriptor_bytes)
+    return {"row_bytes": row_bytes,
+            "payload_bytes": fetched_rows * row_bytes,
+            "single_row_bytes": single_bytes,
+            "chunked_bytes": chunked_bytes,
+            "descriptors": n_desc,
+            "chunked_vs_single": (chunked_bytes / single_bytes
+                                  if single_bytes else 1.0)}
+
+
 # ---------------------------------------------------------------------------
 # StableHLO (lowered.as_text())
 # ---------------------------------------------------------------------------

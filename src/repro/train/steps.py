@@ -12,6 +12,7 @@ embedding-update scatter with the dense backward's collectives.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from collections.abc import Callable
 
@@ -293,7 +294,8 @@ def build_cached_dlrm_train_step(cfg: DLRMConfig, cc, dense_opt: Optimizer,
                                  sparse_lr: float = 0.05,
                                  sparse_eps: float = 1e-8,
                                  interpret: bool = False,
-                                 rules: LogicalRules = TRAIN_RULES
+                                 rules: LogicalRules = TRAIN_RULES,
+                                 fetch_chunk: int | None = None
                                  ) -> Callable:
     """Train step for `CachedEmbeddingBagCollection` (the cached_host tier).
 
@@ -311,8 +313,14 @@ def build_cached_dlrm_train_step(cfg: DLRMConfig, cc, dense_opt: Optimizer,
     pipeline's upcoming batch as `next_batch`: its "uniq_rows" (attached by
     data.dedup_indices_hook in the reader thread) are admitted AFTER the
     device work is dispatched, so the capacity-tier fetch overlaps compute.
+
+    `fetch_chunk` (> 1) overrides the collection's chunk-granular transfer
+    size: capacity->cache fetches move contiguous row blocks instead of
+    single rows (docs/cache.md "Chunk-granular transfers").
     """
 
+    if fetch_chunk is not None:
+        cc = dataclasses.replace(cc, fetch_chunk=fetch_chunk)
     inner_jit = _build_cached_inner(cfg, cc, dense_opt, sparse_lr,
                                     sparse_eps, interpret, rules)
 
@@ -355,7 +363,9 @@ def build_async_cached_dlrm_train_step(cfg: DLRMConfig, cc,
                                        sparse_eps: float = 1e-8,
                                        interpret: bool = False,
                                        rules: LogicalRules = TRAIN_RULES,
-                                       strict_sync: bool = False) -> Callable:
+                                       strict_sync: bool = False,
+                                       fetch_chunk: int | None = None
+                                       ) -> Callable:
     """Overlapped cached train step: batch k+1's capacity-tier fetch runs
     while batch k's dense forward/backward executes (docs/cache.md "Async
     fetch stream"). Per call:
@@ -379,8 +389,13 @@ def build_async_cached_dlrm_train_step(cfg: DLRMConfig, cc,
     prefetch_rows=None) -> (params, state, metrics); astate is an
     AsyncCacheState from `cc.init_async_state`; batch carries OFFSET global
     indices (e.g. from data.dedup_indices_hook).
+
+    `fetch_chunk` (> 1) switches the staged capacity->cache fetches to
+    contiguous row blocks (chunk-granular transfers).
     """
 
+    if fetch_chunk is not None:
+        cc = dataclasses.replace(cc, fetch_chunk=fetch_chunk)
     inner_jit = _build_cached_inner(cfg, cc, dense_opt, sparse_lr,
                                     sparse_eps, interpret, rules)
 
@@ -426,7 +441,9 @@ def build_multihost_cached_train_step(cfg: DLRMConfig, mc,
                                       rules: LogicalRules = TRAIN_RULES,
                                       strict_sync: bool = False,
                                       mesh=None,
-                                      host_axis: str = "data") -> Callable:
+                                      host_axis: str = "data",
+                                      fetch_chunk: int | None = None
+                                      ) -> Callable:
     """Train step for `MultiHostCachedEmbeddingBagCollection`: H hosts each
     run a hot cache over a capacity tier row-sharded across the same hosts.
 
@@ -453,8 +470,15 @@ def build_multihost_cached_train_step(cfg: DLRMConfig, mc,
     prefetch); results are bit-identical either way. Returns step(params,
     state, mstate, batch, step_idx, next_batch=None) -> (params, state,
     metrics); batch carries OFFSET global indices and, optionally, the
-    hook-attached plan artifacts (`data.sparse_plan_hook(n_hosts=H)`)."""
+    hook-attached plan artifacts (`data.sparse_plan_hook(n_hosts=H)`).
 
+    `fetch_chunk` (> 1) books the planned fetch all-to-all in contiguous
+    row blocks per (host, owner) pair — the chunk model the route stats
+    expose as `route_fetch_chunks` (the device install is unchanged and
+    stays bit-exact)."""
+
+    if fetch_chunk is not None:
+        mc = dataclasses.replace(mc, fetch_chunk=fetch_chunk)
     hn = mc.n_hosts
     ebc = mc.ebc
 

@@ -12,10 +12,11 @@ Rules (per row, matched by name across the two files):
   * hit-rate rows — name contains "hit" (deterministic under seeded
     traffic; higher is better) — regress when `derived` drops by more
     than --hit-threshold (default 10%), relative.
-  * byte-accounting rows — name contains "bytes" (analytic, fully
-    deterministic; higher reduction is better) — regress when `derived`
-    drops by more than --hit-threshold. Guards the fused sparse
-    backward's intermediate-bytes win (launch/analysis.py).
+  * byte-accounting rows — name contains "bytes" or "pooled_exchange"
+    (analytic, fully deterministic; higher reduction is better) — regress
+    when `derived` drops by more than --hit-threshold. Guards the fused
+    sparse backward's intermediate-bytes win and the table-wise pooled
+    all-to-all accounting (launch/analysis.py).
   * overlap rows — name contains "overlap" (higher is better, but the
     derived value is a RATIO OF WALL-CLOCK TIMES, so it inherits runner
     noise) — regress when `derived` drops by more than --time-threshold.
@@ -38,6 +39,7 @@ import sys
 HIT_MARKER = "hit"
 OVERLAP_MARKER = "overlap"
 BYTES_MARKER = "bytes"
+POOLED_EXCHANGE_MARKER = "pooled_exchange"
 
 
 def load_rows(path: str) -> dict[str, tuple[float, float]]:
@@ -65,7 +67,8 @@ def diff(base: dict[str, tuple[float, float]],
             continue
         b_us, b_drv = base[name]
         c_us, c_drv = cur[name]
-        is_hit = HIT_MARKER in name or BYTES_MARKER in name
+        is_hit = (HIT_MARKER in name or BYTES_MARKER in name
+                  or POOLED_EXCHANGE_MARKER in name)
         is_overlap = OVERLAP_MARKER in name
         if (is_hit or is_overlap) and b_drv > 0:
             # overlap efficiency is timing-derived — gate it at the noisy

@@ -1,0 +1,106 @@
+"""Table-wise hybrid parallelism benchmarks (docs/parallelism.md).
+
+Wall rows time `build_tablewise_train_step` (sync and staged-overlap) on a
+reduced suite config. The deterministic `tablewise/pooled_exchange_*` rows
+are the analytic pooled-exchange accounting at the PROD shape — the
+table-wise all-to-all moves pooled (B, F, d) activations, never per-lookup
+rows, so the bytes are exact closed forms (launch/analysis.py
+`tablewise_exchange_traffic`) — gated against BENCH_baseline.json by
+diff_bench's pooled-exchange/bytes rule, and validated against the train
+step's measured exchange metrics in the `model_vs_measured` row.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.configs.registry import get_config, get_smoke_config
+from repro.core.design_space import reduced
+from repro.core.dlrm import dlrm_param_specs
+from repro.core.embedding import EmbeddingBagCollection
+from repro.data.synthetic import make_dlrm_batch
+from repro.launch.analysis import (recommend_placement,
+                                   tablewise_exchange_traffic)
+from repro.nn.params import init_params
+from repro.optim.optimizers import adagrad
+from repro.train.steps import build_tablewise_train_step, dlrm_init_state
+
+N_HOSTS = 4          # owners for the wall rows (single-process, no mesh)
+PROD_HOSTS = 16      # the analytic rows' Zion-scale host count
+PROD_BATCH = 8192    # per-step global batch at prod shape
+
+
+def _build(cfg, overlap: bool):
+    ebc = EmbeddingBagCollection.build(cfg, n_shards=N_HOSTS,
+                                       strategy="table_wise")
+    params = init_params(dlrm_param_specs(cfg, ebc), jax.random.PRNGKey(0))
+    opt = adagrad(0.01)
+    state = dlrm_init_state(ebc, opt, params)
+    step = build_tablewise_train_step(cfg, ebc, opt, overlap=overlap)
+    raw = make_dlrm_batch(cfg, 128)
+    batch = {"dense": raw["dense"],
+             "idx": np.asarray(ebc.offset_indices(jnp.asarray(raw["idx"]))),
+             "label": raw["label"]}
+    return step, params, state, batch
+
+
+def _bench_step(name: str, cfg, overlap: bool):
+    step, params, state, batch = _build(cfg, overlap)
+    cell = [params, state, 0]
+
+    def run(b):
+        p, s, m = step(cell[0], cell[1], b, cell[2],
+                       next_batch=b if overlap else None)
+        cell[0], cell[1] = p, s
+        cell[2] += 1
+        return m["loss"]
+
+    us = time_fn(run, batch)
+    emit(name, us, 128 / (us / 1e6))
+
+
+def main():
+    cfg = reduced(get_config("dlrm-m1"), 32)
+    _bench_step("tablewise/step_sync", cfg, overlap=False)
+    _bench_step("tablewise/step_staged", cfg, overlap=True)
+
+    # -- deterministic pooled-exchange accounting at prod shape ----------
+    prod = get_config("dlrm-m2")
+    tw = tablewise_exchange_traffic(PROD_BATCH, prod.n_sparse_features,
+                                    prod.truncation, prod.embed_dim,
+                                    PROD_HOSTS)
+    # pooled (B,F,d) vs the row-sharded un-pooled (B,F,L,d) exchange: ~L
+    emit("tablewise/pooled_exchange_bytes_vs_rowshard_m2", 0.0,
+         tw["pooling_reduction"])
+    # acceptance headroom: each (host, owner) pair leg must stay under
+    # B*F*d*4 bytes; derived = cap / leg (>= 1, higher is better)
+    cap = PROD_BATCH * prod.n_sparse_features * prod.embed_dim * 4.0
+    emit("tablewise/pooled_exchange_pair_leg_headroom_m2", 0.0,
+         cap / tw["pair_leg_bytes"])
+    # the placement recommender's priced comparison vs the row-sharded
+    # cached tier at the same shape (9.6 GB/host accelerator budget)
+    rec = recommend_placement(prod.hash_sizes, prod.mean_lookups,
+                              prod.embed_dim, PROD_BATCH, prod.truncation,
+                              PROD_HOSTS, 9.6e9)
+    emit("tablewise/pooled_exchange_vs_cached_m2", 0.0,
+         rec["rowshard"]["total_bytes"] / rec["tablewise"]["total_bytes"])
+    assert rec["pick"] == "table_wise", rec["pick"]
+
+    # -- model vs measured: the analytic fwd bytes must equal the train
+    #    step's host-computed exchange metric exactly ---------------------
+    smoke = get_smoke_config("dlrm-m1")
+    step, params, state, batch = _build(smoke, overlap=False)
+    _, _, metrics = step(params, state, batch, 0)
+    b, f, _ = batch["idx"].shape
+    model = tablewise_exchange_traffic(b, f, smoke.truncation,
+                                       smoke.embed_dim, N_HOSTS)
+    measured = float(metrics["exchange_pooled_fwd_bytes"])
+    assert measured == model["fwd_bytes"], (measured, model["fwd_bytes"])
+    emit("tablewise/pooled_exchange_model_vs_measured", 0.0,
+         model["fwd_bytes"] / measured)
+
+
+if __name__ == "__main__":
+    main()

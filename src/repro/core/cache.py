@@ -961,6 +961,69 @@ class CachedEmbeddingBagCollection:
         self.flush_async(astate)
         return astate.capacity, astate.cap_accum
 
+    # -- checkpointing -------------------------------------------------------
+
+    def state_dict(self, state: CacheState | AsyncCacheState) -> dict:
+        """Checkpoint-ready pytree of numpy leaves covering the WHOLE tier —
+        both device arrays (capacity/cache/accumulators) and the host-side
+        maps (slot_row/row_slot/dirty/EMA) that a params-only checkpoint
+        would lose, leaving the restored job re-warming a cold cache and
+        diverging from the uninterrupted run (accumulators live per-slot
+        while a row is cached).
+
+        For AsyncCacheState the pending queue is drained to a sync point
+        first (commit_async) and a staged-but-unconsumed plan is unwound to
+        a prefetch exactly as take_async does on an idx mismatch — its rows
+        stay admitted, and the restored run re-plans the batch against the
+        now-resident rows, so the model math is unchanged. Mutates `state`
+        (drain + unwind) before snapshotting it."""
+        is_async = isinstance(state, AsyncCacheState)
+        if is_async:
+            self.commit_async(state)
+            st = state.staged
+            state.staged = None
+            if st is not None:
+                state.stats.hits -= st.hits
+                state.stats.misses -= st.misses
+                state.stats.steps -= 1
+                state.stats.prefetched += st.misses
+            state.inflight_mask = None
+        d = {k: np.asarray(getattr(state, k)) for k in
+             ("capacity", "cap_accum", "cache", "cache_accum", "freq",
+              "slot_row", "row_slot", "dirty", "ema", "ema_tick")}
+        d["tick"] = np.int64(state.tick)
+        d["stats"] = {k: np.int64(v)
+                      for k, v in dataclasses.asdict(state.stats).items()}
+        if is_async:
+            d["slot_epoch"] = np.asarray(state.slot_epoch)
+            d["epoch"] = np.int64(state.epoch)
+        return d
+
+    def load_state_dict(self, d: dict) -> CacheState | AsyncCacheState:
+        """Rebuild the tier from a `state_dict` pytree (leaves may come back
+        as jax arrays from CheckpointManager.restore — each is coerced to
+        the side init_state/init_async_state put it on). The presence of
+        the async-only `epoch` key selects the state flavour."""
+        stats = CacheStats(**{k: int(v) for k, v in d["stats"].items()})
+        dev = {k: jnp.asarray(d[k]) for k in
+               ("capacity", "cap_accum", "cache", "cache_accum")}
+        # restored leaves may alias read-only device buffers; the host-side
+        # maps are mutated in place by the planner, so force owned copies
+        host = dict(
+            slot_row=np.array(d["slot_row"], np.int64),
+            row_slot=np.array(d["row_slot"], np.int32),
+            dirty=np.array(d["dirty"], bool),
+            ema=np.array(d["ema"], np.float32),
+            ema_tick=np.array(d["ema_tick"], np.int64))
+        if "epoch" in d:
+            return AsyncCacheState(
+                **dev, freq=np.array(d["freq"], np.float32), **host,
+                slot_epoch=np.array(d["slot_epoch"], np.int64),
+                epoch=int(d["epoch"]), pending=[], inflight_mask=None,
+                staged=None, tick=int(d["tick"]), stats=stats)
+        return CacheState(**dev, freq=jnp.asarray(d["freq"]), **host,
+                          tick=int(d["tick"]), stats=stats)
+
 
 # ---------------------------------------------------------------------------
 # Multi-host cache coherence (docs/cache.md "Multi-host coherence")
@@ -1425,3 +1488,34 @@ class MultiHostCachedEmbeddingBagCollection:
         caches are clean by construction — every update already lives at
         its owner."""
         return state.capacity, state.cap_accum
+
+    # -- checkpointing -------------------------------------------------------
+
+    def state_dict(self, state: MultiHostCacheState) -> dict:
+        """Checkpoint-ready pytree of numpy leaves (see the single-host
+        CachedEmbeddingBagCollection.state_dict). Nothing to drain: caches
+        are clean by construction, so the snapshot is always consistent."""
+        d = {k: np.asarray(getattr(state, k)) for k in
+             ("capacity", "cap_accum", "caches", "freq",
+              "slot_row", "row_slot", "ema", "ema_tick")}
+        d["tick"] = np.int64(state.tick)
+        d["stats"] = {k: np.int64(v)
+                      for k, v in dataclasses.asdict(state.stats).items()}
+        d["route"] = {k: np.int64(v)
+                      for k, v in dataclasses.asdict(state.route).items()}
+        return d
+
+    def load_state_dict(self, d: dict) -> MultiHostCacheState:
+        """Rebuild the multi-host tier from a `state_dict` pytree."""
+        return MultiHostCacheState(
+            capacity=jnp.asarray(d["capacity"]),
+            cap_accum=jnp.asarray(d["cap_accum"]),
+            caches=jnp.asarray(d["caches"]),
+            freq=np.array(d["freq"], np.float32),
+            slot_row=np.array(d["slot_row"], np.int64),
+            row_slot=np.array(d["row_slot"], np.int32),
+            ema=np.array(d["ema"], np.float32),
+            ema_tick=np.array(d["ema_tick"], np.int64),
+            tick=int(d["tick"]),
+            stats=CacheStats(**{k: int(v) for k, v in d["stats"].items()}),
+            route=RouteStats(**{k: int(v) for k, v in d["route"].items()}))

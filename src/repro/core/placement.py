@@ -63,10 +63,17 @@ class PlacementPlan:
     load_per_shard: tuple[float, ...] = ()
     # cached_host only: device-cache slots backing the host-resident table
     cache_rows: int = 0
-    # cached_host under data parallelism: hosts the capacity tier is
-    # row-sharded across (1 = the single-host tier) and rows per host shard
+    # cached_host under data parallelism (capacity row-sharded over hosts)
+    # AND table_wise (owner s holds rows [s*shard_rows, (s+1)*shard_rows)):
+    # hosts the rows are sharded across (1 = unsharded) and rows per shard
     capacity_shards: int = 1
     shard_rows: int = 0
+    # table_wise only: per-table count of embedding-dim (column) slices the
+    # executor should use — 1 for tables that fit their owner's budget, k>1
+    # for tables whose bytes exceed one shard (the column_wise escape hatch
+    # for huge tables; docs/parallelism.md). The mega layout itself stays
+    # full-width — realizing the slice is the execution layer's job.
+    column_shards: tuple[int, ...] = ()
 
     @property
     def load_imbalance(self) -> float:
@@ -91,11 +98,19 @@ def plan_placement(hash_sizes: Sequence[int],
                    model_axis: str = "model",
                    second_axis: str = "data",
                    second_axis_size: int = 1,
-                   capacity_shards: int = 1) -> PlacementPlan:
+                   capacity_shards: int = 1,
+                   table_costs: Sequence[float] | None = None
+                   ) -> PlacementPlan:
     """Build a placement plan for one EmbeddingBagCollection.
 
     hbm_budget_bytes is the per-shard capacity available for embeddings
     (chip HBM minus activations/MLP budget — the caller decides).
+
+    `table_costs` (table_wise only) prices each table for the greedy
+    bin-pack — e.g. `launch.analysis.recommend_placement`'s per-table
+    exchange+update byte estimate, or measured per-table step times.
+    Default is `mean_lookups` (load-balanced packing, the paper's Fig. 6/7
+    insight that hot != big).
     """
     hash_sizes = [int(h) for h in hash_sizes]
     loads = [float(ld) for ld in mean_lookups]
@@ -140,17 +155,28 @@ def plan_placement(hash_sizes: Sequence[int],
                                  hash_sizes, loads, offsets, rows, shards))
 
     if strategy == "column_wise":
+        # every table's embedding dim sliced across all shards: each shard
+        # holds the full row space at width d/n_shards, so per-shard bytes
+        # shrink by n_shards with NO per-table balance problem — the heavy
+        # hammer for tables too big for any single owner (table_wise marks
+        # those via column_shards; docs/parallelism.md).
+        if embed_dim % n_shards:
+            raise ValueError(
+                f"column_wise needs embed_dim divisible by n_shards, got "
+                f"{embed_dim} % {n_shards}; pad the dim or drop shards")
         offsets, rows = _contiguous(hash_sizes, pad_mult=8)
         per = rows * embed_dim // n_shards * itemsize
         return PlacementPlan(strategy, offsets, rows, P(None, model_axis),
                              None, n_shards,
                              bytes_per_shard=(per,) * n_shards,
                              load_per_shard=(sum(loads) / n_shards,)
-                             * n_shards)
+                             * n_shards,
+                             column_shards=(n_shards,) * len(hash_sizes))
 
     if strategy == "table_wise":
         return _table_wise(hash_sizes, loads, embed_dim, n_shards,
-                           hbm_budget_bytes, itemsize, model_axis)
+                           hbm_budget_bytes, itemsize, model_axis,
+                           costs=table_costs)
 
     if strategy == "cached_host":
         # capacity tier: the whole mega table in slow memory (host DRAM /
@@ -247,28 +273,47 @@ def _rowwise_load(hash_sizes, loads, offsets, rows, n_shards):
 
 
 def _table_wise(hash_sizes, loads, embed_dim, n_shards, budget, itemsize,
-                model_axis):
-    """Greedy LPT bin-packing on LOAD with BYTES capacity constraint.
+                model_axis, costs=None):
+    """Greedy LPT bin-packing on PRICED COST with BYTES capacity constraint.
 
     The paper's insight (Fig. 6/7): hot tables are often small, so packing by
-    bytes alone strands bandwidth — we balance lookups/step instead and treat
+    bytes alone strands bandwidth — we balance a per-table COST instead
+    (default: lookups/step; callers may pass analytically priced costs, e.g.
+    `launch.analysis.recommend_placement`'s exchange+update bytes) and treat
     bytes as the hard constraint.
+
+    Every table lands whole on its owner: owner s holds the contiguous mega
+    rows [s*shard_rows, (s+1)*shard_rows), which is what lets
+    `kernels.split_plan_by_owner` slice a batch plan into per-owner routed
+    segments with two searchsorted calls. A table whose bytes exceed one
+    shard's budget still gets a row-contiguous home (least-byte shard) but
+    is flagged in `column_shards` with the D-slice count the execution
+    layer should use (the column_wise fallback for huge tables).
     """
     n = len(hash_sizes)
-    order = np.argsort([-ld for ld in loads])      # heaviest load first
+    costs = list(loads) if costs is None else [float(c) for c in costs]
+    assert len(costs) == n, (len(costs), n)
+    order = np.argsort([-c for c in costs])        # priciest table first
     shard_bytes = np.zeros(n_shards)
+    shard_cost = np.zeros(n_shards)
     shard_load = np.zeros(n_shards)
     shard_tables = [[] for _ in range(n_shards)]
     shard_of = np.zeros(n, np.int32)
+    col_shards = np.ones(n, np.int64)
     for t in order:
         tb = hash_sizes[t] * embed_dim * itemsize
-        # least-loaded shard with room; fall back to least-byte shard
-        cand = sorted(range(n_shards), key=lambda s: (shard_load[s],
+        if budget > 0 and tb > budget:
+            # no owner can hold this table whole: recommend a D-slice over
+            # enough shards that each slice fits (clamped to the mesh)
+            col_shards[t] = min(n_shards, -(-tb // int(budget)))
+        # cheapest shard with room; fall back to least-byte shard
+        cand = sorted(range(n_shards), key=lambda s: (shard_cost[s],
                                                       shard_bytes[s]))
         pick = next((s for s in cand if shard_bytes[s] + tb <= budget),
                     int(np.argmin(shard_bytes)))
         shard_of[t] = pick
         shard_bytes[pick] += tb
+        shard_cost[pick] += costs[t]
         shard_load[pick] += loads[t]
         shard_tables[pick].append(t)
 
@@ -287,4 +332,7 @@ def _table_wise(hash_sizes, loads, embed_dim, n_shards, budget, itemsize,
                          P(model_axis, None), tuple(int(x) for x in shard_of),
                          n_shards,
                          bytes_per_shard=tuple(int(x) for x in shard_bytes),
-                         load_per_shard=tuple(float(x) for x in shard_load))
+                         load_per_shard=tuple(float(x) for x in shard_load),
+                         capacity_shards=n_shards,
+                         shard_rows=shard_rows,
+                         column_shards=tuple(int(x) for x in col_shards))

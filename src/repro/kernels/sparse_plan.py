@@ -141,44 +141,98 @@ def split_plan_by_host(plan: SparsePlan, n_hosts: int,
     return out
 
 
-def split_plan_by_owner(plan: SparsePlan, shard_rows: int, n_shards: int,
-                        seg_cap: int | None = None
-                        ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Slice a plan into per-OWNER segments for the routed sparse update:
-    owner s of the row-sharded capacity tier holds rows [s*shard_rows,
-    (s+1)*shard_rows). Because the plan's live prefix is sorted ascending
-    and owners are contiguous row ranges, each owner's rows — and its
-    (row, bag) pairs in `bag_ids` — form a CONTIGUOUS slice: the split is
-    two searchsorted calls and pure slicing, no sort.
+def split_plan_by_ranges(plan: SparsePlan, starts, ends,
+                         seg_cap: int | None = None
+                         ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Slice a plan into segments over arbitrary DISJOINT ascending row
+    ranges — the shared core of `split_plan_by_owner` (uniform contiguous
+    owner blocks) and `split_plan_by_table` (each table's row span under
+    any layout). Segment s covers global rows [starts[s], ends[s]).
 
-    Returns (seg_rows (S, cap) int32 OWNER-LOCAL rows -1-padded,
-    seg_offsets (S, cap+1) int32 ABSOLUTE positions into the shared
-    `bag_ids` with pad entries equal to the segment's bag end, and
-    seg_base (S,) int32 owner row bases). `seg_cap` fixes the per-segment
-    capacity for stable jit shapes (raises on overflow); default is the
-    tight per-step maximum.
+    Because the plan's live prefix is sorted ascending and the ranges are
+    ascending and disjoint, each segment's rows — and its (row, bag) pairs
+    in `bag_ids` — form a CONTIGUOUS slice: the split is two searchsorted
+    calls and pure slicing, no sort. Rows outside every range are simply
+    not claimed by any segment (e.g. a table_wise mega table's per-shard
+    tail padding).
+
+    Returns (seg_rows (S, cap) int32 SEGMENT-LOCAL rows (global minus
+    starts[s]) -1-padded, seg_offsets (S, cap+1) int32 ABSOLUTE positions
+    into the shared `bag_ids` with pad entries equal to the segment's bag
+    end, and seg_base (S,) int32 = starts — the base the segmented fused
+    backward adds back). `seg_cap` fixes the per-segment capacity for
+    stable jit shapes (raises on overflow); default is the tight
+    per-call maximum.
     """
     rows = np.asarray(plan.unique_rows)
     offs = np.asarray(plan.bag_offsets).astype(np.int64)
+    starts = np.asarray(starts, np.int64)
+    ends = np.asarray(ends, np.int64)
+    n_seg = len(starts)
+    assert len(ends) == n_seg, (len(ends), n_seg)
+    if n_seg:
+        assert np.all(ends >= starts)
+        assert np.all(starts[1:] >= ends[:-1]), \
+            "ranges must be ascending and disjoint"
     n_live = int((rows >= 0).sum())
     live = rows[:n_live].astype(np.int64)
-    cuts = np.searchsorted(live, np.arange(n_shards + 1) * shard_rows)
-    widest = int(np.diff(cuts).max()) if n_shards else 0
+    lo = np.searchsorted(live, starts)
+    hi = np.searchsorted(live, ends)
+    widest = int((hi - lo).max()) if n_seg else 0
     cap = widest if seg_cap is None else seg_cap
     if widest > cap:
         raise ValueError(
             f"owner segment overflow: widest owner holds {widest} unique "
             f"rows > seg_cap={cap}")
-    seg_rows = np.full((n_shards, cap), -1, np.int32)
-    seg_offs = np.zeros((n_shards, cap + 1), np.int32)
-    for s in range(n_shards):
-        a, b = int(cuts[s]), int(cuts[s + 1])
+    seg_rows = np.full((n_seg, cap), -1, np.int32)
+    seg_offs = np.zeros((n_seg, cap + 1), np.int32)
+    for s in range(n_seg):
+        a, b = int(lo[s]), int(hi[s])
         k = b - a
-        seg_rows[s, :k] = live[a:b] - s * shard_rows
+        seg_rows[s, :k] = live[a:b] - starts[s]
         seg_offs[s, :k + 1] = offs[a:b + 1]
         seg_offs[s, k + 1:] = offs[b]
-    seg_base = (np.arange(n_shards) * shard_rows).astype(np.int32)
+    seg_base = starts.astype(np.int32)
     return seg_rows, seg_offs, seg_base
+
+
+def split_plan_by_owner(plan: SparsePlan, shard_rows: int, n_shards: int,
+                        seg_cap: int | None = None
+                        ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Slice a plan into per-OWNER segments for the routed sparse update:
+    owner s of the row-sharded capacity tier — or of a table_wise placement,
+    whose owners are the same contiguous blocks — holds rows
+    [s*shard_rows, (s+1)*shard_rows). The uniform-blocks special case of
+    `split_plan_by_ranges`; see it for the returned layout.
+    """
+    starts = np.arange(n_shards, dtype=np.int64) * shard_rows
+    return split_plan_by_ranges(plan, starts, starts + shard_rows,
+                                seg_cap=seg_cap)
+
+
+def split_plan_by_table(plan: SparsePlan, table_offsets, table_rows,
+                        seg_cap: int | None = None
+                        ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Slice a plan into PER-TABLE segments: table t owns the mega rows
+    [table_offsets[t], table_offsets[t] + table_rows[t]) under any layout
+    whose tables don't interleave (all of core/placement.py's). Feeds the
+    per-table pricing of `launch.analysis.recommend_placement` (each
+    segment's live-row count is the table's per-batch unique footprint)
+    and per-table update granularity.
+
+    Segments are returned in TABLE order (the caller's table ids), not row
+    order — `split_plan_by_ranges` requires ascending ranges, so the split
+    runs in row order and is unpermuted here. Same layout as
+    `split_plan_by_owner`, with seg_base[t] = table_offsets[t].
+    """
+    starts = np.asarray(table_offsets, np.int64)
+    ends = starts + np.asarray(table_rows, np.int64)
+    order = np.argsort(starts, kind="stable")
+    seg_rows, seg_offs, seg_base = split_plan_by_ranges(
+        plan, starts[order], ends[order], seg_cap=seg_cap)
+    inv = np.empty_like(order)
+    inv[order] = np.arange(len(order))
+    return seg_rows[inv], seg_offs[inv], seg_base[inv]
 
 
 def coalesce_rows(rows: np.ndarray, chunk: int, total_rows: int,

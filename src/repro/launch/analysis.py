@@ -247,6 +247,137 @@ def cache_admission_traffic(fetched_rows: float, embed_dim: int,
                                   if single_bytes else 1.0)}
 
 
+def tablewise_exchange_traffic(batch: int, n_features: int, truncation: int,
+                               embed_dim: int, n_hosts: int,
+                               itemsize: int = 4,
+                               features_per_owner=None) -> dict[str, float]:
+    """Cross-host bytes per step of the TABLE-WISE hybrid placement
+    (train/steps.py `build_tablewise_train_step`, docs/parallelism.md):
+    whole tables live on owning hosts and only the POOLED (B, F, d)
+    activations cross the wire — forward pooled outputs out, pooled bag
+    gradients back, each with a remote fraction of (H-1)/H. Per-lookup
+    rows never move, so the exchange is independent of both the bag
+    length L and the batch's unique-row working set:
+
+        fwd = bwd = (H-1)/H * B * F * d * itemsize.
+
+    The per-(host, owner) pair leg carries only the owner's OWN tables
+    for the destination's batch slice — ceil(B/H) * max_t F_t * d *
+    itemsize — which is why the all-to-all stays under B*F*d*itemsize
+    per leg at any scale (`features_per_owner`, e.g. a bincount of
+    `core.placement` owners, sharpens max_t F_t from the uniform
+    ceil(F/H) default).
+
+    `rowshard_bytes` is the comparison the bench rows gate: the
+    row-sharded naive gather ships the un-pooled (B, F, L, d) rows both
+    ways, so `pooling_reduction` = rowshard / total ≈ L. Complements
+    `multihost_exchange_traffic` (the row-sharded CACHED tier, whose
+    traffic scales with unique rows instead) — `recommend_placement`
+    prices all three."""
+    remote = (n_hosts - 1) / max(n_hosts, 1)
+    act_bytes = float(embed_dim * itemsize)
+    fwd = remote * batch * n_features * act_bytes
+    if features_per_owner is not None and len(features_per_owner):
+        max_f = max(int(f) for f in features_per_owner)
+    else:
+        max_f = -(-n_features // max(n_hosts, 1))
+    pair_leg = -(-batch // max(n_hosts, 1)) * max_f * act_bytes
+    pairs = float(batch * n_features * truncation)
+    rowshard = 2.0 * pairs * remote * act_bytes
+    total = 2.0 * fwd
+    return {"fwd_bytes": fwd,
+            "bwd_bytes": fwd,
+            "total_bytes": total,
+            "pair_leg_bytes": pair_leg,
+            "rowshard_bytes": rowshard,
+            "pooling_reduction": rowshard / total if total else 1.0}
+
+
+def recommend_placement(hash_sizes, mean_lookups, embed_dim: int,
+                        batch: int, truncation: int, n_hosts: int,
+                        hbm_budget_bytes: float, alpha: float = 1.05,
+                        hit_rate: float = 0.0,
+                        itemsize: int = 4) -> dict:
+    """Compose the traffic models into a per-table placement pick — the
+    analytic closing of the loop "Building a Performance Model for DLRM
+    Training on GPUs" (arxiv 2201.07821) argues for: place by priced
+    bytes, not by hand.
+
+    Prices three strategies for a (batch, truncation) step over Zipf(α)
+    synthetic traffic:
+      replicated   every host holds every table — zero exchange; only
+                   available when the whole collection fits one host's
+                   budget;
+      table_wise   pooled all-to-all (`tablewise_exchange_traffic`), with
+                   owners from `core.placement.plan_placement` bin-packing
+                   each table's priced cost (its pooled legs plus its
+                   expected per-step unique-row update footprint). Tables
+                   whose bytes exceed one host's budget become
+                   column_wise with ceil(bytes / budget) D-slices;
+      cached_host  the row-sharded cached tier
+                   (`multihost_exchange_traffic`), unique counts from
+                   `zipf_expected_unique`, misses discounted by
+                   `hit_rate`.
+
+    Returns {"pick", "fits_one_host", "tablewise", "rowshard",
+    "per_table": [{"table", "strategy", "owner", "column_shards",
+    "bytes", "cost"}], "plan"} — `plan` is the PlacementPlan behind the
+    table_wise pricing, ready to hand to `EmbeddingBagCollection`. The
+    deterministic bench rows (benchmarks/dlrm_bench.py `tablewise/...`)
+    validate the tablewise model against the step's measured exchange
+    metrics."""
+    import numpy as np  # local: this module otherwise imports stdlib only
+
+    from repro.core.placement import plan_placement
+    hh = [int(h) for h in hash_sizes]
+    n_f = len(hh)
+    lk = [min(float(length), float(truncation)) for length in mean_lookups]
+    row_bytes = float(embed_dim * itemsize)
+    # params + the row-wise AdaGrad accumulator both occupy the owner
+    table_bytes = [h * row_bytes + h * 4.0 for h in hh]
+    fits = (hbm_budget_bytes <= 0
+            or sum(table_bytes) <= float(hbm_budget_bytes))
+    uniq_t = [zipf_expected_unique(batch * lk[t], hh[t], alpha)
+              for t in range(n_f)]
+    # priced cost per table: its share of the pooled legs (uniform — the
+    # pooled payload is per-table-independent) + its owner-side update
+    # footprint; the bin-pack balances the sum across owners
+    remote = (n_hosts - 1) / max(n_hosts, 1)
+    pooled_leg = 2.0 * remote * batch * row_bytes
+    costs = [pooled_leg + uniq_t[t] * row_bytes for t in range(n_f)]
+    plan = plan_placement(hh, mean_lookups, embed_dim, n_hosts,
+                          hbm_budget_bytes, strategy="table_wise",
+                          itemsize=itemsize, table_costs=costs)
+    owners = [int(o // max(plan.shard_rows, 1))
+              for o in plan.table_offsets]
+    f_per_owner = np.bincount(np.asarray(owners), minlength=n_hosts)
+    tw = tablewise_exchange_traffic(batch, n_f, truncation, embed_dim,
+                                    n_hosts, itemsize,
+                                    features_per_owner=f_per_owner)
+    u_g = float(sum(uniq_t))
+    u_h = float(sum(zipf_expected_unique(batch / max(n_hosts, 1) * lk[t],
+                                         hh[t], alpha) for t in range(n_f)))
+    mean_lk = sum(lk) / max(n_f, 1)
+    rs = multihost_exchange_traffic(batch, n_f, mean_lk, embed_dim,
+                                    n_hosts, u_h, u_g, hit_rate, itemsize)
+    if fits:
+        pick = "replicated"
+    elif tw["total_bytes"] <= rs["total_bytes"]:
+        pick = "table_wise"
+    else:
+        pick = "cached_host"
+    per_table = []
+    for t in range(n_f):
+        cs = int(plan.column_shards[t]) if plan.column_shards else 1
+        strategy = ("replicated" if fits
+                    else "column_wise" if cs > 1 else "table_wise")
+        per_table.append({"table": t, "strategy": strategy,
+                          "owner": owners[t], "column_shards": cs,
+                          "bytes": table_bytes[t], "cost": costs[t]})
+    return {"pick": pick, "fits_one_host": fits, "tablewise": tw,
+            "rowshard": rs, "per_table": per_table, "plan": plan}
+
+
 # ---------------------------------------------------------------------------
 # StableHLO (lowered.as_text())
 # ---------------------------------------------------------------------------

@@ -70,14 +70,19 @@ class ServeEngine:
             req = self.queue.get()
             # prefill one slot: run prompt tokens through decode steps
             # (slot-local prefill keeps the cache layout fixed-batch).
-            for t, tok in enumerate(req.prompt):
+            # The LAST prompt token is left to the first `step()` call —
+            # it feeds at position len-1 and its logits sample the first
+            # generated token; prefilling it here too would write it to
+            # the KV cache twice and sample from one position past the
+            # prompt (tests/test_lm_behaviour.py guards this).
+            for t, tok in enumerate(req.prompt[:-1]):
                 tok_arr = jnp.full((self.batch_slots, 1), int(tok), jnp.int32)
                 logits, caches = self._decode(
                     self.params, tok_arr, self.caches,
                     jnp.asarray(t, jnp.int32))
                 self.caches = _merge_slot(self.caches, caches, slot)
             self.slot_req[slot] = req
-            self.slot_pos[slot] = len(req.prompt)
+            self.slot_pos[slot] = len(req.prompt) - 1
             self.slot_budget[slot] = req.max_new_tokens
 
     # -- decode --------------------------------------------------------------
@@ -167,8 +172,24 @@ class DLRMEngine:
 
     def predict(self, batch: dict) -> np.ndarray:
         """batch: {"dense" (B, n_dense), "idx" (B, F, L) OFFSET global rows}.
-        Returns (B,) click probabilities."""
-        local = self.cc.prepare(self.state, batch["idx"], train=False)
+        Returns (B,) click probabilities.
+
+        A batch whose working set exceeds the device cache trips the
+        planner's thrash guard; serving must degrade, not die, so the batch
+        recursively halves until each piece's unique rows fit. Splitting is
+        exact here — the tier is read-only, so earlier pieces only change
+        which rows are RESIDENT for later ones, never their values."""
+        idx = np.asarray(batch["idx"])
+        try:
+            local = self.cc.prepare(self.state, idx, train=False)
+        except ValueError as e:
+            if "unique rows" not in str(e) or idx.shape[0] <= 1:
+                raise   # a single example over capacity cannot split
+            h = idx.shape[0] // 2
+            dense_x = np.asarray(batch["dense"])
+            return np.concatenate([
+                self.predict({"dense": dense_x[:h], "idx": idx[:h]}),
+                self.predict({"dense": dense_x[h:], "idx": idx[h:]})])
         probs = self._fwd(self.dense, self.state.cache,
                           jnp.asarray(batch["dense"]), jnp.asarray(local))
         self.requests_served += int(local.shape[0])

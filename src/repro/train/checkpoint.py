@@ -100,7 +100,10 @@ class CheckpointManager:
     def _gc(self):
         steps = sorted(d for d in os.listdir(self.directory)
                        if d.startswith("step_") and not d.endswith(".tmp"))
-        for d in steps[:-self.keep]:
+        # keep=0 means "keep none": steps[:-0] is the EMPTY slice, not the
+        # whole list, so the negative slice only applies for keep > 0
+        drop = steps[:-self.keep] if self.keep > 0 else steps
+        for d in drop:
             shutil.rmtree(os.path.join(self.directory, d),
                           ignore_errors=True)
 
@@ -108,10 +111,19 @@ class CheckpointManager:
 
     def latest_step(self) -> int | None:
         latest = os.path.join(self.directory, "LATEST")
-        if not os.path.exists(latest):
+        if os.path.exists(latest):
+            with open(latest) as f:
+                name = f.read().strip()
+            # LATEST can point at a directory _gc already removed (e.g. a
+            # keep window smaller than the save cadence): fall back to
+            # scanning rather than handing restore() a dangling step
+            if os.path.isdir(os.path.join(self.directory, name)):
+                return int(name.split("_")[1])
+        steps = sorted(d for d in os.listdir(self.directory)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        if not steps:
             return None
-        with open(latest) as f:
-            return int(f.read().strip().split("_")[1])
+        return int(steps[-1].split("_")[1])
 
     def restore(self, example_tree: Any, step: int | None = None,
                 shardings: Any | None = None) -> Any:

@@ -18,15 +18,18 @@ from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import DLRMConfig, ModelConfig
 from repro.core.dlrm import _bce, dlrm_forward_dense, dlrm_grads
 from repro.core.embedding import EmbeddingBagCollection
 from repro.kernels import ops as kernel_ops
 from repro.kernels import ref as kref
-from repro.kernels.sparse_plan import (host_plan_from_batch,
+from repro.kernels.sparse_plan import (build_sparse_plan_host,
+                                       host_plan_from_batch,
                                        host_plans_from_batch,
-                                       plan_from_batch)
+                                       plan_from_batch,
+                                       split_plan_by_owner)
 from repro.models.lm import lm_loss
 from repro.nn.sharding import (TRAIN_RULES, LogicalRules,
                                _live_mesh_axis_names)
@@ -573,5 +576,189 @@ def build_multihost_cached_train_step(cfg: DLRMConfig, mc,
                         host_plans=host_plans_from_batch(next_batch),
                         global_plan=host_plan_from_batch(next_batch))
         return new_dense, {"dense": new_dense_state}, metrics
+
+    return step
+
+
+def build_tablewise_train_step(cfg: DLRMConfig, ebc: EmbeddingBagCollection,
+                               dense_opt: Optimizer,
+                               sparse_lr: float = 0.05,
+                               sparse_eps: float = 1e-8,
+                               interpret: bool = False,
+                               rules: LogicalRules = TRAIN_RULES,
+                               mesh=None, model_axis: str = "model",
+                               overlap: bool = False) -> Callable:
+    """Hybrid model/data-parallel train step for a `table_wise` placement:
+    whole embedding tables live on owning shards (model-parallel) while
+    every shard runs the full MLPs on its batch slice (data-parallel) —
+    the production placement of "Deep Learning Training in Facebook Data
+    Centers" (arxiv 2003.09518) and the source paper's Zion.
+
+    Per step, with H = `ebc.plan.capacity_shards` owners:
+      FWD   each owner gathers+pools its LOCAL tables once for the global
+            batch; the all-to-all exchanges only the pooled (B, F, d)
+            activations — `ebc.lookup_pooled_psum` under `mesh` (pool
+            before the collective), the pure-jnp global lookup without.
+            Cross-wire bytes per direction: (H-1)/H * B*F*d*itemsize, vs
+            the row-sharded naive gather's un-pooled (B, F, L, d) rows.
+      BWD   the dense backward yields pooled (B, F, d) bag grads; they
+            route BACK through the same per-owner split — the global
+            plan's live prefix cut at owner row boundaries
+            (`split_plan_by_owner`; owners of a table_wise layout are the
+            same contiguous blocks as the row-sharded capacity tier) —
+            and each owner runs the fused AdaGrad apply on its segment
+            (shard_map over `model_axis` under `mesh`, the segmented
+            single-launch kernel without).
+
+    Duplicate (row, bag) pairs reduce once, in flat-batch order, inside
+    the fused segment apply, so the step is BIT-EXACT vs the dense
+    single-host oracle (tests/test_tablewise.py, 8 fake devices).
+
+    `overlap=True` stages batch k+1's pooled forward right after step k's
+    update commits (a separately-jitted gather+pool on the post-update
+    mega), so the pooled exchange hides under the NEXT step's host-side
+    planning — the tablewise twin of the cached tier's prefetch stream.
+    Consumption is keyed to (step k+1, that exact batch object); any
+    mismatch falls back to the in-step forward, so results are
+    bit-identical either way.
+
+    Returns step(params, state, batch, step_idx, next_batch=None) ->
+    (params, state, metrics); params follow the `build_dlrm_train_step`
+    convention (params["emb"]["mega"], state = {"dense", "accum"}), batch
+    carries OFFSET global indices (`ebc.offset_indices`) and optionally a
+    hook-attached plan. Metrics include the host-computed pooled-exchange
+    bytes (`launch.analysis.tablewise_exchange_traffic` is the matching
+    analytic model)."""
+    plan = ebc.plan
+    if plan.strategy != "table_wise":
+        raise ValueError(
+            f"build_tablewise_train_step needs a table_wise placement, "
+            f"got {plan.strategy!r}")
+    if any(c != 1 for c in plan.column_shards):
+        raise NotImplementedError(
+            "column-sliced tables (column_shards > 1) need the column_wise "
+            "executor; re-plan with a larger per-shard budget or fewer "
+            "slices")
+    n_owners = plan.capacity_shards
+    shard_rows = plan.shard_rows
+    d = cfg.embed_dim
+    itemsize = 4                       # pooled activations cross in fp32
+    owners = np.asarray(plan.table_offsets) // max(shard_rows, 1)
+    f_per_owner = np.bincount(owners, minlength=n_owners)
+    max_f_owned = int(f_per_owner.max()) if len(f_per_owner) else 0
+
+    def pooled_fwd(mega, idx):
+        """The pooled exchange: gather+pool locally, all-to-all (B,F,d)."""
+        if mesh is not None:
+            return ebc.lookup_pooled_psum({"mega": mega}, idx, mesh,
+                                          model_axis)
+        return ebc.lookup({"mega": mega}, idx, rules)
+
+    def tail(dense_params, dense_state, mega, accum, pooled, dev, step_idx):
+        """Dense fwd/bwd on the exchanged pooled activations, then the
+        owner-routed fused sparse update."""
+
+        def loss_fn(dp, pl_):
+            logits = dlrm_forward_dense({**dp, "emb": None}, dev["dense"],
+                                        pl_, cfg, interpret)
+            return _bce(logits, dev["label"])
+
+        loss, (g_dense, g_pooled) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1))(dense_params, pooled)
+        new_dense, new_dense_state = dense_opt.apply(
+            dense_params, g_dense, dense_state, step_idx)
+        pooled2 = g_pooled.astype(jnp.float32).reshape(-1, d)
+        if mesh is not None:
+            from jax.sharding import PartitionSpec as SP
+
+            from repro.compat import shard_map
+
+            def owner_update(mega_sh, acc_sh, rows_sh, offs_sh, bags, g2):
+                return kernel_ops.fused_sparse_backward_segments(
+                    mega_sh, acc_sh, rows_sh, offs_sh, bags, g2, sparse_lr,
+                    eps=sparse_eps, interpret=interpret)
+
+            new_mega, new_accum = shard_map(
+                owner_update, mesh=mesh,
+                in_specs=(SP(model_axis, None), SP(model_axis),
+                          SP(model_axis, None), SP(model_axis, None),
+                          SP(None), SP(None, None)),
+                out_specs=(SP(model_axis, None), SP(model_axis)),
+                check_vma=False,
+            )(mega, accum, dev["seg_rows"], dev["seg_offsets"],
+              dev["bag_ids"], pooled2)
+        else:
+            new_mega, new_accum = kernel_ops.fused_sparse_backward_segments(
+                mega, accum, dev["seg_rows"], dev["seg_offsets"],
+                dev["bag_ids"], pooled2, sparse_lr,
+                seg_base=dev["seg_base"], eps=sparse_eps,
+                interpret=interpret)
+        lookups = jnp.sum(dev["idx"] >= 0).astype(jnp.float32)
+        return (new_dense, new_dense_state, new_mega, new_accum,
+                {"loss": loss, "lookups": lookups})
+
+    def inner(dense_params, dense_state, mega, accum, dev, step_idx):
+        pooled = pooled_fwd(mega, dev["idx"])
+        return tail(dense_params, dense_state, mega, accum, pooled, dev,
+                    step_idx)
+
+    def inner_staged(dense_params, dense_state, mega, accum, pooled, dev,
+                     step_idx):
+        return tail(dense_params, dense_state, mega, accum, pooled, dev,
+                    step_idx)
+
+    inner_jit = jax.jit(inner, donate_argnums=(2, 3))
+    inner_staged_jit = jax.jit(inner_staged, donate_argnums=(2, 3))
+    stage_jit = jax.jit(pooled_fwd)
+    staged_cell: list[tuple | None] = [None]
+
+    def step(params, state, batch, step_idx, next_batch=None):
+        if mesh is not None:
+            assert mesh.shape[model_axis] == n_owners, \
+                (mesh.shape[model_axis], n_owners)
+        idx_h = np.asarray(batch["idx"])
+        plan_h = host_plan_from_batch(batch)
+        if plan_h is None:
+            plan_h = build_sparse_plan_host(idx_h)
+        seg_rows, seg_offs, seg_base = split_plan_by_owner(
+            plan_h, shard_rows, n_owners,
+            seg_cap=len(plan_h.unique_rows))
+        dev = {"dense": jnp.asarray(batch["dense"]),
+               "label": jnp.asarray(batch["label"]),
+               "idx": jnp.asarray(batch["idx"]),
+               "seg_rows": jnp.asarray(seg_rows),
+               "seg_offsets": jnp.asarray(seg_offs),
+               "seg_base": jnp.asarray(seg_base),
+               "bag_ids": jnp.asarray(plan_h.bag_ids)}
+        staged, staged_cell[0] = staged_cell[0], None
+        if (staged is not None and staged[0] == int(step_idx)
+                and staged[1] == id(batch)):
+            out = inner_staged_jit(
+                {"bottom": params["bottom"], "top": params["top"]},
+                state["dense"], params["emb"]["mega"], state["accum"],
+                staged[2], dev, step_idx)
+        else:
+            out = inner_jit(
+                {"bottom": params["bottom"], "top": params["top"]},
+                state["dense"], params["emb"]["mega"], state["accum"],
+                dev, step_idx)
+        new_dense, new_dense_state, new_mega, new_accum, metrics = out
+        b, f, _ = idx_h.shape
+        wire = (n_owners - 1) / max(n_owners, 1) * b * f * d * itemsize
+        metrics = {**metrics,
+                   "exchange_pooled_fwd_bytes": wire,
+                   "exchange_pooled_bwd_bytes": wire,
+                   "exchange_pair_leg_bytes":
+                       -(-b // max(n_owners, 1)) * max_f_owned * d * itemsize}
+        if overlap and next_batch is not None:
+            # dispatched after the update: the staged gather reads the
+            # POST-update mega, so batch k+1's pooled activations are
+            # current; PJRT orders it before the next step's donation
+            staged_cell[0] = (int(step_idx) + 1, id(next_batch),
+                              stage_jit(new_mega,
+                                        jnp.asarray(next_batch["idx"])))
+        new_params = {**new_dense, "emb": {"mega": new_mega}}
+        return (new_params, {"dense": new_dense_state, "accum": new_accum},
+                metrics)
 
     return step

@@ -206,6 +206,107 @@ def test_cached_train_step_runs_and_reports_cache_metrics(cfg, ebc):
     assert cache_state.stats.steps == 4
 
 
+def test_checkpoint_restore_resumes_bit_exact(cfg, ebc, tmp_path):
+    """Interrupt a cached-tier run mid-stream, round-trip the WHOLE tier
+    (device slabs + host slot maps + EMA + stats) through the real
+    CheckpointManager, and resume: every later loss and the final
+    materialized table must be BIT-EQUAL to the uninterrupted run. A
+    params-only checkpoint cannot pass this — the accumulators of cached
+    rows live per-slot, so losing row_slot/cache_accum changes the AdaGrad
+    trajectory after restore."""
+    from repro.train.checkpoint import CheckpointManager
+
+    def fresh():
+        params = init_params(dlrm_param_specs(cfg, ebc),
+                             jax.random.PRNGKey(7))
+        cc = CachedEmbeddingBagCollection.build(cfg, cache_rows=256)
+        opt = adagrad(0.01)
+        dense = {"bottom": params["bottom"], "top": params["top"]}
+        return (cc, opt, dense, cached_dlrm_init_state(cc, opt, params),
+                cc.init_state(params["emb"]["mega"]))
+
+    def batch(t):
+        raw = make_dlrm_batch(cfg, 8, step=t)
+        return {"dense": jnp.asarray(raw["dense"]),
+                "idx": np.asarray(ebc.offset_indices(jnp.asarray(raw["idx"]))),
+                "label": jnp.asarray(raw["label"])}
+
+    total, cut = 6, 3
+
+    # uninterrupted reference
+    cc, opt, dense, cstate, cache_state = fresh()
+    step = build_cached_dlrm_train_step(cfg, cc, opt)
+    ref_losses = []
+    for t in range(total):
+        dense, cstate, m = step(dense, cstate, cache_state, batch(t),
+                                jnp.asarray(t, jnp.int32))
+        ref_losses.append(float(m["loss"]))
+    ref_mega, ref_accum = cc.materialize(cache_state)
+    ref_dense = dense
+
+    # interrupted run: save at `cut`, restore into FRESH objects, resume
+    cc, opt, dense, cstate, cache_state = fresh()
+    step = build_cached_dlrm_train_step(cfg, cc, opt)
+    for t in range(cut):
+        dense, cstate, m = step(dense, cstate, cache_state, batch(t),
+                                jnp.asarray(t, jnp.int32))
+        assert float(m["loss"]) == ref_losses[t]
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(cut, {"dense": dense, "opt": cstate,
+                   "cache": cc.state_dict(cache_state)})
+
+    cc2, opt2, dense2, cstate2, cache2 = fresh()   # restart from scratch
+    tree = mgr.restore({"dense": dense2, "opt": cstate2,
+                        "cache": cc2.state_dict(cache2)}, step=cut)
+    dense2, cstate2 = tree["dense"], tree["opt"]
+    cache2 = cc2.load_state_dict(tree["cache"])
+    assert dataclasses.asdict(cache2.stats) == \
+        dataclasses.asdict(cache_state.stats)
+    step2 = build_cached_dlrm_train_step(cfg, cc2, opt2)
+    for t in range(cut, total):
+        dense2, cstate2, m = step2(dense2, cstate2, cache2, batch(t),
+                                   jnp.asarray(t, jnp.int32))
+        assert float(m["loss"]) == ref_losses[t]
+    mega2, accum2 = cc2.materialize(cache2)
+    np.testing.assert_array_equal(np.asarray(mega2), np.asarray(ref_mega))
+    np.testing.assert_array_equal(np.asarray(accum2), np.asarray(ref_accum))
+    for a, b in zip(jax.tree.leaves(ref_dense), jax.tree.leaves(dense2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_state_dict_drains_staged_and_roundtrips(cfg, ebc):
+    """Snapshotting an AsyncCacheState with a staged-but-unconsumed plan
+    must drain the pending queue and unwind the staged stats (the plan
+    degrades to a prefetch, as take_async does on an idx mismatch); the
+    restored state then continues bit-identically to the mutated
+    original."""
+    params = init_params(ebc.param_specs(), jax.random.PRNGKey(2))
+    cc = CachedEmbeddingBagCollection.build(cfg, cache_rows=256)
+    astate = cc.init_async_state(params["mega"])
+    idx0, idx1 = _batch_idx(cfg, ebc, 0), _batch_idx(cfg, ebc, 1)
+    cc.take_async(astate, idx0, train=False)
+    cc.stage_async(astate, idx1, train=False)
+    assert astate.staged is not None and astate.pending
+
+    d = cc.state_dict(astate)
+    assert astate.staged is None and not astate.pending
+    assert astate.stats.prefetched > 0            # staged -> prefetch
+    restored = cc.load_state_dict(d)
+    assert dataclasses.asdict(restored.stats) == \
+        dataclasses.asdict(astate.stats)
+    assert restored.epoch == astate.epoch
+
+    # both continue with batch1: the staged rows are resident, so the
+    # re-plan is all hits, and lookups/materialize stay bit-equal
+    out_a = cc.lookup_async(astate, idx1, train=False)
+    out_b = cc.lookup_async(restored, idx1, train=False)
+    np.testing.assert_array_equal(np.asarray(out_a), np.asarray(out_b))
+    mega_a, acc_a = cc.materialize_async(astate)
+    mega_b, acc_b = cc.materialize_async(restored)
+    np.testing.assert_array_equal(np.asarray(mega_a), np.asarray(mega_b))
+    np.testing.assert_array_equal(np.asarray(acc_a), np.asarray(acc_b))
+
+
 # ---------------------------------------------------------------------------
 # kernel vs oracle
 # ---------------------------------------------------------------------------
@@ -333,6 +434,48 @@ def test_thrash_guard_raises(cfg, ebc):
     state = cc.init_state(params["mega"])
     with pytest.raises(ValueError, match="cache_rows"):
         cc.prepare(state, _batch_idx(cfg, ebc, 0))
+
+
+def test_serve_engine_microbatches_when_cache_smaller_than_batch(cfg, ebc):
+    """Read-only serving with a device cache SMALLER than one batch's
+    working set: predict must micro-batch through the thrash guard instead
+    of raising, every batch misses (capacity-bound regime), and the
+    probabilities still match the dense uncached forward exactly."""
+    from repro.core.dlrm import dlrm_forward
+    from repro.serve.engine import DLRMEngine
+    params = init_params(dlrm_param_specs(cfg, ebc), jax.random.PRNGKey(2))
+    cc = CachedEmbeddingBagCollection.build(cfg, cache_rows=48)
+    engine = DLRMEngine(params, cfg, cc)
+    # same compiled forward over a cache big enough to never split: the
+    # bit-equality oracle for the splitting path
+    big = DLRMEngine(params, cfg,
+                     CachedEmbeddingBagCollection.build(cfg, cache_rows=2048))
+    # the full batch working set must NOT fit (else the test is vacuous)
+    n_batches = 3
+    for step in range(n_batches):
+        idx = _batch_idx(cfg, ebc, step)
+        assert len(np.unique(idx[idx >= 0])) > 48
+    cap_before = np.asarray(engine.state.capacity).copy()
+    for step in range(n_batches):
+        raw = make_dlrm_batch(cfg, 8, step=step)
+        b = {"dense": jnp.asarray(raw["dense"]),
+             "idx": np.asarray(ebc.offset_indices(jnp.asarray(raw["idx"])))}
+        misses_before = engine.cache_stats.misses
+        probs = engine.predict(b)
+        assert engine.cache_stats.misses > misses_before   # misses every batch
+        np.testing.assert_array_equal(probs, big.predict(b))
+        want = jax.nn.sigmoid(dlrm_forward(
+            params, {"dense": b["dense"], "idx": jnp.asarray(b["idx"])},
+            cfg, ebc))
+        np.testing.assert_allclose(probs, np.asarray(want, np.float32),
+                                   rtol=1e-6, atol=1e-6)
+    # every batch split at least once: more planner steps than predicts
+    assert engine.cache_stats.steps > n_batches
+    assert engine.requests_served == 8 * n_batches
+    # still read-only: nothing written back, capacity untouched
+    assert engine.cache_stats.writebacks == 0
+    np.testing.assert_array_equal(cap_before,
+                                  np.asarray(engine.state.capacity))
 
 
 def test_bounded_zipf_head_is_hot():

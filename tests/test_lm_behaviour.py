@@ -152,6 +152,57 @@ def test_serve_engine_drains_requests():
     assert all(len(v) == 6 for v in done.values())
 
 
+def test_serve_prefill_matches_one_shot_forward():
+    """The first sampled token must come from the LAST prompt position: the
+    last prompt token enters the KV cache exactly once, via the first
+    `step()` at position len-1. Regression: prefill used to feed ALL
+    prompt tokens and step() re-fed prompt[-1] at position len, so the
+    duplicate corrupted the cache and the first token sampled one position
+    past the prompt."""
+    from repro.models.lm import init_caches, lm_forward
+    from repro.serve import Request, ServeEngine
+    cfg = get_smoke_config("stablelm-1.6b")
+    params = init_params(lm_param_specs(cfg), jax.random.PRNGKey(3))
+    rngn = np.random.RandomState(11)
+    pl, new = 6, 4
+    prompt = rngn.randint(0, cfg.vocab_size, size=(pl,)).astype(np.int32)
+
+    eng = ServeEngine(params, cfg, batch_slots=1, max_len=32, rules={})
+
+    # greedy reference through the engine's OWN compiled decode fn, feeding
+    # positions exactly as the engine does (scalar during prefill, per-slot
+    # vector during step), so token ids compare bit-exactly
+    caches = init_caches(cfg, 1, 32)
+    for t in range(pl - 1):
+        _, caches = eng._decode(
+            params, jnp.full((1, 1), int(prompt[t]), jnp.int32), caches,
+            jnp.asarray(t, jnp.int32))
+    pos = np.asarray([pl - 1], np.int32)
+    tok = int(prompt[-1])
+    want, first_logits = [], None
+    for _ in range(new):
+        lg, caches = eng._decode(params, jnp.full((1, 1), tok, jnp.int32),
+                                 caches, jnp.asarray(pos, jnp.int32))
+        if first_logits is None:
+            first_logits = np.asarray(lg[0], np.float32)
+        tok = int(np.argmax(np.asarray(lg, np.float32)[0]))
+        want.append(tok)
+        pos = pos + 1
+
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=new))
+    done = eng.run_until_drained(max_steps=100)
+    assert done[0] == want
+
+    # ... and that sampling position IS the one-shot full-sequence
+    # forward's last prompt position
+    full_logits, _, _ = lm_forward(params,
+                                   {"tokens": jnp.asarray(prompt[None])},
+                                   cfg, "train", rules={})
+    np.testing.assert_allclose(
+        first_logits, np.asarray(full_logits[0, pl - 1], np.float32),
+        rtol=3e-2, atol=3e-2)
+
+
 def test_per_slot_decode_positions_match_isolated():
     """Batched decode with heterogeneous per-slot positions must equal each
     sequence decoded alone (continuous-batching correctness)."""

@@ -51,6 +51,36 @@ def test_checkpoint_async_and_gc(tmp_path, rng):
     assert mgr.latest_step() == 4
 
 
+def test_checkpoint_gc_keep_zero_deletes_everything(tmp_path, rng):
+    """keep=0 means keep NONE: steps[:-0] is the empty slice, so the old
+    negative-slice _gc silently kept every directory forever."""
+    mgr = CheckpointManager(str(tmp_path), keep=0)
+    tree = _tree(rng)
+    for step in (1, 2):
+        mgr.save(step, tree)
+    dirs = [d for d in os.listdir(tmp_path) if d.startswith("step_")]
+    assert dirs == []
+    # every step is gone, so the stale LATEST must not dangle
+    assert mgr.latest_step() is None
+
+
+def test_checkpoint_latest_survives_gced_pointer(tmp_path, rng):
+    """A LATEST file pointing at a directory _gc removed must fall back to
+    the newest surviving step, not hand restore() a dangling path."""
+    import shutil
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = _tree(rng)
+    for step in (1, 2, 3):
+        mgr.save(step, tree)
+    assert mgr.latest_step() == 3
+    shutil.rmtree(tmp_path / "step_000000003")   # simulate external GC
+    assert mgr.latest_step() == 2
+    out = mgr.restore(jax.tree.map(jnp.zeros_like, tree),
+                      step=mgr.latest_step())
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_checkpoint_restore_with_new_sharding(tmp_path, rng):
     """Elastic restore: same bytes, different target sharding (1-device
     'mesh' here; the mechanism is sharding-agnostic device_put)."""

@@ -20,9 +20,16 @@ Rules (per row, matched by name across the two files):
   * overlap rows — name contains "overlap" (higher is better, but the
     derived value is a RATIO OF WALL-CLOCK TIMES, so it inherits runner
     noise) — regress when `derived` drops by more than --time-threshold.
-  * step-time rows — every matched row — regress when `us_per_call` rises
-    by more than --time-threshold (default 10%), relative. Rows faster
-    than --min-us (default 50us) are skipped: timer noise, not signal.
+  * resilience rows — name contains "resilience/" — derived is
+    LOWER-is-better (steps replayed after a restore, degraded-mode
+    step-time ratio): regress when `derived` RISES by more than
+    --hit-threshold (deterministic rows) or --time-threshold ("ratio"
+    rows, timing-derived). Their us columns (restore wall, degraded step
+    time) include jit recompiles and are informational only.
+  * step-time rows — every other matched row — regress when `us_per_call`
+    rises by more than --time-threshold (default 10%), relative. Rows
+    faster than --min-us (default 50us) are skipped: timer noise, not
+    signal.
 Rows present on one side only are reported as warnings, never failures
 (benchmarks come and go across PRs). Exit code 1 iff any regression.
 
@@ -40,6 +47,7 @@ HIT_MARKER = "hit"
 OVERLAP_MARKER = "overlap"
 BYTES_MARKER = "bytes"
 POOLED_EXCHANGE_MARKER = "pooled_exchange"
+RESILIENCE_MARKER = "resilience/"
 
 
 def load_rows(path: str) -> dict[str, tuple[float, float]]:
@@ -67,6 +75,20 @@ def diff(base: dict[str, tuple[float, float]],
             continue
         b_us, b_drv = base[name]
         c_us, c_drv = cur[name]
+        if RESILIENCE_MARKER in name:
+            # resilience rows: derived is LOWER-is-better (replayed steps,
+            # degraded-mode step-time ratio). Deterministic rows gate at
+            # the tight threshold; "ratio" rows are timing-derived, so
+            # they inherit the wall-clock one.
+            threshold = (time_threshold if "ratio" in name
+                         else hit_threshold)
+            if b_drv > 0:
+                rise = (c_drv - b_drv) / b_drv
+                if rise > threshold:
+                    regressions.append(
+                        f"{name}: derived {b_drv:.4g} -> {c_drv:.4g} "
+                        f"({rise:+.1%} rise > {threshold:.0%})")
+            continue
         is_hit = (HIT_MARKER in name or BYTES_MARKER in name
                   or POOLED_EXCHANGE_MARKER in name)
         is_overlap = OVERLAP_MARKER in name

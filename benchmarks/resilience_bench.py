@@ -1,0 +1,201 @@
+"""Resilience rows (train/fault_tolerance.py, docs/fault_tolerance.md).
+
+Two figures the fault-injection PR adds to the perf trajectory:
+
+  * `resilience/recovery_replay_steps` — a seeded reader-death soak over
+    the full chaos stack (pipeline + async cached tier + TrainState
+    bundle checkpoints): us = median restore wall time (tear the job down,
+    reload the newest intact bundle, reopen the pipeline), derived = steps
+    REPLAYED after the restore (fault step minus restored cursor). The
+    schedule, checkpoint cadence, and synthetic traffic are all seeded, so
+    the derived column is exactly reproducible and diff_bench gates it at
+    the deterministic threshold.
+  * `resilience/degraded_step_ratio` — what the DegradationManager's
+    strict_sync fallback costs while a flaky capacity tier heals: us =
+    degraded (no staging) step time, derived = degraded/async step-time
+    ratio. Both schedules are bit-identical, only the overlap is lost;
+    on runners where the staged shadow fetch is NOT actually hidden
+    (single-threaded CPU) the ratio can sit below 1 — the row tracks
+    run-over-run drift, not an absolute claim. Timing-derived, so
+    diff_bench gates it at the wall-clock threshold ("ratio" in the
+    name).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_smoke_config
+from repro.core.cache import CachedEmbeddingBagCollection
+from repro.core.design_space import test_suite_config
+from repro.core.dlrm import dlrm_param_specs
+from repro.core.embedding import EmbeddingBagCollection
+from repro.data.pipeline import DataPipeline
+from repro.data.synthetic import bounded_zipf_rows, make_dlrm_batch
+from repro.nn.params import init_params
+from repro.optim.optimizers import adagrad
+from repro.train.checkpoint import CheckpointManager
+from repro.train.fault_tolerance import (FaultInjector, FaultSpec,
+                                         PreemptionHandler, TrainState,
+                                         restore_train_state, run_chaos_loop,
+                                         save_train_state)
+from repro.train.steps import (build_async_cached_dlrm_train_step,
+                               cached_dlrm_init_state)
+
+N_STEPS = 8
+BATCH = 8
+FAULT_STEP = 5          # reader killed producing batch 5
+CHECKPOINT_EVERY = 2
+
+
+def _batch_raw(cfg, ebc, t):
+    raw = make_dlrm_batch(cfg, BATCH, step=t)
+    return {"dense": raw["dense"],
+            "idx": np.asarray(ebc.offset_indices(jnp.asarray(raw["idx"]))),
+            "label": raw["label"]}
+
+
+def recovery_bench(tmpdir):
+    """Reader death at a seeded step; measure the restore path."""
+    cfg = get_smoke_config("dlrm-m1")
+    ebc = EmbeddingBagCollection.build(cfg, n_shards=1,
+                                      strategy="replicated")
+    params0 = init_params(dlrm_param_specs(cfg, ebc), jax.random.PRNGKey(0))
+    opt = adagrad(0.01)
+    inj = FaultInjector([FaultSpec("pipeline.batch", FAULT_STEP, "kill")])
+    mgr = CheckpointManager(tmpdir, keep=3, injector=inj)
+    job: dict = {}
+    steps_run = [0]
+
+    def fresh():
+        cc = CachedEmbeddingBagCollection.build(cfg, cache_rows=256)
+        cc = dataclasses.replace(cc, injector=inj)
+        dense = {"bottom": params0["bottom"], "top": params0["top"]}
+        cstate = cached_dlrm_init_state(cc, opt, params0)
+        astate = cc.init_async_state(params0["emb"]["mega"])
+        return cc, dense, cstate, astate
+
+    def restore_cb():
+        if job.get("pipe") is not None:
+            job["pipe"].close()
+        cc, dense, cstate, astate = fresh()
+        example = TrainState(dense, cstate, cc.state_dict(astate), 0)
+        try:
+            ts = restore_train_state(mgr, example)
+            astate = cc.load_state_dict(ts.cache)
+            dense, cstate, start = ts.params, ts.opt_state, ts.step
+        except FileNotFoundError:
+            start = 0
+        job.update(cc=cc, dense=dense, cstate=cstate, astate=astate,
+                   step=build_async_cached_dlrm_train_step(cfg, cc, opt),
+                   pipe=DataPipeline(lambda t: _batch_raw(cfg, ebc, t),
+                                     prefetch=2, start_step=start,
+                                     injector=inj))
+        return start
+
+    def save_cb(step):
+        save_train_state(mgr, TrainState(
+            job["dense"], job["cstate"], job["cc"].state_dict(job["astate"]),
+            step))
+
+    def step_fn(step):
+        t, raw = next(job["pipe"])
+        steps_run[0] += 1
+        batch = {"dense": jnp.asarray(raw["dense"]), "idx": raw["idx"],
+                 "label": jnp.asarray(raw["label"])}
+        peek = job["pipe"].peek(0) if step + 1 < N_STEPS else None
+        nxt = None
+        if peek is not None:
+            nxt = {"dense": jnp.asarray(peek["dense"]), "idx": peek["idx"],
+                   "label": jnp.asarray(peek["label"])}
+        dense, cstate, m = job["step"](
+            job["dense"], job["cstate"], job["astate"], batch,
+            jnp.asarray(step, jnp.int32), next_batch=nxt)
+        jax.block_until_ready(m["loss"])
+        job["dense"], job["cstate"] = dense, cstate
+
+    rep = run_chaos_loop(step_fn, N_STEPS, save_cb=save_cb,
+                         restore_cb=restore_cb,
+                         checkpoint_every=CHECKPOINT_EVERY,
+                         preemption=PreemptionHandler(signals=()),
+                         injector=inj)
+    job["pipe"].close()
+    replayed = steps_run[0] - N_STEPS
+    wall_us = float(np.median(rep.recovery_s)) * 1e6 if rep.recovery_s \
+        else 0.0
+    emit("resilience/recovery_replay_steps", wall_us, replayed)
+
+
+def degraded_ratio_bench():
+    """strict_sync (degraded) vs async step time on the SAME builder.
+
+    Same config scale as cache_bench.overlap_sweep (the smoke config's
+    step is host-planning-dominated, which hides the overlap): hash 200k
+    x 2 tables, batch 1024, 10% cache. Degraded mode IS the driver
+    passing next_batch=None — same builder, same bits, no staging."""
+    cfg = test_suite_config(n_dense=64, n_sparse=2, hash_size=200_000,
+                            mlp_width=256, mlp_layers=2, embed_dim=32)
+    ebc = EmbeddingBagCollection.build(cfg, n_shards=1,
+                                      strategy="cached_host")
+    params = init_params(dlrm_param_specs(cfg, ebc), jax.random.PRNGKey(0))
+    opt = adagrad(0.01)
+    warm, measure, batch, lookups = 3, 7, 1024, 8
+
+    def traffic(step):
+        rng = np.random.RandomState(1000 + step)
+        idx = np.empty((batch, 2, lookups), np.int32)
+        for t in range(2):
+            idx[:, t, :] = bounded_zipf_rows(
+                rng, cfg.hash_sizes[t], batch * lookups, 1.05
+            ).reshape(batch, lookups)
+        off = np.asarray(ebc.plan.table_offsets, np.int32)
+        return idx + off[None, :, None]
+
+    rng = np.random.RandomState(7)
+    batches = [{"dense": jnp.asarray(rng.randn(batch, cfg.n_dense_features),
+                                     jnp.float32),
+                "idx": traffic(t),
+                "label": jnp.asarray(rng.rand(batch) > 0.5, jnp.float32)}
+               for t in range(warm + measure + 1)]
+
+    def run(overlapped: bool) -> float:
+        cc = CachedEmbeddingBagCollection.build(
+            cfg, cache_rows=int(ebc.plan.total_rows * 0.10))
+        dense = {"bottom": params["bottom"], "top": params["top"]}
+        cstate = cached_dlrm_init_state(cc, opt, params)
+        astate = cc.init_async_state(params["emb"]["mega"])
+        step = build_async_cached_dlrm_train_step(cfg, cc, opt)
+        times = []
+        for t in range(warm + measure):
+            nxt = batches[t + 1] if overlapped else None
+            t0 = time.perf_counter()
+            dense_, cstate_, m = step(dense, cstate, astate, batches[t],
+                                      jnp.asarray(t, jnp.int32),
+                                      next_batch=nxt)
+            jax.block_until_ready(m["loss"])
+            if t >= warm:
+                times.append(time.perf_counter() - t0)
+            dense, cstate = dense_, cstate_
+        times.sort()
+        return times[len(times) // 2]
+
+    t_async = run(True)
+    t_degraded = run(False)
+    emit("resilience/degraded_step_ratio", t_degraded * 1e6,
+         t_degraded / t_async)
+
+
+def main():
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        recovery_bench(d)
+    degraded_ratio_bench()
+
+
+if __name__ == "__main__":
+    main()

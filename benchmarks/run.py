@@ -16,7 +16,7 @@ import traceback
 
 from benchmarks import (cache_bench, fig6_access, fig10_features, fig11_batch,
                         fig12_hash, fig13_mlp, fig14_placement, kernels_bench,
-                        table3_prod, tablewise_bench)
+                        resilience_bench, table3_prod, tablewise_bench)
 from benchmarks.common import ROWS, header
 
 
@@ -39,6 +39,7 @@ def main() -> None:
         ("fig1/14 placement", fig14_placement.main),
         ("cache tier (section IV-B)", cache_bench.main),
         ("tablewise hybrid parallelism", tablewise_bench.main),
+        ("resilience / fault recovery", resilience_bench.main),
     ]
     if args.only:
         sections = [(n, f) for n, f in sections

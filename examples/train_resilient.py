@@ -1,88 +1,163 @@
-"""End-to-end resilient training driver (deliverable b): trains a ~100M-class
-reduced LM for a few hundred steps with checkpointing, a simulated mid-run
-preemption, and an elastic restore.
+"""End-to-end crash-consistent training under chaos (docs/fault_tolerance.md).
 
-    PYTHONPATH=src python examples/train_resilient.py
+Trains the cached DLRM smoke config for 40 steps while a seeded fault
+schedule kills the reader thread, injects a transient capacity-fetch burst
+(retries exhaust -> degradation to strict_sync -> promotion back), preempts
+the loop mid-run, and tears a checkpoint leaf after its atomic publish.
+Every failure restores the TrainState bundle — dense params + optimizer +
+cache tier state_dict + pipeline cursor — from the newest INTACT checkpoint
+and replays. The exit assertion is the chaos invariant: final losses and
+the materialized embedding tier are BIT-EQUAL to a fault-free run.
+
+    JAX_PLATFORMS=cpu PYTHONPATH=src python examples/train_resilient.py
 """
+import dataclasses
 import shutil
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.data import make_lm_batch
-from repro.data.pipeline import ShardedLoader
-from repro.models import lm_param_specs
+from repro.core.cache import CachedEmbeddingBagCollection
+from repro.core.dlrm import dlrm_param_specs
+from repro.core.embedding import EmbeddingBagCollection
+from repro.data.pipeline import DataPipeline
+from repro.data.synthetic import make_dlrm_batch
 from repro.nn.params import init_params
-from repro.optim import adamw
-from repro.train import CheckpointManager, PreemptionHandler, \
-    StragglerDetector
-from repro.train.fault_tolerance import run_resilient_loop
-from repro.train.steps import build_lm_train_step
+from repro.optim import adagrad
+from repro.train import (CheckpointManager, DegradationManager, FaultInjector,
+                         FaultSpec, PreemptionHandler, RetryPolicy,
+                         TrainState, restore_train_state, run_chaos_loop,
+                         save_train_state)
+from repro.train.steps import (build_async_cached_dlrm_train_step,
+                               cached_dlrm_init_state)
 
-CKPT = "runs/example_ckpt"
+CKPT = "runs/example_chaos_ckpt"
+N_STEPS = 40
+CHECKPOINT_EVERY = 8
+
+#: the mid-run chaos: reader death, a transient-fetch burst (exhausts the
+#: retry budget once, triggering a demotion to strict_sync), a preemption,
+#: and a torn checkpoint leaf (caught by the per-leaf CRC on restore)
+SCHEDULE = [
+    FaultSpec("pipeline.batch", 9, "kill"),
+    FaultSpec("cache.fetch", 30, "error"),
+    FaultSpec("cache.fetch", 31, "error"),
+    FaultSpec("cache.fetch", 32, "error"),
+    FaultSpec("loop.step", 24, "preempt"),
+    FaultSpec("checkpoint.write", 3, "torn", arg=1),
+]
 
 
 def main():
     shutil.rmtree(CKPT, ignore_errors=True)
-    cfg = get_smoke_config("stablelm-1.6b")
-    params = init_params(lm_param_specs(cfg), jax.random.PRNGKey(0))
-    opt = adamw(1e-3)
-    state = opt.init(params)
-    step_fn = jax.jit(build_lm_train_step(cfg, opt))
+    cfg = get_smoke_config("dlrm-m1")
+    ebc = EmbeddingBagCollection.build(cfg, n_shards=1,
+                                      strategy="replicated")
+    params0 = init_params(dlrm_param_specs(cfg, ebc), jax.random.PRNGKey(0))
+    opt = adagrad(0.01)
 
-    loader = ShardedLoader(lambda s, seed: make_lm_batch(cfg, 8, 64, s, seed),
-                           global_batch=8)
-    pipe = loader.pipeline(prefetch=2)
-    ckpt = CheckpointManager(CKPT)
-    preempt = PreemptionHandler(signals=())
-    straggler = StragglerDetector()
-    losses = []
+    def batch(t):
+        raw = make_dlrm_batch(cfg, 8, step=t)
+        return {"dense": raw["dense"],
+                "idx": np.asarray(ebc.offset_indices(
+                    jnp.asarray(raw["idx"]))),
+                "label": raw["label"]}
 
-    def one(step):
-        nonlocal params, state
-        _, b = next(pipe)
-        b = {k: jnp.asarray(v) for k, v in b.items()}
-        params, state, m = step_fn(params, state, b,
-                                   jnp.asarray(step, jnp.int32))
-        losses.append(float(m["loss"]))
-        if step == 60:
-            print("-> simulating SIGTERM preemption at step 60")
-            preempt.trigger()
+    def dev(raw):
+        return {"dense": jnp.asarray(raw["dense"]), "idx": raw["idx"],
+                "label": jnp.asarray(raw["label"])}
 
-    def save(step):
-        ckpt.save(step, {"p": params, "s": state}, async_=True)
+    # ---- fault-free oracle ------------------------------------------------
+    def oracle():
+        cc = CachedEmbeddingBagCollection.build(cfg, cache_rows=256)
+        dense = {"bottom": params0["bottom"], "top": params0["top"]}
+        cstate = cached_dlrm_init_state(cc, opt, params0)
+        astate = cc.init_async_state(params0["emb"]["mega"])
+        step = build_async_cached_dlrm_train_step(cfg, cc, opt)
+        losses = {}
+        for t in range(N_STEPS):
+            nxt = dev(batch(t + 1)) if t + 1 < N_STEPS else None
+            dense, cstate, m = step(dense, cstate, astate, dev(batch(t)),
+                                    jnp.asarray(t, jnp.int32),
+                                    next_batch=nxt)
+            losses[t] = float(m["loss"])
+        mega, accum = cc.materialize_async(astate)
+        return losses, np.asarray(mega), np.asarray(accum)
+
+    want_l, want_m, want_a = oracle()
+    print(f"oracle: {N_STEPS} fault-free steps, "
+          f"loss {want_l[0]:.4f} -> {want_l[N_STEPS - 1]:.4f}")
+
+    # ---- chaos run --------------------------------------------------------
+    inj = FaultInjector(SCHEDULE)
+    retry = RetryPolicy(max_retries=2, backoff_s=1e-4)
+    deg = DegradationManager(demote_after=1, promote_after=4)
+    mgr = CheckpointManager(CKPT, keep=4, injector=inj)
+    losses: dict[int, float] = {}
+    job: dict = {}
+
+    def restore_cb():
+        if job.get("pipe") is not None:
+            job["pipe"].close()
+        cc = CachedEmbeddingBagCollection.build(cfg, cache_rows=256)
+        cc = dataclasses.replace(cc, injector=inj, retry=retry)
+        dense = {"bottom": params0["bottom"], "top": params0["top"]}
+        cstate = cached_dlrm_init_state(cc, opt, params0)
+        astate = cc.init_async_state(params0["emb"]["mega"])
+        example = TrainState(dense, cstate, cc.state_dict(astate), 0)
+        try:
+            ts = restore_train_state(mgr, example)
+            astate = cc.load_state_dict(ts.cache)
+            dense, cstate, start = ts.params, ts.opt_state, ts.step
+            print(f"-> restored step {ts.step} "
+                  f"(intact checkpoint: {mgr.last_restored_step})")
+        except FileNotFoundError:
+            start = 0
+        job.update(cc=cc, dense=dense, cstate=cstate, astate=astate,
+                   step=build_async_cached_dlrm_train_step(cfg, cc, opt),
+                   pipe=DataPipeline(batch, prefetch=2, start_step=start,
+                                     injector=inj))
+        return start
+
+    def save_cb(step):
+        save_train_state(mgr, TrainState(
+            job["dense"], job["cstate"],
+            job["cc"].state_dict(job["astate"]), step))
         print(f"   checkpoint @ step {step}")
 
-    last = run_resilient_loop(one, 200, save, checkpoint_every=50,
-                              preemption=preempt, straggler=straggler)
-    ckpt.wait()
-    pipe.close()
-    print(f"phase 1 stopped at step {last} (preempted), "
-          f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    def step_fn(step):
+        t, raw = next(job["pipe"])
+        assert t == step, (t, step)
+        nxt = None
+        if not deg.degraded and step + 1 < N_STEPS:
+            peek = job["pipe"].peek(0)
+            nxt = dev(peek) if peek is not None else None
+        dense, cstate, m = job["step"](
+            job["dense"], job["cstate"], job["astate"], dev(raw),
+            jnp.asarray(step, jnp.int32), next_batch=nxt)
+        job["dense"], job["cstate"] = dense, cstate
+        losses[step] = float(m["loss"])
 
-    # ---- elastic restart: fresh process state, resume from LATEST ----
-    params2 = init_params(lm_param_specs(cfg), jax.random.PRNGKey(1))
-    state2 = opt.init(params2)
-    blob = ckpt.restore({"p": params2, "s": state2})
-    params2, state2 = blob["p"], blob["s"]
-    start = ckpt.latest_step()
-    pipe2 = loader.pipeline(prefetch=2, start_step=start)
+    rep = run_chaos_loop(step_fn, N_STEPS, save_cb=save_cb,
+                         restore_cb=restore_cb,
+                         checkpoint_every=CHECKPOINT_EVERY,
+                         preemption=PreemptionHandler(signals=()),
+                         injector=inj, degradation=deg)
+    job["pipe"].close()
+    mega, accum = job["cc"].materialize_async(job["astate"])
 
-    def one2(step):
-        nonlocal params2, state2
-        _, b = next(pipe2)
-        b = {k: jnp.asarray(v) for k, v in b.items()}
-        params2, state2, m = step_fn(params2, state2, b,
-                                     jnp.asarray(step, jnp.int32))
-        losses.append(float(m["loss"]))
+    fired = ", ".join(f"{s}[{at}]={k}" for s, at, k in inj.fired)
+    print(f"chaos: fired {fired}")
+    print(f"chaos: {rep.restarts} restarts, {rep.degraded_steps} degraded "
+          f"steps, {deg.demotions} demotions / {deg.promotions} promotions")
 
-    last = run_resilient_loop(one2, 150, lambda s: None, 1000,
-                              start_step=start)
-    pipe2.close()
-    print(f"phase 2 resumed from {start}, ended at {last}; "
-          f"final loss {losses[-1]:.3f} (start {losses[0]:.3f})")
-    assert losses[-1] < losses[0], "loss should decrease end to end"
+    assert losses == want_l, "losses diverged from the fault-free oracle"
+    np.testing.assert_array_equal(np.asarray(mega), want_m)
+    np.testing.assert_array_equal(np.asarray(accum), want_a)
+    assert rep.restarts >= 2, "the schedule should have forced restarts"
+    print("OK: chaos run matches the fault-free oracle bit-for-bit")
 
 
 if __name__ == "__main__":

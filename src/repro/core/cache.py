@@ -31,6 +31,7 @@ split as CacheEmbedding's ChunkParamMgr and MTrainS's tier manager).
 from __future__ import annotations
 
 import dataclasses
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -313,6 +314,36 @@ def _chunked_shadow_fetch(capacity: jax.Array, cap_accum: jax.Array,
     return shadow, shadow_accum, src_pos
 
 
+def _fetch_guard(injector, retry) -> int:
+    """Fire the "cache.fetch" fault-injection site with bounded
+    retry-with-backoff (docs/fault_tolerance.md).
+
+    Stands in front of every capacity-tier fetch dispatch: a scheduled
+    transient fault (any exception with a truthy `transient` attribute —
+    duck-typed so core/ never imports train/fault_tolerance) is retried up
+    to `retry.max_retries` times with `retry.sleep(attempt)` backoff;
+    exhaustion or a non-transient fault propagates to the driver, whose
+    DegradationManager decides whether to fall back to the strict_sync
+    schedule. Crucially the guard sits BEFORE any host-map mutation of the
+    admission path it protects, so a propagated fault leaves the tier
+    consistent and the step can simply be replayed. Returns the number of
+    retries burned (0 when no injector is armed or nothing fired)."""
+    if injector is None:
+        return 0
+    attempt = 0
+    while True:
+        try:
+            injector.fire("cache.fetch")
+        except Exception as e:
+            if not getattr(e, "transient", False) or retry is None \
+                    or attempt >= retry.max_retries:
+                raise
+            attempt += 1
+            retry.sleep(attempt)
+            continue
+        return attempt
+
+
 @dataclasses.dataclass(frozen=True)
 class CachedEmbeddingBagCollection:
     """EmbeddingBagCollection whose device working set is a hot-row cache.
@@ -335,6 +366,12 @@ class CachedEmbeddingBagCollection:
                                # rows: >1 coalesces the sorted miss list
                                # into contiguous blocks (one DMA descriptor
                                # per block); 1 = per-row transfers
+    injector: Any = None       # train.fault_tolerance.FaultInjector firing
+                               # the "cache.fetch" site ahead of every
+                               # capacity-tier fetch dispatch (tests/chaos)
+    retry: Any = None          # RetryPolicy (duck-typed: max_retries +
+                               # sleep) bounding transient-fault retries in
+                               # `_fetch_guard`; None = fail fast
 
     @classmethod
     def build(cls, cfg: DLRMConfig, cache_rows: int | None = None,
@@ -433,6 +470,9 @@ class CachedEmbeddingBagCollection:
         n = len(missing)
         if n == 0:
             return 0
+        # fault-injection gate BEFORE any host-map mutation: a propagated
+        # transient fault leaves the tier consistent for a step replay
+        _fetch_guard(self.injector, self.retry)
         slots, victims = _pick_slots(
             state.slot_row, state.freq, n, protect,
             f"the batch working set exceeds cache_rows={state.cache_rows};"
@@ -768,6 +808,9 @@ class CachedEmbeddingBagCollection:
             wb_mask, evicted_rows, -1)
         src_pos = None
         if n:
+            # fault gate first: staged plans that die here leave the maps
+            # unflipped and the queue intact (the batch re-plans at take)
+            _fetch_guard(self.injector, self.retry)
             # fetch into a fresh shadow slab — reads the tiers only, so it
             # overlaps the in-flight batch's device compute
             if self.fetch_chunk > 1:
@@ -1150,6 +1193,12 @@ class MultiHostCachedEmbeddingBagCollection:
                                # rows: >1 coalesces each (host, owner)
                                # message's sorted rows into contiguous
                                # blocks (booked in RouteStats.fetch_chunks)
+    injector: Any = None       # FaultInjector firing "cache.fetch" once
+                               # per planned global batch (before any host
+                               # map mutates — a fault leaves plan_step
+                               # cleanly replayable)
+    retry: Any = None          # RetryPolicy for transient faults, as in
+                               # the single-host tier
 
     @classmethod
     def build(cls, cfg: DLRMConfig, n_hosts: int,
@@ -1266,6 +1315,9 @@ class MultiHostCachedEmbeddingBagCollection:
         from repro.kernels.sparse_plan import (build_sparse_plan_host,
                                                split_plan_by_host,
                                                split_plan_by_owner)
+        # fault gate before ANY mutation (tick/EMA/maps): a propagated
+        # transient fault makes this call a clean no-op to replay
+        _fetch_guard(self.injector, self.retry)
         idx = np.asarray(idx)
         b, f, lk = idx.shape
         hn = self.n_hosts
@@ -1429,6 +1481,7 @@ class MultiHostCachedEmbeddingBagCollection:
         single-host `prefetch`). Returns rows admitted."""
         from repro.kernels.sparse_plan import (build_sparse_plan_host,
                                                split_plan_by_host)
+        _fetch_guard(self.injector, self.retry)
         idx = np.asarray(idx)
         b, f, _ = idx.shape
         hn = self.n_hosts

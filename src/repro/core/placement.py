@@ -250,6 +250,40 @@ def frequency_reorder(table_offsets: Sequence[int],
     return remap, inverse
 
 
+def elastic_table_remap(old_plan: PlacementPlan, new_plan: PlacementPlan,
+                        hash_sizes: Sequence[int]
+                        ) -> tuple[np.ndarray, np.ndarray]:
+    """Row worklist moving a mega table between two placements of the SAME
+    tables (elastic restore after host loss: the table_wise bin-pack was
+    re-run for the surviving owner count, so every table's row block moved
+    to a new global offset).
+
+    Args:
+      old_plan / new_plan: placements sharing `hash_sizes` (any strategy —
+        only `table_offsets` is consulted).
+      hash_sizes: logical (unpadded) row count of each table.
+
+    Returns:
+      (src_rows, dst_rows): int64 arrays; copying
+      ``new_mega[dst_rows] = old_mega[src_rows]`` (and likewise for the
+      AdaGrad accumulator) re-scatters every logical row under the new
+      placement. Padding rows are never moved — they are zero in both
+      layouts and unreachable by construction.
+    """
+    if len(old_plan.table_offsets) != len(hash_sizes) or \
+            len(new_plan.table_offsets) != len(hash_sizes):
+        raise ValueError(
+            "elastic_table_remap needs plans over the same tables: "
+            f"{len(old_plan.table_offsets)} vs {len(new_plan.table_offsets)}"
+            f" vs {len(hash_sizes)} tables")
+    src, dst = [], []
+    for t, h in enumerate(hash_sizes):
+        rows = np.arange(h, dtype=np.int64)
+        src.append(old_plan.table_offsets[t] + rows)
+        dst.append(new_plan.table_offsets[t] + rows)
+    return np.concatenate(src), np.concatenate(dst)
+
+
 def _contiguous(hash_sizes, pad_mult: int):
     offsets, off = [], 0
     for h in hash_sizes:

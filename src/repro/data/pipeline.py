@@ -51,9 +51,15 @@ class DataPipeline:
     def __init__(self, gen: Callable[[int], dict[str, np.ndarray]],
                  prefetch: int = 2, start_step: int = 0,
                  transform: Callable[[dict[str, np.ndarray]],
-                                              dict[str, np.ndarray]] | None = None):
+                                              dict[str, np.ndarray]] | None = None,
+                 injector=None):
+        # `injector` (train.fault_tolerance.FaultInjector) fires the
+        # "pipeline.batch" site inside the worker once per produced batch:
+        # an "error"/"kill" spec is the reader-thread-death fault, which
+        # surfaces to the consumer through the failure contract above
         self._gen = gen
         self._transform = transform
+        self._injector = injector
         self._q: queue.Queue = queue.Queue(maxsize=prefetch)
         self._buf: collections.deque = collections.deque()   # peeked batches
         self._failed: BaseException | None = None   # sticky failure for next()
@@ -69,6 +75,8 @@ class DataPipeline:
                 batch = self._gen(step)
                 if self._transform is not None:
                     batch = self._transform(batch)
+                if self._injector is not None:
+                    self._injector.fire("pipeline.batch", step=step)
                 while not self._stop.is_set():
                     try:
                         self._q.put((step, batch), timeout=0.1)
@@ -188,8 +196,10 @@ class ShardedLoader:
         return {k: v[lo:hi] for k, v in full.items()}
 
     def pipeline(self, prefetch: int = 2, start_step: int = 0,
-                 transform: Callable | None = None) -> DataPipeline:
-        return DataPipeline(self.host_slice, prefetch, start_step, transform)
+                 transform: Callable | None = None,
+                 injector=None) -> DataPipeline:
+        return DataPipeline(self.host_slice, prefetch, start_step, transform,
+                            injector=injector)
 
 
 def dedup_indices_hook(table_offsets: Sequence[int], key: str = "idx",

@@ -27,9 +27,11 @@ from repro.nn.params import init_params
 from repro.nn.sharding import TRAIN_RULES
 from repro.optim.optimizers import adagrad, adamw
 from repro.train.checkpoint import CheckpointManager
-from repro.train.fault_tolerance import (PreemptionHandler,
-                                         StragglerDetector,
-                                         run_resilient_loop)
+from repro.train.fault_tolerance import (FaultInjector, PreemptionHandler,
+                                         StragglerDetector, TrainState,
+                                         restore_train_state,
+                                         run_chaos_loop, run_resilient_loop,
+                                         save_train_state)
 from repro.train.steps import (build_dlrm_train_step, build_lm_train_step,
                                dlrm_init_state)
 
@@ -47,6 +49,15 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--chaos", action="store_true",
+                    help="run under a seeded fault schedule (reader death, "
+                         "torn checkpoints, preemption) with crash-"
+                         "consistent recovery — docs/fault_tolerance.md")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="seed for the fault schedule (same seed => same "
+                         "schedule)")
+    ap.add_argument("--chaos-faults", type=int, default=3,
+                    help="number of scheduled faults over the run")
     args = ap.parse_args()
 
     cfg = (get_smoke_config(args.arch) if args.smoke
@@ -54,15 +65,27 @@ def main():
     is_dlrm = isinstance(cfg, DLRMConfig)
     key = jax.random.PRNGKey(0)
 
-    ckpt = CheckpointManager(f"{args.ckpt_dir}/{args.arch}")
+    inj = None
+    if args.chaos:
+        # cache.fetch is excluded: this launcher drives the UNCACHED step
+        inj = FaultInjector.from_seed(
+            args.chaos_seed, args.steps, n_faults=args.chaos_faults,
+            sites=("pipeline.batch", "checkpoint.write", "loop.step"))
+        print("chaos schedule: " + ", ".join(
+            f"{s.site}[{s.at}]={s.kind}" for s in inj.schedule))
+    ckpt = CheckpointManager(f"{args.ckpt_dir}/{args.arch}", injector=inj)
     preempt = PreemptionHandler()
     straggler = StragglerDetector()
 
     if is_dlrm:
         ebc = EmbeddingBagCollection.build(cfg, n_shards=1)
-        params = init_params(dlrm_param_specs(cfg, ebc), key)
+        specs = dlrm_param_specs(cfg, ebc)
+        params = init_params(specs, key)
         opt = adagrad(0.01)
-        state = dlrm_init_state(ebc, opt, params)
+
+        def fresh_state(p):
+            return dlrm_init_state(ebc, opt, p)
+
         step_fn = jax.jit(build_dlrm_train_step(cfg, ebc, opt))
 
         def gen(step, seed):
@@ -71,15 +94,25 @@ def main():
                 jnp.asarray(raw["idx"])))
             return raw
     else:
-        params = init_params(lm_param_specs(cfg), key)
+        specs = lm_param_specs(cfg)
+        params = init_params(specs, key)
         opt = adamw(args.lr)
-        state = opt.init(params)
+
+        def fresh_state(p):
+            return opt.init(p)
+
         step_fn = jax.jit(build_lm_train_step(cfg, opt, TRAIN_RULES))
 
         def gen(step, seed):
             return make_lm_batch(cfg, args.batch, args.seq, step, seed)
 
+    state = fresh_state(params)
     loader = ShardedLoader(gen, args.batch)
+
+    if args.chaos:
+        return _chaos_main(args, inj, ckpt, preempt, loader, specs, key,
+                           fresh_state, step_fn)
+
     pipeline = loader.pipeline(prefetch=2)
 
     start = 0
@@ -111,6 +144,60 @@ def main():
     pipeline.close()
     print(f"done at step {last}; loss {losses[0]:.4f} -> {losses[-1]:.4f}; "
           f"stragglers flagged: {len(straggler.flagged_steps)}")
+
+
+def _chaos_main(args, inj, ckpt, preempt, loader, specs, key,
+                fresh_state, step_fn):
+    """--chaos: seeded fault schedule + crash-consistent recovery. Every
+    failure rebuilds the job from the newest INTACT TrainState bundle
+    (params + optimizer + pipeline cursor) and replays; losses stay
+    bit-equal to a fault-free run (tests/test_chaos.py proves the
+    invariant; this path demos it end-to-end on the launcher)."""
+    job: dict = {"pipe": None, "params": None, "state": None}
+    losses: dict[int, float] = {}
+
+    def restore_cb():
+        if job["pipe"] is not None:
+            job["pipe"].close()
+        params = init_params(specs, key)
+        state = fresh_state(params)
+        start = 0
+        try:
+            ts = restore_train_state(ckpt, TrainState(params, state, None, 0))
+            params, state, start = ts.params, ts.opt_state, ts.step
+            print(f"chaos: restored step {ts.step} "
+                  f"(intact checkpoint: {ckpt.last_restored_step})")
+        except FileNotFoundError:
+            pass
+        job.update(params=params, state=state,
+                   pipe=loader.pipeline(prefetch=2, start_step=start,
+                                        injector=inj))
+        return start
+
+    def save_cb(step):
+        save_train_state(ckpt, TrainState(job["params"], job["state"],
+                                          None, step))
+
+    def one_step(step):
+        t, batch = next(job["pipe"])
+        assert t == step, (t, step)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, state, metrics = step_fn(job["params"], job["state"], batch,
+                                         jnp.asarray(step, jnp.int32))
+        job["params"], job["state"] = params, state
+        losses[step] = float(metrics["loss"])
+        if step % args.log_every == 0:
+            print(f"step {step:5d} loss {losses[step]:.4f}")
+
+    rep = run_chaos_loop(one_step, args.steps, save_cb=save_cb,
+                         restore_cb=restore_cb,
+                         checkpoint_every=args.ckpt_every,
+                         preemption=preempt, injector=inj)
+    job["pipe"].close()
+    fired = ", ".join(f"{s}[{at}]={k}" for s, at, k in inj.fired)
+    print(f"chaos: fired {fired or 'nothing'}")
+    print(f"chaos done at step {rep.last_step}: {rep.restarts} restarts; "
+          f"loss {losses[0]:.4f} -> {losses[max(losses)]:.4f}")
 
 
 if __name__ == "__main__":

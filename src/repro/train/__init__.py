@@ -1,7 +1,23 @@
-from repro.train.checkpoint import CheckpointManager  # noqa: F401
+from repro.train.checkpoint import (  # noqa: F401
+    CheckpointCorruptionError,
+    CheckpointManager,
+)
 from repro.train.fault_tolerance import (  # noqa: F401
+    ChaosReport,
+    DegradationManager,
+    FaultInjector,
+    FaultSpec,
+    InjectedFault,
     PreemptionHandler,
+    RetryPolicy,
     StragglerDetector,
+    TrainState,
+    TransientFetchFault,
+    elastic_tablewise_repack,
+    restore_train_state,
+    run_chaos_loop,
+    run_resilient_loop,
+    save_train_state,
 )
 from repro.train.steps import (  # noqa: F401
     build_async_cached_dlrm_train_step,

@@ -9,12 +9,27 @@ Layout:  <dir>/step_000123/
 Fault-tolerance contract (paper section VII cites CPR/DeepFreeze):
   * save() is atomic: a step directory only becomes visible in LATEST after
     every leaf + manifest hit disk and fsync returns.
+  * every leaf carries a CRC-32 checksum in the manifest (computed over the
+    stored bytes); restore() verifies it before handing state back, so a
+    torn or bit-flipped leaf raises CheckpointCorruptionError instead of
+    silently loading garbage.
   * async=True runs the serialization in a background thread (training
     continues; the paper's throughput argument) — `wait()` joins before the
-    next save or shutdown.
+    next save or shutdown and RE-RAISES any failure the writer thread hit
+    (a swallowed write error would let the job truncate its own history).
+  * restore(step=None) walks BACKWARD through saved steps until one passes
+    verification — a corrupt newest checkpoint falls back to the previous
+    intact step (`last_restored_step` reports which one loaded).
   * restore(shardings=...) re-device_puts every leaf under NEW shardings, so
     a job restarted on a different mesh shape (elastic downscale after a
     node failure) resumes from the same global state.
+
+Fault injection (docs/fault_tolerance.md): pass a
+`train.fault_tolerance.FaultInjector` and `_write` fires the
+"checkpoint.write" site once per save — kind "error" makes the write fail
+(exercising the async re-raise path), kind "torn" corrupts one byte of a
+chosen leaf AFTER the atomic publish (a storage-level tear the atomicity
+protocol cannot see, which only the CRC verification catches).
 """
 from __future__ import annotations
 
@@ -22,11 +37,22 @@ import json
 import os
 import shutil
 import threading
+import zlib
 from typing import Any
 
 import jax
 import ml_dtypes
 import numpy as np
+
+
+class CheckpointCorruptionError(RuntimeError):
+    """A saved leaf failed CRC verification (torn write / bit rot)."""
+
+
+def _crc32(arr: np.ndarray) -> int:
+    """CRC-32 (zlib, IEEE polynomial — stdlib, no extra dependency) over
+    the array's stored bytes."""
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
 
 #: numpy can't serialize bf16 (np.save round-trips it as void16); store the
 #: raw bits as uint16 and record the logical dtype in the manifest.
@@ -43,29 +69,43 @@ def _flatten_with_paths(tree):
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3):
+    def __init__(self, directory: str, keep: int = 3, injector=None):
         self.directory = directory
         self.keep = keep
+        self.injector = injector           # FaultInjector ("checkpoint.write")
+        self.last_restored_step: int | None = None
         os.makedirs(directory, exist_ok=True)
         self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
 
     # -- save ---------------------------------------------------------------
 
     def save(self, step: int, tree: Any, async_: bool = False):
-        self.wait()
+        self.wait()                 # re-raises a failed previous async save
         # gather to host BEFORE handing off (device buffers may be donated)
         paths, leaves, treedef = _flatten_with_paths(tree)
         host_leaves = [np.asarray(x) for x in leaves]
 
         if async_:
             self._thread = threading.Thread(
-                target=self._write, args=(step, paths, host_leaves),
+                target=self._write_captured, args=(step, paths, host_leaves),
                 daemon=True)
             self._thread.start()
         else:
             self._write(step, paths, host_leaves)
 
+    def _write_captured(self, step: int, paths, host_leaves):
+        """Async-writer entry point: park any failure for wait() to
+        re-raise (a daemon thread's traceback otherwise just vanishes)."""
+        try:
+            self._write(step, paths, host_leaves)
+        except BaseException as e:  # noqa: BLE001 — surfaced by wait()
+            self._error = e
+
     def _write(self, step: int, paths, host_leaves):
+        spec = None
+        if self.injector is not None:       # "error" kind raises right here
+            spec = self.injector.fire("checkpoint.write", step=step)
         final = os.path.join(self.directory, f"step_{step:09d}")
         tmp = final + ".tmp"
         os.makedirs(tmp, exist_ok=True)
@@ -78,11 +118,20 @@ class CheckpointManager:
             np.save(os.path.join(tmp, fname), arr)
             manifest["leaves"].append({
                 "path": path, "file": fname,
-                "shape": list(arr.shape), "dtype": logical})
+                "shape": list(arr.shape), "dtype": logical,
+                "crc32": _crc32(arr)})
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
             f.flush()
             os.fsync(f.fileno())
+        if os.path.isdir(final):
+            # re-saving a step that already exists on disk (a replay after
+            # restore() fell back past a corrupt copy of it): os.replace
+            # cannot overwrite a non-empty directory, so drop the stale
+            # copy first. A crash in the window leaves no directory at
+            # this step — restore() falls back one step further, which is
+            # still crash-consistent (LATEST never points at the window).
+            shutil.rmtree(final)
         os.replace(tmp, final)
         latest_tmp = os.path.join(self.directory, "LATEST.tmp")
         with open(latest_tmp, "w") as f:
@@ -90,12 +139,31 @@ class CheckpointManager:
             f.flush()
             os.fsync(f.fileno())
         os.replace(latest_tmp, os.path.join(self.directory, "LATEST"))
+        if spec is not None and getattr(spec, "kind", None) == "torn":
+            # storage-level tear: the atomic publish SUCCEEDED but a leaf
+            # lost bits afterwards — only the CRC check can catch this
+            leaf = int(spec.arg or 0) % max(len(manifest["leaves"]), 1)
+            self._flip_byte(os.path.join(
+                final, manifest["leaves"][leaf]["file"]))
         self._gc()
+
+    @staticmethod
+    def _flip_byte(path: str):
+        """Corrupt the last byte of `path` in place (deterministic tear)."""
+        with open(path, "r+b") as f:
+            f.seek(-1, os.SEEK_END)
+            b = f.read(1)
+            f.seek(-1, os.SEEK_END)
+            f.write(bytes([b[0] ^ 0xFF]))
 
     def wait(self):
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(
+                f"async checkpoint save failed: {err!r}") from err
 
     def _gc(self):
         steps = sorted(d for d in os.listdir(self.directory)
@@ -125,20 +193,63 @@ class CheckpointManager:
             return None
         return int(steps[-1].split("_")[1])
 
+    def saved_steps(self) -> list[int]:
+        """All fully-published step numbers on disk, ascending."""
+        return sorted(
+            int(d.split("_")[1]) for d in os.listdir(self.directory)
+            if d.startswith("step_") and not d.endswith(".tmp"))
+
     def restore(self, example_tree: Any, step: int | None = None,
                 shardings: Any | None = None) -> Any:
         """example_tree fixes the pytree structure; shardings (optional,
         matching pytree of jax.sharding.Sharding) re-places leaves — pass the
-        NEW mesh's shardings for elastic restore."""
-        if step is None:
-            step = self.latest_step()
-            if step is None:
-                raise FileNotFoundError(f"no checkpoint in {self.directory}")
+        NEW mesh's shardings for elastic restore.
+
+        With `step=None`, candidate steps are tried NEWEST-FIRST and a
+        checkpoint whose leaves fail CRC verification (or whose files are
+        unreadable) is skipped — the fall-back-to-previous-intact-step
+        half of the recovery contract. `last_restored_step` records which
+        step actually loaded. An explicit `step` is strict: corruption
+        raises CheckpointCorruptionError. A structure mismatch between
+        example_tree and the manifest always raises (it is a caller bug,
+        not corruption — falling back would mask it)."""
+        if step is not None:
+            tree = self._restore_step(step, example_tree, shardings)
+            self.last_restored_step = step
+            return tree
+        candidates = self.saved_steps()[::-1]
+        if not candidates:
+            raise FileNotFoundError(f"no checkpoint in {self.directory}")
+        errors: list[tuple[int, Exception]] = []
+        for cand in candidates:
+            try:
+                tree = self._restore_step(cand, example_tree, shardings)
+            except (CheckpointCorruptionError, OSError,
+                    json.JSONDecodeError) as e:
+                errors.append((cand, e))
+                continue
+            self.last_restored_step = cand
+            return tree
+        raise CheckpointCorruptionError(
+            f"no intact checkpoint in {self.directory}: " +
+            "; ".join(f"step {s}: {e}" for s, e in errors))
+
+    def _restore_step(self, step: int, example_tree: Any,
+                      shardings: Any | None) -> Any:
         d = os.path.join(self.directory, f"step_{step:09d}")
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
         by_path = {e["path"]: e for e in manifest["leaves"]}
         paths, leaves, treedef = _flatten_with_paths(example_tree)
+        missing = [p for p in paths if p not in by_path]
+        extra = [p for p in by_path if p not in set(paths)]
+        if missing or extra:
+            raise ValueError(
+                f"checkpoint structure mismatch at step {step}: example "
+                f"tree leaves absent from the manifest: {missing or 'none'};"
+                f" manifest leaves absent from the example tree: "
+                f"{extra or 'none'} (did the model/optimizer/cache layout "
+                "change between save and restore?)")
         shard_leaves = (jax.tree.leaves(
             shardings, is_leaf=lambda s: isinstance(s, jax.sharding.Sharding))
             if shardings is not None else [None] * len(leaves))
@@ -146,6 +257,10 @@ class CheckpointManager:
         for path, leaf, sh in zip(paths, leaves, shard_leaves):
             entry = by_path[path]
             arr = np.load(os.path.join(d, entry["file"]))
+            if "crc32" in entry and _crc32(arr) != entry["crc32"]:
+                raise CheckpointCorruptionError(
+                    f"step {step} leaf {path!r} ({entry['file']}) failed "
+                    "CRC verification — torn write or bit rot")
             logical = entry["dtype"]
             if logical in _BITCAST:
                 arr = arr.view(ml_dtypes.bfloat16 if logical == "bfloat16"

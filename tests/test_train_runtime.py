@@ -15,7 +15,8 @@ from repro.optim import (adagrad, adamw, clip_by_global_norm, easgd_init,
 from repro.optim.compression import init_residual
 from repro.optim.easgd import replica_step
 from repro.train.checkpoint import CheckpointManager
-from repro.train.fault_tolerance import (PreemptionHandler,
+from repro.train.fault_tolerance import (FaultInjector, FaultSpec,
+                                         PreemptionHandler,
                                          StragglerDetector,
                                          run_resilient_loop)
 
@@ -99,6 +100,57 @@ def test_checkpoint_no_partial_visibility(tmp_path, rng):
     with pytest.raises(FileNotFoundError):
         mgr.restore({"x": jnp.zeros(2)})
 
+
+def test_checkpoint_resave_same_step_overwrites(tmp_path, rng):
+    """Re-saving a step that already exists on disk (replay after restore
+    fell back past a corrupt copy) must overwrite it, not crash on the
+    non-empty destination directory."""
+    mgr = CheckpointManager(str(tmp_path))
+    tree = _tree(rng)
+    mgr.save(1, tree)
+    tree2 = jax.tree.map(jnp.ones_like, tree)
+    mgr.save(1, tree2)
+    out = mgr.restore(jax.tree.map(jnp.zeros_like, tree), step=1)
+    for a, b in zip(jax.tree.leaves(tree2), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_async_save_error_surfaces_on_wait(tmp_path, rng):
+    """A failed async writer must NOT vanish into its daemon thread: the
+    parked exception re-raises on wait()."""
+    inj = FaultInjector([FaultSpec("checkpoint.write", 0, "error")])
+    mgr = CheckpointManager(str(tmp_path), injector=inj)
+    mgr.save(1, _tree(rng), async_=True)
+    with pytest.raises(RuntimeError, match="async checkpoint save failed"):
+        mgr.wait()
+    # the error is consumed: the manager is usable again afterwards
+    mgr.save(2, _tree(rng))
+    assert mgr.latest_step() == 2
+
+
+def test_checkpoint_async_save_error_surfaces_on_next_save(tmp_path, rng):
+    """...and on the NEXT save() call too (save() drains the in-flight
+    writer first), so a fire-and-forget loop cannot silently lose steps."""
+    inj = FaultInjector([FaultSpec("checkpoint.write", 0, "error")])
+    mgr = CheckpointManager(str(tmp_path), injector=inj)
+    mgr.save(1, _tree(rng), async_=True)
+    with pytest.raises(RuntimeError, match="async checkpoint save failed"):
+        mgr.save(2, _tree(rng))
+
+
+def test_checkpoint_restore_structure_mismatch_names_leaves(tmp_path, rng):
+    """Tree/manifest disagreement is a caller bug, not corruption: the
+    error must NAME the missing/extra leaf paths (the old code raised a
+    bare KeyError on the first absent path)."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree(rng))
+    bad = {"a": jnp.zeros((4, 3)), "b": {"c": jnp.zeros(7, jnp.bfloat16)},
+           "z": jnp.zeros(2)}
+    with pytest.raises(ValueError, match="structure mismatch") as ei:
+        mgr.restore(bad, step=1)
+    assert "z" in str(ei.value)          # in the example tree, not saved
+    assert "b/d" in str(ei.value)        # saved, not in the example tree
+
 # ---------------------------------------------------------------------------
 # fault tolerance loop
 # ---------------------------------------------------------------------------
@@ -118,6 +170,29 @@ def test_preemption_checkpoints_and_stops():
                               checkpoint_every=50, preemption=preempt)
     assert last == 5                     # stopped right after the signal
     assert saved == [5]                  # checkpoint-now on preemption
+
+
+def test_preemption_at_checkpoint_boundary_saves_once():
+    """A preemption landing exactly on a scheduled checkpoint step must
+    save ONCE — the old loop wrote the same step twice back to back."""
+    preempt = PreemptionHandler(signals=())
+    saved = []
+
+    def step_fn(step):
+        if step == 4:
+            preempt.trigger()            # step 5 is also a scheduled save
+
+    last = run_resilient_loop(step_fn, 100, lambda s: saved.append(s),
+                              checkpoint_every=5, preemption=preempt)
+    assert last == 5
+    assert saved == [5]                  # deduped, not [5, 5]
+
+
+def test_fault_injector_rejects_unknown_site_and_kind():
+    with pytest.raises(ValueError, match="site"):
+        FaultInjector([FaultSpec("no.such.site", 0, "error")])
+    with pytest.raises(ValueError, match="kind"):
+        FaultInjector([FaultSpec("loop.step", 0, "meteor")])
 
 
 def test_straggler_detection():

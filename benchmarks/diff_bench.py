@@ -26,6 +26,12 @@ Rules (per row, matched by name across the two files):
     --hit-threshold (deterministic rows) or --time-threshold ("ratio"
     rows, timing-derived). Their us columns (restore wall, degraded step
     time) include jit recompiles and are informational only.
+  * serve rows — name contains "serve/" — derived (hit/shed/degraded
+    rates, byte reductions, served counts) is DETERMINISTIC under the
+    seeded traffic + virtual clock but direction is row-specific, so any
+    relative move beyond --hit-threshold in EITHER direction regresses
+    (a deterministic rate that drifted means serving behaviour changed).
+    Their us columns are shared-runner wall times, informational only.
   * step-time rows — every other matched row — regress when `us_per_call`
     rises by more than --time-threshold (default 10%), relative. Rows
     faster than --min-us (default 50us) are skipped: timer noise, not
@@ -48,6 +54,7 @@ OVERLAP_MARKER = "overlap"
 BYTES_MARKER = "bytes"
 POOLED_EXCHANGE_MARKER = "pooled_exchange"
 RESILIENCE_MARKER = "resilience/"
+SERVE_MARKER = "serve/"
 
 
 def load_rows(path: str) -> dict[str, tuple[float, float]]:
@@ -75,6 +82,21 @@ def diff(base: dict[str, tuple[float, float]],
             continue
         b_us, b_drv = base[name]
         c_us, c_drv = cur[name]
+        if SERVE_MARKER in name:
+            # serving replay rows: the derived column is deterministic
+            # (seeded traffic, virtual clock) but its good direction is
+            # row-specific (hit rate up, shed rate down...), so ANY move
+            # beyond the deterministic threshold is a behaviour change.
+            # Checked before the hit branch — "serve/replay_hit_rate"
+            # would otherwise match the hit marker. us columns are wall
+            # times on shared runners, informational only.
+            if b_drv != 0:
+                delta = (c_drv - b_drv) / abs(b_drv)
+                if abs(delta) > hit_threshold:
+                    regressions.append(
+                        f"{name}: derived {b_drv:.4g} -> {c_drv:.4g} "
+                        f"({delta:+.1%} drift > ±{hit_threshold:.0%})")
+            continue
         if RESILIENCE_MARKER in name:
             # resilience rows: derived is LOWER-is-better (replayed steps,
             # degraded-mode step-time ratio). Deterministic rows gate at

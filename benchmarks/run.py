@@ -16,7 +16,8 @@ import traceback
 
 from benchmarks import (cache_bench, fig6_access, fig10_features, fig11_batch,
                         fig12_hash, fig13_mlp, fig14_placement, kernels_bench,
-                        resilience_bench, table3_prod, tablewise_bench)
+                        resilience_bench, serve_bench, table3_prod,
+                        tablewise_bench)
 from benchmarks.common import ROWS, header
 
 
@@ -40,6 +41,7 @@ def main() -> None:
         ("cache tier (section IV-B)", cache_bench.main),
         ("tablewise hybrid parallelism", tablewise_bench.main),
         ("resilience / fault recovery", resilience_bench.main),
+        ("serve traffic replay", serve_bench.main),
     ]
     if args.only:
         sections = [(n, f) for n, f in sections

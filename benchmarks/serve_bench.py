@@ -1,0 +1,175 @@
+"""Serving-tier traffic replay rows (serve/dlrm_engine.py, docs/serving.md).
+
+Zipf traffic with temporal drift plus a flash-crowd key churn phase,
+replayed through the overload-robust `DLRMServeEngine`. Four figures:
+
+  * `serve/replay_hit_rate` — steady-state replay (drifting Zipf, no
+    deadlines): us = wall per served request, derived = the cache
+    hit rate. Traffic is seeded and batch forming is host-deterministic,
+    so the derived column is exactly reproducible (ring-gated).
+  * `serve/replay_p99_latency` — same replay: us = measured p99
+    per-request latency (informational wall time), derived = requests
+    served (a determinism canary: any change means the replay changed).
+  * `serve/replay_shed_rate_4x` — flash-crowd churn offered at 4x the
+    engine's per-step service capacity on a VIRTUAL clock, bounded queue,
+    per-request deadlines: derived = shed rate (queue_full + deadline).
+    Every shed decision is clock arithmetic on the virtual clock —
+    deterministic, ring-gated.
+  * `serve/replay_degraded_fraction_chaos` — the steady replay under a
+    seeded `FaultInjector` schedule on `serve.fetch`: derived = fraction
+    of served requests flagged degraded (stale-snapshot responses).
+    Deterministic for a fixed seed, ring-gated.
+
+diff_bench gates `serve/` rows TWO-SIDED on the derived column (any
+drift in a deterministic rate is a behaviour change); us columns are
+shared-runner wall times, informational only.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_smoke_config
+from repro.core.cache import CachedEmbeddingBagCollection
+from repro.core.dlrm import dlrm_param_specs
+from repro.core.embedding import EmbeddingBagCollection
+from repro.data.synthetic import make_dlrm_batch
+from repro.launch.analysis import serve_replay_traffic
+from repro.nn.params import init_params
+from repro.serve import DLRMServeEngine, ServeRequest
+from repro.train.fault_tolerance import FaultInjector
+
+EXAMPLES = 4          # examples per request
+CACHE_ROWS = 256
+MAX_BATCH = 16        # engine dispatch slots
+MAX_QUEUE = 16
+
+
+class _VClock:
+    """Deterministic virtual clock: shed/deadline decisions become pure
+    arithmetic, so the derived columns survive runner noise."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def _build():
+    cfg = get_smoke_config("dlrm-m1")
+    ebc = EmbeddingBagCollection.build(cfg, n_shards=1,
+                                       strategy="replicated")
+    params = init_params(dlrm_param_specs(cfg, ebc), jax.random.PRNGKey(0))
+    return cfg, ebc, params
+
+
+def _request(cfg, ebc, uid: int, step: int, deadline=None,
+             flash: bool = False) -> ServeRequest:
+    """One seeded request: bounded-Zipf rows with a per-step drift of the
+    hot head; `flash` collapses traffic onto a small churned key set (the
+    flash-crowd phase — everyone hitting the same few items, and WHICH
+    items changes every few steps)."""
+    raw = make_dlrm_batch(cfg, EXAMPLES, step=step, zipf_alpha=1.05)
+    idx = np.asarray(raw["idx"]).copy()
+    for t, h in enumerate(cfg.hash_sizes):
+        col = (idx[:, t, :] + 3 * step) % h          # temporal drift
+        if flash:
+            col = (col % 8 + (step // 4) * 8) % h    # churned hot set
+        idx[:, t, :] = col
+    idx = np.asarray(ebc.offset_indices(idx))
+    return ServeRequest(uid, raw["dense"], idx, deadline=deadline)
+
+
+def replay_bench():
+    """Steady-state drifting-Zipf replay: hit rate + p99 latency rows,
+    plus the analytic serve-path byte reduction at the measured rates."""
+    cfg, ebc, params = _build()
+    cc = CachedEmbeddingBagCollection.build(cfg, cache_rows=CACHE_ROWS)
+    engine = DLRMServeEngine(params, cfg, cc, max_queue=MAX_QUEUE,
+                             max_batch=MAX_BATCH)
+    n_requests = 48
+    t0 = time.perf_counter()
+    for uid in range(n_requests):
+        engine.submit(_request(cfg, ebc, uid, uid))
+        if (uid + 1) % 2 == 0:        # 2 requests offered per engine step
+            engine.step()
+    engine.run()
+    wall = time.perf_counter() - t0
+    m = engine.metrics.snapshot()
+    hit = engine.cache_stats.hit_rate
+    emit("serve/replay_hit_rate", wall / max(m["served"], 1) * 1e6, hit)
+    emit("serve/replay_p99_latency", m["p99_latency"] * 1e6, m["served"])
+    traffic = serve_replay_traffic(
+        requests=m["served"], examples=EXAMPLES,
+        n_features=cfg.n_sparse_features, truncation=cfg.truncation,
+        embed_dim=cfg.embed_dim, hit_rate=hit)
+    emit("serve/replay_bytes_reduction", 0.0, traffic["uncached_vs_cached"])
+
+
+def overload_bench():
+    """Flash-crowd churn at 4x the per-step service capacity: 8 requests
+    (32 examples) offered per step vs MAX_BATCH=16 examples served, on a
+    bounded queue with per-request deadlines — derived = shed rate."""
+    cfg, ebc, params = _build()
+    cc = CachedEmbeddingBagCollection.build(cfg, cache_rows=CACHE_ROWS)
+    clock = _VClock()
+    engine = DLRMServeEngine(params, cfg, cc, max_queue=MAX_QUEUE,
+                             max_batch=MAX_BATCH, clock=clock,
+                             shed_slack=0.5)
+    uid = 0
+    t0 = time.perf_counter()
+    for step in range(12):
+        for _ in range(8):            # 4x offered load
+            engine.submit(_request(cfg, ebc, uid, step,
+                                   deadline=clock() + 2.5, flash=True))
+            uid += 1
+        engine.step()
+        clock.advance(1.0)
+    engine.run()
+    wall = time.perf_counter() - t0
+    m = engine.metrics.snapshot()
+    emit("serve/replay_shed_rate_4x", wall / max(m["submitted"], 1) * 1e6,
+         m["shed_rate"])
+
+
+def chaos_bench():
+    """Steady replay under a seeded serve.fetch fault schedule: derived =
+    degraded fraction (stale-snapshot responses / served)."""
+    cfg, ebc, params = _build()
+    cc = CachedEmbeddingBagCollection.build(cfg, cache_rows=CACHE_ROWS)
+    inj = FaultInjector.from_seed(13, 16, sites=("serve.fetch",),
+                                  n_faults=4)
+    clock = _VClock()
+    engine = DLRMServeEngine(params, cfg, cc, max_queue=MAX_QUEUE,
+                             max_batch=MAX_BATCH, clock=clock,
+                             injector=inj)
+    n_requests = 48
+    t0 = time.perf_counter()
+    for uid in range(n_requests):
+        engine.submit(_request(cfg, ebc, uid, uid))
+        if (uid + 1) % 2 == 0:
+            engine.step()
+            clock.advance(0.1)
+    engine.run()
+    wall = time.perf_counter() - t0
+    m = engine.metrics.snapshot()
+    emit("serve/replay_degraded_fraction_chaos",
+         wall / max(m["served"], 1) * 1e6, m["degraded_fraction"])
+
+
+def main():
+    """Run all serving replay rows."""
+    replay_bench()
+    overload_bench()
+    chaos_bench()
+
+
+if __name__ == "__main__":
+    main()

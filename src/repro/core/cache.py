@@ -314,9 +314,11 @@ def _chunked_shadow_fetch(capacity: jax.Array, cap_accum: jax.Array,
     return shadow, shadow_accum, src_pos
 
 
-def _fetch_guard(injector, retry) -> int:
-    """Fire the "cache.fetch" fault-injection site with bounded
-    retry-with-backoff (docs/fault_tolerance.md).
+def _fetch_guard(injector, retry, site: str = "cache.fetch") -> int:
+    """Fire a fault-injection `site` with bounded retry-with-backoff
+    (docs/fault_tolerance.md). Default site: "cache.fetch" (training);
+    the serving tier reuses the same guard with "serve.fetch" /
+    "serve.admit" (serve/dlrm_engine.py).
 
     Stands in front of every capacity-tier fetch dispatch: a scheduled
     transient fault (any exception with a truthy `transient` attribute —
@@ -333,7 +335,7 @@ def _fetch_guard(injector, retry) -> int:
     attempt = 0
     while True:
         try:
-            injector.fire("cache.fetch")
+            injector.fire(site)
         except Exception as e:
             if not getattr(e, "transient", False) or retry is None \
                     or attempt >= retry.max_retries:
@@ -342,6 +344,52 @@ def _fetch_guard(injector, retry) -> int:
             retry.sleep(attempt)
             continue
         return attempt
+
+
+@dataclasses.dataclass
+class StaleRowSnapshot:
+    """Read-only last-known-good row values for degrade-don't-die serving.
+
+    The serving tier records every row it successfully fetches from the
+    capacity tier; when a later fetch faults (or the circuit breaker is in
+    stale_only), misses resolve from this snapshot instead — zeros for rows
+    never seen. The tier is READ-ONLY in serving, so a recorded value can
+    never go stale relative to the capacity tier: "stale" responses differ
+    from the oracle only on never-seen (zero-filled) rows, which is exactly
+    the `degraded=True` contract (docs/serving.md).
+
+    Host-side numpy on purpose: the degraded path must not depend on the
+    device tier being reachable."""
+
+    values: np.ndarray         # (R, d) last-known-good rows, host copy
+    seen: np.ndarray           # (R,) bool: row has been recorded at least once
+
+    @classmethod
+    def empty(cls, total_rows: int, dim: int,
+              dtype=np.float32) -> StaleRowSnapshot:
+        """Zero-filled snapshot covering `total_rows` rows of width `dim`."""
+        return cls(values=np.zeros((total_rows, dim), dtype),
+                   seen=np.zeros((total_rows,), bool))
+
+    def record(self, rows: np.ndarray, values: np.ndarray) -> None:
+        """Remember `values` ((n, d), host or device) for global `rows`."""
+        rows = np.asarray(rows)
+        if len(rows) == 0:
+            return
+        self.values[rows] = np.asarray(values, self.values.dtype)
+        self.seen[rows] = True
+
+    def gather(self, rows: np.ndarray) -> np.ndarray:
+        """(n, d) last-known-good values for `rows`; zeros where unseen."""
+        rows = np.asarray(rows)
+        out = self.values[rows].copy()
+        out[~self.seen[rows]] = 0
+        return out
+
+    @property
+    def coverage(self) -> float:
+        """Fraction of the row space with a recorded value."""
+        return float(self.seen.mean()) if len(self.seen) else 0.0
 
 
 @dataclasses.dataclass(frozen=True)

@@ -29,7 +29,9 @@ plan-driven dedup'd gather, with `zipf_expected_unique` supplying the
 deterministic unique-row count of a bounded-Zipf access stream.
 `multihost_exchange_traffic` prices the multi-host cached tier's three
 all-to-all legs (miss fetch, routed grads, working-set refresh) against
-the coherence-free per-lookup PS exchange.
+the coherence-free per-lookup PS exchange. `serve_replay_traffic` prices
+the read-only serving path (shed and degraded traffic never reaches the
+capacity tier; no writeback leg exists).
 """
 from __future__ import annotations
 
@@ -245,6 +247,45 @@ def cache_admission_traffic(fetched_rows: float, embed_dim: int,
             "descriptors": n_desc,
             "chunked_vs_single": (chunked_bytes / single_bytes
                                   if single_bytes else 1.0)}
+
+
+def serve_replay_traffic(requests: float, examples: int, n_features: int,
+                         truncation: int, embed_dim: int, hit_rate: float,
+                         shed_rate: float = 0.0,
+                         degraded_fraction: float = 0.0,
+                         itemsize: int = 4, accum_itemsize: int = 4,
+                         descriptor_bytes: int = 32) -> dict[str, float]:
+    """Capacity-tier bytes of the SERVING path for a traffic replay
+    (serve/dlrm_engine.py, benchmarks/serve_bench.py) — the read-only
+    mirror of `cache_admission_traffic`.
+
+    Serving differs from training in three byte-relevant ways: shed
+    requests (`shed_rate`) never touch the capacity tier at all; degraded
+    batches (`degraded_fraction`) resolve misses from the host-local stale
+    snapshot, so their fetch leg costs nothing; and the tier is read-only,
+    so there is NO writeback leg ever (dirty evictions do not exist).
+    Each surviving unique miss moves the fp32 row plus its accumulator
+    (the fetch path is shared with training) plus one DMA descriptor.
+
+    `hit_rate` is the FBGEMM convention (1 - unique_misses / accesses) —
+    feed `CacheStats.hit_rate` and `ServeMetrics.snapshot()` figures from
+    a replay, or `zipf_expected_unique` for a closed-form stream. Returns
+    the cached fetch bytes, the uncached oracle bytes (every access pulls
+    a full row), and `uncached_vs_cached`, their ratio (> 1 when the
+    cache + shedding + stale-serve stack wins; higher is better)."""
+    served = requests * (1.0 - shed_rate)
+    accesses = served * examples * n_features * truncation
+    row_bytes = float(embed_dim * itemsize + accum_itemsize)
+    fetched = accesses * (1.0 - hit_rate) * (1.0 - degraded_fraction)
+    fetch_bytes = fetched * (row_bytes + descriptor_bytes)
+    uncached_bytes = accesses * embed_dim * itemsize
+    return {"accesses": accesses,
+            "fetched_rows": fetched,
+            "fetch_bytes": fetch_bytes,
+            "writeback_bytes": 0.0,
+            "uncached_bytes": uncached_bytes,
+            "uncached_vs_cached": (uncached_bytes / fetch_bytes
+                                   if fetch_bytes else float("inf"))}
 
 
 def tablewise_exchange_traffic(batch: int, n_features: int, truncation: int,

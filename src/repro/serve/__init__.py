@@ -1,1 +1,15 @@
-from repro.serve.engine import DLRMEngine, Request, ServeEngine  # noqa: F401
+"""Serving engines: slot-based LM decode + overload-robust DLRM CTR."""
+from repro.serve.dlrm_engine import (  # noqa: F401
+    DLRMServeEngine,
+    Overloaded,
+    ServeCircuitBreaker,
+    ServeMetrics,
+    ServeRequest,
+    ServeResponse,
+)
+from repro.serve.engine import (  # noqa: F401
+    DLRMEngine,
+    DrainTimeout,
+    Request,
+    ServeEngine,
+)

@@ -14,8 +14,8 @@ in int8).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-import queue
 
 import jax
 import jax.numpy as jnp
@@ -28,13 +28,33 @@ from repro.nn.sharding import SERVE_RULES, LogicalRules
 
 @dataclasses.dataclass
 class Request:
+    """One LM generation request: prompt tokens + a new-token budget."""
+
     uid: int
     prompt: np.ndarray                    # (prompt_len,) int32
     max_new_tokens: int = 32
     generated: list[int] | None = None
 
 
+class DrainTimeout(RuntimeError):
+    """`run_until_drained` exceeded its step budget.
+
+    Carries the work that DID finish (`completed`, uid -> tokens) plus the
+    uids still in flight (`undrained`: occupied slots and queued requests),
+    so a stalled drain loses nothing."""
+
+    def __init__(self, completed: dict[int, list[int]],
+                 undrained: list[int], steps: int):
+        super().__init__(
+            f"serve loop did not drain within {steps} steps; "
+            f"{len(completed)} completed, {len(undrained)} in flight")
+        self.completed = completed
+        self.undrained = undrained
+
+
 class ServeEngine:
+    """Slot-based continuous-batching LM engine (see module docstring)."""
+
     def __init__(self, params, cfg: ModelConfig, batch_slots: int,
                  max_len: int, rules: LogicalRules = SERVE_RULES,
                  eos_id: int = -1, greedy: bool = True):
@@ -51,7 +71,7 @@ class ServeEngine:
         self.slot_req: list[Request | None] = [None] * batch_slots
         self.slot_pos = np.zeros(batch_slots, np.int32)
         self.slot_budget = np.zeros(batch_slots, np.int32)
-        self.queue: "queue.Queue[Request]" = queue.Queue()
+        self.queue: collections.deque[Request] = collections.deque()
         self.completed: dict[int, list[int]] = {}
         self._decode = jax.jit(
             lambda p, t, c, i: decode_step(p, t, c, i, cfg, rules))
@@ -60,14 +80,27 @@ class ServeEngine:
     # -- admission -----------------------------------------------------------
 
     def submit(self, req: Request):
+        """Enqueue `req`, validating it can ever fit the cache window.
+
+        A prompt of `max_len` or more tokens would overflow `slot_pos` past
+        the cache before the retire check could fire — reject it here with
+        an actionable error instead of corrupting a slot. The new-token
+        budget is clamped at admission (`_admit`), not here, so a request
+        asking for more tokens than the window allows still runs — it just
+        retires at the window edge."""
+        if len(req.prompt) >= self.max_len:
+            raise ValueError(
+                f"prompt of {len(req.prompt)} tokens cannot fit max_len="
+                f"{self.max_len} with room to generate; truncate the prompt "
+                "or build the engine with a larger max_len")
         req.generated = []
-        self.queue.put(req)
+        self.queue.append(req)
 
     def _admit(self):
         for slot in range(self.batch_slots):
-            if self.slot_req[slot] is not None or self.queue.empty():
+            if self.slot_req[slot] is not None or not self.queue:
                 continue
-            req = self.queue.get()
+            req = self.queue.popleft()
             # prefill one slot: run prompt tokens through decode steps
             # (slot-local prefill keeps the cache layout fixed-batch).
             # The LAST prompt token is left to the first `step()` call —
@@ -83,7 +116,11 @@ class ServeEngine:
                 self.caches = _merge_slot(self.caches, caches, slot)
             self.slot_req[slot] = req
             self.slot_pos[slot] = len(req.prompt) - 1
-            self.slot_budget[slot] = req.max_new_tokens
+            # clamp the budget to the cache window: after g generated
+            # tokens slot_pos is len(prompt)-1+g, and the slot retires at
+            # max_len-1, so at most max_len - len(prompt) tokens fit
+            self.slot_budget[slot] = min(req.max_new_tokens,
+                                         self.max_len - len(req.prompt))
 
     # -- decode --------------------------------------------------------------
 
@@ -122,11 +159,20 @@ class ServeEngine:
                 self.slot_req[s] = None
 
     def run_until_drained(self, max_steps: int = 10_000):
-        while (not self.queue.empty()
-               or any(r is not None for r in self.slot_req)):
+        """Step until queue + slots are empty; returns `completed`.
+
+        `max_steps` bounds THIS call's decode steps (not the engine's
+        lifetime `steps_run`, so a reused engine gets a fresh budget).
+        On timeout raises `DrainTimeout` carrying the partial `completed`
+        dict and the undrained uids — completed work is never lost."""
+        start = self.steps_run
+        while self.queue or any(r is not None for r in self.slot_req):
             self.step()
-            if self.steps_run > max_steps:
-                raise RuntimeError("serve loop did not drain")
+            if self.steps_run - start > max_steps:
+                undrained = [r.uid for r in self.slot_req if r is not None]
+                undrained += [r.uid for r in self.queue]
+                raise DrainTimeout(dict(self.completed), undrained,
+                                   self.steps_run - start)
         return self.completed
 
 
@@ -170,33 +216,72 @@ class DLRMEngine:
 
         self._fwd = jax.jit(fwd)
 
+    def _split_spans(self, idx: np.ndarray) -> list[tuple[int, int]]:
+        """Greedy prefix packing: contiguous example spans whose CUMULATIVE
+        unique-row working set fits the device cache, computed BEFORE any
+        dispatch — the thrash guard is consulted proactively, never tripped.
+
+        A reusable (R,) mark array tracks the rows the open span already
+        counted; when an example would push the union past `cache_rows` the
+        span closes and the example re-evaluates against fresh marks. A
+        single example whose own working set exceeds the cache cannot be
+        split further — that raises with the actual sizes."""
+        b = idx.shape[0]
+        c = self.cc.cache_rows
+        mark = np.zeros((self.cc.ebc.plan.total_rows,), bool)
+        touched: list[np.ndarray] = []
+        spans: list[tuple[int, int]] = []
+        start, count, e = 0, 0, 0
+        while e < b:
+            rows = np.unique(idx[e][idx[e] >= 0])
+            new = rows[~mark[rows]]
+            if count + len(new) > c:
+                if e == start:
+                    raise ValueError(
+                        f"single example touches {len(rows)} unique rows > "
+                        f"cache_rows={c}; it cannot be split further — "
+                        "raise the HBM budget or shorten the example's "
+                        "multi-hot lists")
+                spans.append((start, e))
+                for t in touched:
+                    mark[t] = False
+                touched.clear()
+                start, count = e, 0
+                continue        # re-evaluate e against the fresh span
+            mark[new] = True
+            touched.append(new)
+            count += len(new)
+            e += 1
+        if b:
+            spans.append((start, b))
+        return spans
+
     def predict(self, batch: dict) -> np.ndarray:
         """batch: {"dense" (B, n_dense), "idx" (B, F, L) OFFSET global rows}.
         Returns (B,) click probabilities.
 
-        A batch whose working set exceeds the device cache trips the
+        A batch whose working set exceeds the device cache would trip the
         planner's thrash guard; serving must degrade, not die, so the batch
-        recursively halves until each piece's unique rows fit. Splitting is
-        exact here — the tier is read-only, so earlier pieces only change
-        which rows are RESIDENT for later ones, never their values."""
+        is pre-split into working-set-sized spans (`_split_spans`) and each
+        span dispatches knowing it fits. Splitting is exact here — the tier
+        is read-only, so earlier spans only change which rows are RESIDENT
+        for later ones, never their values."""
         idx = np.asarray(batch["idx"])
-        try:
-            local = self.cc.prepare(self.state, idx, train=False)
-        except ValueError as e:
-            if "unique rows" not in str(e) or idx.shape[0] <= 1:
-                raise   # a single example over capacity cannot split
-            h = idx.shape[0] // 2
-            dense_x = np.asarray(batch["dense"])
-            return np.concatenate([
-                self.predict({"dense": dense_x[:h], "idx": idx[:h]}),
-                self.predict({"dense": dense_x[h:], "idx": idx[h:]})])
-        probs = self._fwd(self.dense, self.state.cache,
-                          jnp.asarray(batch["dense"]), jnp.asarray(local))
-        self.requests_served += int(local.shape[0])
-        return np.asarray(probs, np.float32)
+        dense_x = np.asarray(batch["dense"])
+        if idx.shape[0] == 0:
+            return np.zeros((0,), np.float32)
+        outs = []
+        for s, e in self._split_spans(idx):
+            local = self.cc.prepare(self.state, idx[s:e], train=False)
+            probs = self._fwd(self.dense, self.state.cache,
+                              jnp.asarray(dense_x[s:e]), jnp.asarray(local))
+            outs.append(np.asarray(probs, np.float32))
+        self.requests_served += int(idx.shape[0])
+        return outs[0] if len(outs) == 1 else np.concatenate(outs)
 
     @property
     def cache_stats(self):
+        """Live `CacheStats` of the serving cache state."""
         return self.state.stats
 
 

@@ -1,3 +1,4 @@
+"""Training-side resilience stack: checkpointing, fault injection, steps."""
 from repro.train.checkpoint import (  # noqa: F401
     CheckpointCorruptionError,
     CheckpointManager,

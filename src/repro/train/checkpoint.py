@@ -69,6 +69,13 @@ def _flatten_with_paths(tree):
 
 
 class CheckpointManager:
+    """Atomic, CRC-verified pytree checkpoints with bounded retention.
+
+    Each save writes leaves + a manifest into a tmp dir, fsyncs, then
+    publishes with os.replace — a crash leaves either the old or the new
+    checkpoint, never a torn one. Restore verifies per-leaf CRCs and falls
+    back past corrupt steps to the newest intact one."""
+
     def __init__(self, directory: str, keep: int = 3, injector=None):
         self.directory = directory
         self.keep = keep
@@ -81,6 +88,8 @@ class CheckpointManager:
     # -- save ---------------------------------------------------------------
 
     def save(self, step: int, tree: Any, async_: bool = False):
+        """Checkpoint `tree` at `step`; async_=True hands the write to a
+        background thread (gathered to host first, so donation is safe)."""
         self.wait()                 # re-raises a failed previous async save
         # gather to host BEFORE handing off (device buffers may be donated)
         paths, leaves, treedef = _flatten_with_paths(tree)
@@ -157,6 +166,7 @@ class CheckpointManager:
             f.write(bytes([b[0] ^ 0xFF]))
 
     def wait(self):
+        """Join any in-flight async save, re-raising its failure."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
@@ -178,6 +188,7 @@ class CheckpointManager:
     # -- restore --------------------------------------------------------------
 
     def latest_step(self) -> int | None:
+        """Newest published step on disk (None when nothing is saved)."""
         latest = os.path.join(self.directory, "LATEST")
         if os.path.exists(latest):
             with open(latest) as f:

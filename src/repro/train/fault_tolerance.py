@@ -12,8 +12,9 @@ This module holds the whole resilience stack:
 
   * `FaultInjector` — deterministic, seed-driven fault schedules fired at
     named hook points (`pipeline.batch`, `cache.fetch`, `checkpoint.write`,
-    `loop.step`) threaded through data/pipeline.py, core/cache.py and
-    train/checkpoint.py. Faults: reader-thread death, transient
+    `loop.step`, plus the serving-side `serve.fetch` / `serve.admit`)
+    threaded through data/pipeline.py, core/cache.py, train/checkpoint.py
+    and serve/dlrm_engine.py. Faults: reader-thread death, transient
     capacity-fetch error, fetch latency spike, torn checkpoint leaf,
     preemption at step k, simulated host loss.
   * `RetryPolicy` — bounded retry-with-backoff for transient fetch faults
@@ -48,8 +49,11 @@ import numpy as np
 
 # -- fault taxonomy ---------------------------------------------------------
 
-#: hook points a FaultSpec can target (call sites fire these by name)
-SITES = ("pipeline.batch", "cache.fetch", "checkpoint.write", "loop.step")
+#: hook points a FaultSpec can target (call sites fire these by name).
+#: `serve.fetch` guards the serving tier's capacity fetches and
+#: `serve.admit` its admission path (serve/dlrm_engine.py).
+SITES = ("pipeline.batch", "cache.fetch", "checkpoint.write", "loop.step",
+         "serve.fetch", "serve.admit")
 
 #: raising kinds ("error"/"kill") throw at the hook point; cooperative kinds
 #: ("latency"/"torn"/"preempt"/"host_loss") return the spec for the call
@@ -93,7 +97,8 @@ class FaultInjector:
 
     Call sites invoke `fire(site)`; the injector matches the site's call
     counter against the schedule. Raising kinds throw (`error` ->
-    TransientFetchFault on `cache.fetch`, InjectedFault elsewhere; `kill`
+    TransientFetchFault on the fetch/admit sites (`cache.fetch`,
+    `serve.fetch`, `serve.admit`), InjectedFault elsewhere; `kill`
     -> SystemExit, the reader-thread death). Cooperative kinds return the
     FaultSpec for the call site to act on (`torn` -> checkpoint leaf
     corruption, `preempt` -> SIGTERM-equivalent stop, `host_loss` ->
@@ -123,7 +128,9 @@ class FaultInjector:
         kinds = {"pipeline.batch": ("kill", "error"),
                  "cache.fetch": ("error", "latency"),
                  "checkpoint.write": ("torn",),
-                 "loop.step": ("preempt",)}
+                 "loop.step": ("preempt",),
+                 "serve.fetch": ("error", "latency"),
+                 "serve.admit": ("error",)}
         rng = np.random.RandomState(seed)
         seen: set[tuple[str, int]] = set()
         sched: list[FaultSpec] = []
@@ -158,7 +165,7 @@ class FaultInjector:
             time.sleep(float(spec.arg or 0.002))
             return spec
         if spec.kind == "error":
-            if site == "cache.fetch":
+            if site in ("cache.fetch", "serve.fetch", "serve.admit"):
                 raise TransientFetchFault(
                     f"injected transient fetch fault at {site}[{at}]")
             raise InjectedFault(f"injected fault at {site}[{at}]")
@@ -211,6 +218,7 @@ class DegradationManager:
 
     @property
     def degraded(self) -> bool:
+        """True while the strict_sync fallback schedule is active."""
         return self.mode == "strict_sync"
 
     def record_failure(self) -> None:
@@ -338,9 +346,11 @@ class PreemptionHandler:
 
     @property
     def should_stop(self) -> bool:
+        """True once a preemption signal (or `trigger`) has fired."""
         return self._stop
 
-    def trigger(self):               # for tests / manual drain
+    def trigger(self):
+        """Raise the stop flag in-process (tests / manual drain)."""
         self._stop = True
 
     def clear(self):
@@ -348,6 +358,7 @@ class PreemptionHandler:
         self._stop = False
 
     def restore(self):
+        """Reinstall the signal handlers this handler displaced."""
         for s, h in self._prev.items():
             signal.signal(s, h)
 
@@ -386,10 +397,13 @@ class StragglerDetector:
 
 
 class StepTimer:
+    """Monotonic lap timer for per-step wall times."""
+
     def __init__(self):
         self.t0 = time.monotonic()
 
     def lap(self) -> float:
+        """Seconds since construction or the previous lap."""
         now = time.monotonic()
         dt = now - self.t0
         self.t0 = now

@@ -254,6 +254,7 @@ def build_dlrm_train_step(cfg: DLRMConfig, ebc: EmbeddingBagCollection,
 
 def dlrm_init_state(ebc: EmbeddingBagCollection, dense_opt: Optimizer,
                     params: dict) -> dict:
+    """Optimizer state bundle for the uncached DLRM step (dense + mega)."""
     return {
         "dense": dense_opt.init({"bottom": params["bottom"],
                                  "top": params["top"]}),

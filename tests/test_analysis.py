@@ -120,3 +120,24 @@ ENTRY %main (a: f32[16,32], b: f32[32,8]) -> f32[16,8] {
 """
     ca = CollectiveAnalysis(hlo)
     assert ca.dot_flops == pytest.approx(2 * 16 * 32 * 8)
+
+
+def test_serve_replay_traffic_prices_shed_and_degraded():
+    """Serving-path byte model (launch/analysis.py): shed requests never
+    touch the capacity tier, degraded batches resolve misses from the
+    local snapshot, and the read-only tier never writes back."""
+    from repro.launch.analysis import serve_replay_traffic
+    base = serve_replay_traffic(requests=100, examples=4, n_features=6,
+                                truncation=8, embed_dim=16, hit_rate=0.8)
+    assert base["accesses"] == 100 * 4 * 6 * 8
+    assert base["fetched_rows"] == pytest.approx(base["accesses"] * 0.2)
+    assert base["writeback_bytes"] == 0.0
+    assert base["uncached_vs_cached"] > 1.0     # the cache tier must win
+    shed = serve_replay_traffic(requests=100, examples=4, n_features=6,
+                                truncation=8, embed_dim=16, hit_rate=0.8,
+                                shed_rate=0.5)
+    assert shed["fetch_bytes"] == pytest.approx(base["fetch_bytes"] * 0.5)
+    deg = serve_replay_traffic(requests=100, examples=4, n_features=6,
+                               truncation=8, embed_dim=16, hit_rate=0.8,
+                               degraded_fraction=0.25)
+    assert deg["fetch_bytes"] == pytest.approx(base["fetch_bytes"] * 0.75)

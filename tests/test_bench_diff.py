@@ -126,3 +126,24 @@ def test_trend_cli_never_fails(tmp_path):
     # pairwise diff is the only gate
     assert main(["--trend", a, b]) == 0
     assert main([a, b]) == 1
+
+
+def test_serve_rows_gate_two_sided_on_derived_only():
+    """serve/ rows: any derived drift beyond the threshold flags — BOTH
+    directions (a deterministic rate that moved means serving behaviour
+    changed) — while their us columns stay informational, and the serve
+    rule wins over the one-sided hit rule for serve/..._hit_rate."""
+    base = _rows(**{"serve/replay_shed_rate_4x": (1000.0, 0.40),
+                    "serve/replay_hit_rate": (1000.0, 0.80)})
+    # a DROP in shed rate (looks like an improvement) still flags
+    regs, _ = diff(base, _rows(**{"serve/replay_shed_rate_4x": (1000.0, 0.20),
+                                  "serve/replay_hit_rate": (1000.0, 0.80)}))
+    assert len(regs) == 1 and "shed_rate" in regs[0] and "drift" in regs[0]
+    # a RISE in hit rate flags too: the serve rule, not the hit rule
+    regs, _ = diff(base, _rows(**{"serve/replay_shed_rate_4x": (1000.0, 0.40),
+                                  "serve/replay_hit_rate": (1000.0, 0.95)}))
+    assert len(regs) == 1 and "hit_rate" in regs[0]
+    # within-threshold moves pass, and a 10x us swing never gates
+    regs, _ = diff(base, _rows(**{"serve/replay_shed_rate_4x": (9999.0, 0.41),
+                                  "serve/replay_hit_rate": (100.0, 0.79)}))
+    assert regs == []

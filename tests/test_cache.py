@@ -485,3 +485,43 @@ def test_bounded_zipf_head_is_hot():
     # top-10% ranks should carry well over half the mass at alpha ~ 1
     frac = (draws < 1000).mean()
     assert frac > 0.5
+
+
+def test_serve_engine_split_covers_even_and_odd_batches(cfg, ebc):
+    """The greedy prefix splitter must cover both parities (the old
+    recursive-halving path only ever saw even halves): even and odd batch
+    sizes through an undersized cache stay bit-equal to the no-split
+    oracle."""
+    from repro.serve.engine import DLRMEngine
+    params = init_params(dlrm_param_specs(cfg, ebc), jax.random.PRNGKey(2))
+    engine = DLRMEngine(params, cfg,
+                        CachedEmbeddingBagCollection.build(cfg,
+                                                           cache_rows=48))
+    big = DLRMEngine(params, cfg,
+                     CachedEmbeddingBagCollection.build(cfg,
+                                                        cache_rows=2048))
+    for n in (8, 7):                           # even AND odd
+        raw = make_dlrm_batch(cfg, n, step=n)
+        b = {"dense": jnp.asarray(raw["dense"]),
+             "idx": np.asarray(ebc.offset_indices(jnp.asarray(raw["idx"])))}
+        idx = b["idx"]
+        assert len(np.unique(idx[idx >= 0])) > 48   # must actually split
+        np.testing.assert_array_equal(engine.predict(b), big.predict(b))
+    assert engine.requests_served == 15
+
+
+def test_serve_engine_single_example_over_capacity_is_actionable(cfg, ebc):
+    """One example whose OWN unique rows exceed the cache can never be
+    split: the error must say so and name both sizes, not recurse or
+    surface the raw thrash-guard message."""
+    from repro.serve.engine import DLRMEngine
+    params = init_params(dlrm_param_specs(cfg, ebc), jax.random.PRNGKey(2))
+    engine = DLRMEngine(params, cfg,
+                        CachedEmbeddingBagCollection.build(cfg,
+                                                           cache_rows=8))
+    raw = make_dlrm_batch(cfg, 2, step=0)
+    idx = np.asarray(ebc.offset_indices(jnp.asarray(raw["idx"])))
+    assert len(np.unique(idx[0][idx[0] >= 0])) > 8
+    with pytest.raises(ValueError, match=r"cannot be split") as ei:
+        engine.predict({"dense": jnp.asarray(raw["dense"]), "idx": idx})
+    assert "cache_rows=8" in str(ei.value)

@@ -38,3 +38,32 @@ def test_serve_cli():
     out = _run(["repro.launch.serve", "--arch", "stablelm-1.6b", "--smoke",
                 "--requests", "3", "--slots", "2", "--new-tokens", "4"])
     assert "served 3 requests" in out
+
+
+def _parse_serve_summary(out):
+    line = next(ln for ln in out.splitlines()
+                if ln.startswith("serve[dlrm]:"))
+    return dict(part.split("=", 1) for part in line.split()[1:])
+
+
+def test_serve_cli_dlrm():
+    out = _run(["repro.launch.serve", "--arch", "dlrm-m1", "--smoke",
+                "--requests", "12", "--batch", "2", "--max-batch", "8",
+                "--burst", "3"])
+    kv = _parse_serve_summary(out)
+    assert int(kv["served"]) + int(kv["shed"]) == 12
+    assert 0.0 <= float(kv["hit_rate"]) <= 1.0
+    assert 0.0 <= float(kv["shed_rate"]) <= 1.0
+    assert float(kv["p99_ms"]) >= float(kv["p50_ms"]) >= 0.0
+    assert kv["breaker"] in ("healthy", "shedding", "stale_only")
+
+
+def test_serve_cli_dlrm_chaos():
+    out = _run(["repro.launch.serve", "--arch", "dlrm-m1", "--smoke",
+                "--requests", "12", "--batch", "2", "--max-batch", "8",
+                "--burst", "3", "--chaos", "--chaos-seed", "13"])
+    kv = _parse_serve_summary(out)
+    # degrade-don't-die: the chaos replay still resolves every request
+    assert int(kv["served"]) + int(kv["shed"]) == 12
+    assert 0.0 <= float(kv["degraded_fraction"]) <= 1.0
+    assert "chaos: fired=" in out

@@ -244,3 +244,56 @@ def test_per_slot_decode_positions_match_isolated():
     for s in range(2):
         np.testing.assert_allclose(out[s], iso_logits[s],
                                    rtol=3e-2, atol=3e-2)
+
+
+def test_serve_submit_rejects_oversized_prompt_and_clamps_budget():
+    """Admission contract: a prompt that can never fit the cache window is
+    rejected with an actionable error at `submit`, and an admitted
+    request's new-token budget is clamped to the window remainder instead
+    of overflowing `slot_pos` past the cache."""
+    from repro.serve import Request, ServeEngine
+    cfg = get_smoke_config("stablelm-1.6b")
+    params = init_params(lm_param_specs(cfg), jax.random.PRNGKey(0))
+    eng = ServeEngine(params, cfg, batch_slots=1, max_len=16, rules={})
+    rng = np.random.RandomState(2)
+    big = rng.randint(0, cfg.vocab_size, size=(16,)).astype(np.int32)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(Request(uid=0, prompt=big, max_new_tokens=1))
+    # 10-token prompt in a 16-token window: at most 6 new tokens fit
+    eng.submit(Request(uid=1, prompt=big[:10], max_new_tokens=50))
+    done = eng.run_until_drained(max_steps=100)
+    assert len(done[1]) == 6
+    assert int(eng.slot_pos[0]) <= eng.max_len - 1
+
+
+def test_run_until_drained_timeout_returns_partial_work():
+    """`run_until_drained(max_steps=...)` budgets THIS call's steps and, on
+    timeout, raises `DrainTimeout` carrying the completed work and the
+    uids still in flight — a stalled drain loses nothing."""
+    from repro.serve import DrainTimeout, Request, ServeEngine
+    cfg = get_smoke_config("stablelm-1.6b")
+    params = init_params(lm_param_specs(cfg), jax.random.PRNGKey(0))
+    eng = ServeEngine(params, cfg, batch_slots=1, max_len=64, rules={})
+    rng = np.random.RandomState(4)
+    for uid in range(3):
+        eng.submit(Request(uid=uid,
+                           prompt=rng.randint(0, cfg.vocab_size,
+                                              size=(4,)).astype(np.int32),
+                           max_new_tokens=8))
+    with pytest.raises(DrainTimeout) as ei:
+        eng.run_until_drained(max_steps=10)
+    err = ei.value
+    assert 0 in err.completed and len(err.completed[0]) == 8
+    assert set(err.undrained) == {1, 2}
+    assert set(err.completed) | set(err.undrained) == {0, 1, 2}
+    # the engine is still usable: a fresh call finishes the backlog
+    done = eng.run_until_drained(max_steps=500)
+    assert sorted(done) == [0, 1, 2]
+    assert all(len(v) == 8 for v in done.values())
+    # and the budget is per CALL, not lifetime: a new request drains
+    # within a budget smaller than the steps already run
+    eng.submit(Request(uid=3, prompt=np.asarray([1, 2, 3], np.int32),
+                       max_new_tokens=2))
+    assert eng.steps_run > 8
+    done = eng.run_until_drained(max_steps=8)
+    assert len(done[3]) == 2

@@ -1,0 +1,275 @@
+"""Chaos-serve invariant (docs/serving.md, the serving mirror of
+tests/test_chaos.py):
+
+under ANY seeded `FaultInjector` schedule — capacity-fetch faults, latency
+spikes, admission faults — plus flash-crowd traffic offered at >= 4x the
+engine's per-step service capacity, every submitted request resolves as
+exactly ONE of
+
+  * bit-equal to the unloaded oracle (`degraded=False`),
+  * flagged `degraded=True` (stale-snapshot response), or
+  * cleanly shed with a typed `Overloaded` result,
+
+with no crash, no hang (bounded step budget) and no wrong unflagged score.
+Plus the supporting machinery: determinism of a seeded replay, the
+circuit-breaker cycle, deadline shedding on a virtual clock, queue-full
+backpressure, stale-serve bit-equality for previously-seen rows, and
+admission-time rejection of never-servable requests.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.cache import CachedEmbeddingBagCollection
+from repro.core.dlrm import dlrm_param_specs
+from repro.core.embedding import EmbeddingBagCollection
+from repro.data.synthetic import make_dlrm_batch
+from repro.nn.params import init_params
+from repro.serve import (DLRMEngine, DLRMServeEngine, Overloaded,
+                         ServeCircuitBreaker, ServeRequest)
+from repro.serve.dlrm_engine import SHED_REASONS
+from repro.train.fault_tolerance import FaultInjector, FaultSpec
+
+EXAMPLES = 4
+MAX_BATCH = 16
+CACHE_ROWS = 192
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_smoke_config("dlrm-m1")
+
+
+@pytest.fixture(scope="module")
+def ebc(cfg):
+    return EmbeddingBagCollection.build(cfg, n_shards=1,
+                                        strategy="replicated")
+
+
+@pytest.fixture(scope="module")
+def params(cfg, ebc):
+    return init_params(dlrm_param_specs(cfg, ebc), jax.random.PRNGKey(2))
+
+
+@pytest.fixture(scope="module")
+def oracle(cfg, params):
+    """Unloaded reference: the read-only engine with a cache big enough to
+    never split or evict — existing tests pin it bit-equal to the dense
+    uncached forward."""
+    return DLRMEngine(params, cfg,
+                      CachedEmbeddingBagCollection.build(cfg,
+                                                         cache_rows=2048))
+
+
+class VClock:
+    """Deterministic virtual clock (deadline arithmetic, no wall time)."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _request(cfg, ebc, uid, step, deadline=None, flash=False):
+    """Seeded drifting-Zipf request; `flash` collapses onto a churned
+    8-key hot set per table (the flash-crowd phase)."""
+    raw = make_dlrm_batch(cfg, EXAMPLES, step=step, zipf_alpha=1.05)
+    idx = np.asarray(raw["idx"]).copy()
+    for t, h in enumerate(cfg.hash_sizes):
+        col = (idx[:, t, :] + 3 * step) % h
+        if flash:
+            col = (col % 8 + (step // 4) * 8) % h
+        idx[:, t, :] = col
+    idx = np.asarray(ebc.offset_indices(idx))
+    return ServeRequest(uid, raw["dense"], idx, deadline=deadline)
+
+
+def _chaos_replay(cfg, ebc, params, seed):
+    """Flash-crowd replay at 4x offered load under a seeded schedule.
+
+    8 requests x 4 examples offered per step vs MAX_BATCH=16 examples
+    served: 2x in examples, 4x in requests against the <=4-requests-per-
+    batch service rate, on a queue of 12. Returns (engine, requests)."""
+    inj = FaultInjector.from_seed(seed, 24,
+                                  sites=("serve.fetch", "serve.admit"),
+                                  n_faults=4)
+    clock = VClock()
+    cc = CachedEmbeddingBagCollection.build(cfg, cache_rows=CACHE_ROWS)
+    engine = DLRMServeEngine(params, cfg, cc, max_queue=12,
+                             max_batch=MAX_BATCH, clock=clock,
+                             shed_slack=0.5, injector=inj)
+    reqs = {}
+    uid = 0
+    for step in range(8):
+        for _ in range(8):
+            r = _request(cfg, ebc, uid, step, deadline=clock() + 3.0,
+                         flash=True)
+            reqs[uid] = r
+            engine.submit(r)
+            uid += 1
+        engine.step()
+        clock.advance(1.0)
+    engine.run(max_steps=200)          # bounded: no-hang guarantee
+    return engine, reqs
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_chaos_serve_invariant(cfg, ebc, params, oracle, seed):
+    """THE invariant: every request resolves as exactly one of
+    {bit-equal, flagged degraded, cleanly shed} — never a wrong unflagged
+    score, never a dropped uid."""
+    engine, reqs = _chaos_replay(cfg, ebc, params, seed)
+    assert set(engine.results) == set(reqs)        # nothing lost
+    n_exact = n_degraded = n_shed = 0
+    for uid, req in reqs.items():
+        res = engine.results[uid]
+        if isinstance(res, Overloaded):
+            assert res.reason in SHED_REASONS
+            n_shed += 1
+        elif res.degraded:
+            n_degraded += 1
+        else:
+            want = oracle.predict({"dense": req.dense, "idx": req.idx})
+            np.testing.assert_array_equal(res.probs, want)
+            n_exact += 1
+    m = engine.metrics
+    assert n_exact + n_degraded + n_shed == len(reqs)
+    assert m.served + m.shed == m.submitted == len(reqs)
+    assert n_shed > 0        # 4x offered load MUST shed on a queue of 12
+
+
+def test_chaos_replay_deterministic(cfg, ebc, params):
+    """Same seed => same statuses, same bytes, same metrics."""
+    a, _ = _chaos_replay(cfg, ebc, params, seed=1)
+    b, _ = _chaos_replay(cfg, ebc, params, seed=1)
+    assert set(a.results) == set(b.results)
+    for uid in a.results:
+        ra, rb = a.results[uid], b.results[uid]
+        assert type(ra) is type(rb)
+        if isinstance(ra, Overloaded):
+            assert ra.reason == rb.reason
+        else:
+            assert ra.degraded == rb.degraded
+            np.testing.assert_array_equal(ra.probs, rb.probs)
+    sa, sb = a.metrics.snapshot(), b.metrics.snapshot()
+    for k in ("served", "shed", "degraded", "batches", "stale_batches"):
+        assert sa[k] == sb[k], k
+    assert a.breaker.transitions == b.breaker.transitions
+
+
+def test_stale_serve_bit_equal_for_seen_rows(cfg, ebc, params):
+    """Degrade-don't-die correctness: the tier is read-only, so a degraded
+    response whose rows were ALL previously fetched is bit-equal to the
+    healthy response — the stale snapshot can only differ on never-seen
+    (zero-filled) rows, and those responses are flagged."""
+    inj = FaultInjector([FaultSpec("serve.fetch", 1, "error"),
+                         FaultSpec("serve.fetch", 2, "error")])
+    cc = CachedEmbeddingBagCollection.build(cfg, cache_rows=CACHE_ROWS)
+    engine = DLRMServeEngine(params, cfg, cc, max_queue=8,
+                             max_batch=MAX_BATCH, injector=inj)
+    req = _request(cfg, ebc, 0, 0)
+    engine.submit(req)
+    engine.step()                                  # fetch 0: healthy
+    healthy = engine.results[0]
+    assert not healthy.degraded
+    # same rows again, now under a fetch fault -> degraded but bit-equal
+    again = ServeRequest(1, req.dense, req.idx)
+    engine.submit(again)
+    engine.step()                                  # fetch 1: injected fault
+    stale = engine.results[1]
+    assert stale.degraded
+    np.testing.assert_array_equal(stale.probs, healthy.probs)
+    # fresh rows under a fault -> still served, flagged degraded
+    fresh = _request(cfg, ebc, 2, 19)
+    engine.submit(fresh)
+    engine.step()                                  # fetch 2: injected fault
+    assert engine.results[2].degraded
+
+
+def test_circuit_breaker_full_cycle(cfg, ebc, params):
+    """healthy -> stale_only (consecutive fetch faults) -> healthy (probe
+    successes), end to end through the engine."""
+    inj = FaultInjector([FaultSpec("serve.fetch", 0, "error"),
+                         FaultSpec("serve.fetch", 1, "error")])
+    cc = CachedEmbeddingBagCollection.build(cfg, cache_rows=CACHE_ROWS)
+    breaker = ServeCircuitBreaker(demote_after=2, promote_after=2,
+                                  probe_every=2)
+    engine = DLRMServeEngine(params, cfg, cc, max_queue=8,
+                             max_batch=MAX_BATCH, injector=inj,
+                             breaker=breaker)
+    for uid in range(10):
+        engine.submit(_request(cfg, ebc, uid, uid))
+        engine.step()
+    states = [s for s, _ in breaker.transitions]
+    assert "stale_only" in states
+    assert states[-1] == "healthy"                 # probes healed it
+    # while stale_only, batches served from the snapshot (flagged)
+    assert engine.metrics.stale_batches >= 2
+    # and afterwards healthy responses are exact again
+    assert not engine.results[9].degraded
+
+
+def test_breaker_pressure_watermarks():
+    """healthy <-> shedding transitions on queue-depth watermarks."""
+    br = ServeCircuitBreaker(shed_enter=0.75, shed_exit=0.25)
+    br.record_pressure(0.5)
+    assert br.state == "healthy"
+    br.record_pressure(0.8)
+    assert br.state == "shedding"
+    br.record_pressure(0.5)                        # hysteresis band
+    assert br.state == "shedding"
+    br.record_pressure(0.2)
+    assert br.state == "healthy"
+    assert [s for s, _ in br.transitions] == ["shedding", "healthy"]
+
+
+def test_deadline_shedding_on_virtual_clock(cfg, ebc, params):
+    """An expired deadline sheds cleanly; an open one is served."""
+    clock = VClock()
+    cc = CachedEmbeddingBagCollection.build(cfg, cache_rows=CACHE_ROWS)
+    engine = DLRMServeEngine(params, cfg, cc, max_queue=8,
+                             max_batch=MAX_BATCH, clock=clock)
+    engine.submit(_request(cfg, ebc, 0, 0, deadline=0.5))
+    engine.submit(_request(cfg, ebc, 1, 1, deadline=9.0))
+    clock.advance(1.0)                             # uid 0 expires queued
+    engine.step()
+    shed = engine.results[0]
+    assert isinstance(shed, Overloaded) and shed.reason == "deadline"
+    assert not engine.results[1].degraded
+    assert engine.metrics.shed_deadline == 1
+
+
+def test_queue_full_backpressure_is_typed(cfg, ebc, params):
+    """Overflowing the bounded queue returns (and records) `Overloaded`
+    rather than raising or growing without bound."""
+    cc = CachedEmbeddingBagCollection.build(cfg, cache_rows=CACHE_ROWS)
+    engine = DLRMServeEngine(params, cfg, cc, max_queue=2,
+                             max_batch=MAX_BATCH)
+    outcomes = [engine.submit(_request(cfg, ebc, uid, uid))
+                for uid in range(5)]
+    assert outcomes[:2] == [None, None]
+    assert all(isinstance(o, Overloaded) and o.reason == "queue_full"
+               for o in outcomes[2:])
+    assert engine.metrics.shed_queue_full == 3
+    engine.run()
+    assert len(engine.results) == 5                # sheds recorded too
+
+
+def test_never_servable_requests_rejected_at_submit(cfg, ebc, params):
+    """Malformed != overloaded: requests that could never form a batch
+    (too many examples, working set over the cache) raise at submit."""
+    cc = CachedEmbeddingBagCollection.build(cfg, cache_rows=24)
+    engine = DLRMServeEngine(params, cfg, cc, max_queue=8, max_batch=4)
+    raw = make_dlrm_batch(cfg, 8, step=0)
+    idx = np.asarray(ebc.offset_indices(np.asarray(raw["idx"])))
+    with pytest.raises(ValueError, match="max_batch"):
+        engine.submit(ServeRequest(0, raw["dense"], idx))
+    small = ServeRequest(1, raw["dense"][:4], idx[:4])
+    assert len(np.unique(idx[:4][idx[:4] >= 0])) > 24
+    with pytest.raises(ValueError, match="cache_rows"):
+        engine.submit(small)

@@ -27,6 +27,7 @@ from repro.core.design_space import reduced, test_suite_config
 from repro.core.dlrm import dlrm_param_specs
 from repro.core.embedding import EmbeddingBagCollection
 from repro.core.placement import frequency_reorder
+from repro.core.tiers import AsyncCachedTier
 from repro.data.pipeline import dedup_indices_hook
 from repro.data.synthetic import bounded_zipf_rows, make_dlrm_batch
 from repro.launch.analysis import (cache_admission_traffic,
@@ -34,8 +35,7 @@ from repro.launch.analysis import (cache_admission_traffic,
                                    zipf_expected_unique)
 from repro.nn.params import init_params
 from repro.optim.optimizers import adagrad
-from repro.train.steps import (build_async_cached_dlrm_train_step,
-                               build_cached_dlrm_train_step,
+from repro.train.steps import (build_cached_train_step,
                                build_dlrm_train_step, cached_dlrm_init_state,
                                dlrm_init_state)
 
@@ -96,14 +96,14 @@ def hit_rate_sweep():
     for _ in range(WARM_STEPS):         # round-robin warm-up, steps [0, 40)
         for fn in fns:
             fn()
-    marks = [(s.stats.hits, s.stats.misses) for s in states]
+    for s in states:        # isolate the measured window (snapshot/reset
+        s.stats.reset()     # API — counters cannot leak across candidates)
     argsets = [() for _ in fns]
     medians = time_interleaved(fns, argsets, warmup=0, iters=MEASURE_STEPS)
-    for (alpha, frac), state, (h0, m0), us in zip(combos, states, marks,
-                                                  medians):
-        hits = state.stats.hits - h0
-        misses = state.stats.misses - m0
-        rate = hits / max(hits + misses, 1)
+    for (alpha, frac), state, us in zip(combos, states, medians):
+        snap = state.stats.snapshot()
+        rate = snap["cache_hits"] / max(snap["cache_hits"]
+                                        + snap["cache_misses"], 1)
         emit(f"cache/hit_a{alpha}_c{int(frac * 100)}pct", us, rate)
 
 
@@ -144,13 +144,14 @@ def multihost_sweep():
     for _ in range(warm):                    # round-robin, steps [0, warm)
         for fn in fns:
             fn()
-    marks = [(s.stats.hits, s.stats.misses) for s in states]
+    for s in states:                         # snapshot/reset window isolation
+        s.stats.reset()
     medians = time_interleaved(fns, [() for _ in fns], warmup=0,
                                iters=measure)
-    for hosts, state, (h0, m0), us in zip(hostset, states, marks, medians):
-        hits = state.stats.hits - h0
-        misses = state.stats.misses - m0
-        rate = hits / max(hits + misses, 1)
+    for hosts, state, us in zip(hostset, states, medians):
+        snap = state.stats.snapshot()
+        rate = snap["cache_hits"] / max(snap["cache_hits"]
+                                        + snap["cache_misses"], 1)
         emit(f"cache/multihost_hit_h{hosts}_c10pct", us, rate)
         # routing bytes: expected per-host/global unique rows of the
         # bounded-Zipf stream (exact, no sampling) + the measured hit rate
@@ -256,21 +257,19 @@ def admission_sweep():
     for _ in range(warm):                    # round-robin, steps [0, warm)
         for fn in fns:
             fn()
-    marks = [(s.stats.hits, s.stats.misses, s.stats.fetches,
-              s.stats.fetch_chunks, s.stats.overfetch_rows) for s in states]
+    for s in states:                         # snapshot/reset window isolation
+        s.stats.reset()
     medians = time_interleaved(fns, [() for _ in fns], warmup=0,
                                iters=measure)
     out = {}
-    for (name, _, _, _), state, mark, us in zip(arms, states, marks,
-                                                medians):
-        h0, m0, f0, c0, o0 = mark
-        hits = state.stats.hits - h0
-        misses = state.stats.misses - m0
-        rate = hits / max(hits + misses, 1)
+    for (name, _, _, _), state, us in zip(arms, states, medians):
+        snap = state.stats.snapshot()
+        rate = snap["cache_hits"] / max(snap["cache_hits"]
+                                        + snap["cache_misses"], 1)
         model = cache_admission_traffic(
-            float(state.stats.fetches - f0), cfg.embed_dim,
-            fetch_chunks=float(state.stats.fetch_chunks - c0),
-            overfetch_rows=float(state.stats.overfetch_rows - o0))
+            snap["cache_fetches"], cfg.embed_dim,
+            fetch_chunks=snap["cache_fetch_chunks"],
+            overfetch_rows=snap["cache_overfetch_rows"])
         out[name] = (rate, model, us)
         emit(f"cache/admission_hit_{name}_a1.05_h200k", us, rate)
     rate_a, model_a, _ = out["ema"]
@@ -315,7 +314,7 @@ def step_bench():
     dense = {"bottom": params_c["bottom"], "top": params_c["top"]}
     cstate = cached_dlrm_init_state(cc, opt, params_c)
     cache_state = cc.init_state(params_c["emb"]["mega"])
-    step_c = build_cached_dlrm_train_step(cfg, cc, opt)
+    step_c = build_cached_train_step(cfg, cc, opt)
     bc = dict(b, idx=np.asarray(b["idx"]))
     cell_c = [dense, cstate]
 
@@ -389,8 +388,8 @@ def overlap_sweep():
         dense = {"bottom": params["bottom"], "top": params["top"]}
         state = cached_dlrm_init_state(cc, opt, params)
         astate = cc.init_async_state(params["emb"]["mega"])
-        step_fn = build_async_cached_dlrm_train_step(
-            cfg, cc, opt, strict_sync=(mode != "async"))
+        step_fn = build_cached_train_step(
+            cfg, AsyncCachedTier(cc), opt, strict_sync=(mode != "async"))
         batches = make_batches(batch, mode)
         times = []
         for t, b in enumerate(batches):

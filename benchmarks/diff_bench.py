@@ -26,6 +26,13 @@ Rules (per row, matched by name across the two files):
     --hit-threshold (deterministic rows) or --time-threshold ("ratio"
     rows, timing-derived). Their us columns (restore wall, degraded step
     time) include jit recompiles and are informational only.
+  * tiers rows — name contains "tiers/" — the hit-mix / promotion-bytes
+    / analytic-latency rows are DETERMINISTIC under seeded traffic but
+    direction is row-specific (HBM hits up is good, bulk hits up is bad),
+    so any relative move beyond --hit-threshold in EITHER direction
+    regresses. "overlap"-named tiers rows carry the latency-hiding
+    fraction, which is timing-derived: they regress only when `derived`
+    DROPS by more than --time-threshold. us columns informational.
   * serve rows — name contains "serve/" — derived (hit/shed/degraded
     rates, byte reductions, served counts) is DETERMINISTIC under the
     seeded traffic + virtual clock but direction is row-specific, so any
@@ -55,6 +62,7 @@ BYTES_MARKER = "bytes"
 POOLED_EXCHANGE_MARKER = "pooled_exchange"
 RESILIENCE_MARKER = "resilience/"
 SERVE_MARKER = "serve/"
+TIERS_MARKER = "tiers/"
 
 
 def load_rows(path: str) -> dict[str, tuple[float, float]]:
@@ -82,6 +90,28 @@ def diff(base: dict[str, tuple[float, float]],
             continue
         b_us, b_drv = base[name]
         c_us, c_drv = cur[name]
+        if TIERS_MARKER in name:
+            # heterogeneous-memory rows: checked before the hit branch —
+            # "tiers/hit_hbm..." would otherwise match the hit marker.
+            # Overlap rows are timing-derived (latency-hiding fraction):
+            # one-sided drop at the wall-clock threshold. Everything else
+            # (tier hit mix, promotion bytes, analytic latency ratio) is
+            # deterministic with row-specific direction: two-sided drift
+            # at the tight threshold. us columns informational.
+            if OVERLAP_MARKER in name:
+                if b_drv > 0:
+                    drop = (b_drv - c_drv) / b_drv
+                    if drop > time_threshold:
+                        regressions.append(
+                            f"{name}: derived {b_drv:.4g} -> {c_drv:.4g} "
+                            f"({drop:+.1%} drop > {time_threshold:.0%})")
+            elif b_drv != 0:
+                delta = (c_drv - b_drv) / abs(b_drv)
+                if abs(delta) > hit_threshold:
+                    regressions.append(
+                        f"{name}: derived {b_drv:.4g} -> {c_drv:.4g} "
+                        f"({delta:+.1%} drift > ±{hit_threshold:.0%})")
+            continue
         if SERVE_MARKER in name:
             # serving replay rows: the derived column is deterministic
             # (seeded traffic, virtual clock) but its good direction is

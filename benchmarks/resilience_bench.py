@@ -35,6 +35,7 @@ from repro.core.cache import CachedEmbeddingBagCollection
 from repro.core.design_space import test_suite_config
 from repro.core.dlrm import dlrm_param_specs
 from repro.core.embedding import EmbeddingBagCollection
+from repro.core.tiers import AsyncCachedTier
 from repro.data.pipeline import DataPipeline
 from repro.data.synthetic import bounded_zipf_rows, make_dlrm_batch
 from repro.nn.params import init_params
@@ -44,7 +45,7 @@ from repro.train.fault_tolerance import (FaultInjector, FaultSpec,
                                          PreemptionHandler, TrainState,
                                          restore_train_state, run_chaos_loop,
                                          save_train_state)
-from repro.train.steps import (build_async_cached_dlrm_train_step,
+from repro.train.steps import (build_cached_train_step,
                                cached_dlrm_init_state)
 
 N_STEPS = 8
@@ -92,7 +93,7 @@ def recovery_bench(tmpdir):
         except FileNotFoundError:
             start = 0
         job.update(cc=cc, dense=dense, cstate=cstate, astate=astate,
-                   step=build_async_cached_dlrm_train_step(cfg, cc, opt),
+                   step=build_cached_train_step(cfg, AsyncCachedTier(cc), opt),
                    pipe=DataPipeline(lambda t: _batch_raw(cfg, ebc, t),
                                      prefetch=2, start_step=start,
                                      injector=inj))
@@ -169,7 +170,7 @@ def degraded_ratio_bench():
         dense = {"bottom": params["bottom"], "top": params["top"]}
         cstate = cached_dlrm_init_state(cc, opt, params)
         astate = cc.init_async_state(params["emb"]["mega"])
-        step = build_async_cached_dlrm_train_step(cfg, cc, opt)
+        step = build_cached_train_step(cfg, AsyncCachedTier(cc), opt)
         times = []
         for t in range(warm + measure):
             nxt = batches[t + 1] if overlapped else None

@@ -17,7 +17,7 @@ import traceback
 from benchmarks import (cache_bench, fig6_access, fig10_features, fig11_batch,
                         fig12_hash, fig13_mlp, fig14_placement, kernels_bench,
                         resilience_bench, serve_bench, table3_prod,
-                        tablewise_bench)
+                        tablewise_bench, tiers_bench)
 from benchmarks.common import ROWS, header
 
 
@@ -39,6 +39,7 @@ def main() -> None:
         ("table III production models", table3_prod.main),
         ("fig1/14 placement", fig14_placement.main),
         ("cache tier (section IV-B)", cache_bench.main),
+        ("tiers / heterogeneous memory", tiers_bench.main),
         ("tablewise hybrid parallelism", tablewise_bench.main),
         ("resilience / fault recovery", resilience_bench.main),
         ("serve traffic replay", serve_bench.main),

@@ -1,0 +1,197 @@
+"""N-tier heterogeneous memory bench: HBM/DRAM/bulk hit mix + bulk overlap.
+
+Three legs, all over the 3-tier `BulkCachedEmbeddingBagCollection`
+(docs/memory_tiers.md):
+
+* `tiers/hit_{hbm,dram,bulk}_a{alpha}_c{frac}pct` — steady-state fraction
+  of lookup traffic served by each tier under seeded Zipf(alpha) traffic,
+  swept over access skew x HBM cache fraction at zero injected bulk
+  latency. Deterministic (seeded traffic, sync path): diff_bench gates any
+  drift two-sided at the tight threshold. `tiers/promotion_bytes_*` rides
+  the same sweep (bulk -> DRAM promotion bytes per step).
+* `tiers/bulk_vs_dram_latency` — the ANALYTIC price of the hierarchy from
+  `launch/analysis.tier_hierarchy_traffic` (miss-stream latency with the
+  measured DRAM hit rate vs an all-DRAM host tier), the model
+  `recommend_placement` uses to mark tables cached_host vs cached_bulk.
+* `tiers/bulk_overlap_l5us[_strict]` — fraction of the injected
+  multi-microsecond bulk fetch latency HIDDEN behind dense compute by the
+  async exchange stream (derived = 1 - waited/scheduled, from
+  `TierCacheStats`). Timing-derived, so diff_bench gates it at the
+  wall-clock threshold.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_interleaved
+from repro.core.design_space import test_suite_config
+from repro.core.dlrm import dlrm_param_specs
+from repro.core.embedding import EmbeddingBagCollection
+from repro.core.tiers import AsyncCachedTier, BulkCachedEmbeddingBagCollection
+from repro.data.synthetic import bounded_zipf_rows
+from repro.launch.analysis import tier_hierarchy_traffic
+from repro.nn.params import init_params
+from repro.optim.optimizers import adagrad
+from repro.train.steps import build_cached_train_step, cached_dlrm_init_state
+
+WARM_STEPS = 20
+MEASURE_STEPS = 20
+BATCH, LOOKUPS = 256, 8
+
+# overlap leg: heavier dense compute so there is in-flight work for the
+# deferred bulk deadline to hide behind (constants chosen so the async
+# stream hides >= 0.9 of the scheduled latency at Zipf 1.05)
+OV_BATCH = 1024
+OV_WARM, OV_MEASURE = 5, 10
+OV_LATENCY_US = 5.0
+
+
+def _traffic(cfg, ebc, alpha: float, step: int, batch: int) -> np.ndarray:
+    """(B, F, L) OFFSET global rows under bounded Zipf(alpha) per table."""
+    rng = np.random.RandomState(1000 + step)
+    f = cfg.n_sparse_features
+    idx = np.empty((batch, f, LOOKUPS), np.int32)
+    for t in range(f):
+        idx[:, t, :] = bounded_zipf_rows(
+            rng, cfg.hash_sizes[t], batch * LOOKUPS, alpha
+        ).reshape(batch, LOOKUPS)
+    off = np.asarray(ebc.plan.table_offsets, np.int32)
+    return idx + off[None, :, None]
+
+
+def tier_hit_sweep():
+    """derived = per-tier steady-state traffic fractions (deterministic).
+
+    Same discipline as cache_bench.hit_rate_sweep: candidates are timed
+    round-robin through `time_interleaved` so runner drift hits every
+    config equally, and the counter window is isolated with
+    `stats.reset()` at the warm/measure boundary. Bulk latency is zero
+    here — these rows gate the tier ROUTING, not the latency model (the
+    overlap rows below own the timing side)."""
+    cfg = test_suite_config(n_dense=64, n_sparse=2, hash_size=25_000,
+                            mlp_width=64, mlp_layers=1, embed_dim=32)
+    ebc = EmbeddingBagCollection.build(cfg, n_shards=1,
+                                      strategy="cached_host")
+    total = ebc.plan.total_rows
+    mega = jnp.zeros((total, cfg.embed_dim), jnp.float32)
+    # HBM floor mirrors cache_bench: the cache must hold one batch's
+    # unique working set or prepare() thrashes. DRAM gets 25% of rows so
+    # the cold tail genuinely lives in bulk and evictions overflow DRAM.
+    combos = [(alpha, frac) for alpha in (1.05, 1.2)
+              for frac in (0.05, 0.10)]
+    states, fns = [], []
+    for alpha, frac in combos:
+        bc = BulkCachedEmbeddingBagCollection.build(
+            cfg, cache_rows=max(64, int(total * frac)),
+            dram_rows=int(total * 0.25), bulk_chunk=32, bulk_latency_us=0.0)
+        state = bc.init_state(mega)
+        box = [0]                       # per-candidate step cursor
+
+        def one(bc=bc, state=state, alpha=alpha, box=box):
+            idx = _traffic(cfg, ebc, alpha, box[0], BATCH)
+            box[0] += 1
+            jax.block_until_ready(bc.lookup(state, idx, train=False))
+
+        states.append(state)
+        fns.append(one)
+    for _ in range(WARM_STEPS):         # round-robin warm-up
+        for fn in fns:
+            fn()
+    for s in states:
+        s.stats.reset()
+    argsets = [() for _ in fns]
+    medians = time_interleaved(fns, argsets, warmup=0, iters=MEASURE_STEPS)
+    dram_rate = 0.0
+    for (alpha, frac), state, us in zip(combos, states, medians):
+        s = state.stats
+        looked = max(s.hits + s.misses, 1)
+        tag = f"a{alpha}_c{int(frac * 100)}pct"
+        emit(f"tiers/hit_hbm_{tag}", us, s.hits / looked)
+        emit(f"tiers/hit_dram_{tag}", us, s.dram_hits / looked)
+        emit(f"tiers/hit_bulk_{tag}", us, s.bulk_hits / looked)
+        emit(f"tiers/promotion_bytes_{tag}", us,
+             s.promotion_bytes / MEASURE_STEPS)
+        if (alpha, frac) == (1.05, 0.10):
+            dram_rate = s.dram_hit_rate
+    # analytic hierarchy price at the measured Zipf(1.05) c=10% DRAM hit
+    # rate: miss-stream latency vs serving the same misses all-DRAM
+    traffic = tier_hierarchy_traffic(
+        fetched_rows=1000, embed_dim=cfg.embed_dim, dram_hit_rate=dram_rate,
+        bulk_chunk=32, bulk_latency_us=50.0)
+    emit("tiers/bulk_vs_dram_latency", 0.0, traffic["bulk_vs_dram"])
+
+
+def bulk_overlap():
+    """derived = fraction of injected bulk latency hidden by the async
+    stream (1 - waited/scheduled); us = median wall time per train step.
+
+    The deadline model (`BulkStore._schedule`/`wait`) books the scheduled
+    cost when promotions for batch k+1 are staged and only sleeps the
+    REMAINDER when the commit barrier needs the rows — so everything
+    dispatched in between (the in-flight dense compute of batch k) pays
+    the latency down. strict_sync preserves the same accounting with the
+    wait taken inline, so both rows exist: the async one is the headline,
+    the strict one guards that determinism mode still absorbs the cost."""
+    cfg = test_suite_config(n_dense=64, n_sparse=2, hash_size=100_000,
+                            mlp_width=512, mlp_layers=3, embed_dim=32)
+    ebc = EmbeddingBagCollection.build(cfg, n_shards=1,
+                                      strategy="cached_host")
+    total = ebc.plan.total_rows
+    params = init_params(dlrm_param_specs(cfg, ebc), jax.random.PRNGKey(0))
+    opt = adagrad(0.01)
+
+    rng = np.random.RandomState(7)
+    batches = [{"dense": jnp.asarray(rng.randn(OV_BATCH, cfg.n_dense_features),
+                                     jnp.float32),
+                "idx": _traffic(cfg, ebc, 1.05, s, OV_BATCH),
+                "label": jnp.asarray(rng.rand(OV_BATCH) > 0.5, jnp.float32)}
+               for s in range(OV_WARM + OV_MEASURE)]
+
+    def run(strict: bool) -> tuple[float, float]:
+        bc = BulkCachedEmbeddingBagCollection.build(
+            cfg, cache_rows=int(total * 0.10), dram_rows=int(total * 0.30),
+            bulk_chunk=64, bulk_latency_us=OV_LATENCY_US)
+        tier = AsyncCachedTier(bc)
+        dense = {"bottom": params["bottom"], "top": params["top"]}
+        state = cached_dlrm_init_state(bc, opt, params)
+        astate = tier.init_state(params["emb"]["mega"])
+        step_fn = build_cached_train_step(cfg, tier, opt, strict_sync=strict)
+        times = []
+        for t, b in enumerate(batches):
+            nxt = (batches[t + 1] if not strict and t + 1 < len(batches)
+                   else None)
+            t0 = time.perf_counter()
+            dense_out, state, m = step_fn(dense, state, astate, b,
+                                          jnp.asarray(t, jnp.int32),
+                                          next_batch=nxt)
+            dense = dense_out
+            jax.block_until_ready(m["loss"])
+            if t >= OV_WARM:
+                times.append(time.perf_counter() - t0)
+            if t == OV_WARM - 1:
+                astate.stats.reset()
+        s = astate.stats
+        hidden = (1.0 - s.bulk_wait_us / s.bulk_sched_us
+                  if s.bulk_sched_us else 1.0)
+        times.sort()
+        return times[len(times) // 2] * 1e6, hidden
+
+    lat = int(OV_LATENCY_US)
+    us, hidden = run(strict=True)
+    emit(f"tiers/bulk_overlap_l{lat}us_strict", us, hidden)
+    us, hidden = run(strict=False)
+    emit(f"tiers/bulk_overlap_l{lat}us", us, hidden)
+
+
+def main():
+    """Run the tier hit-mix sweep and the bulk-overlap measurement."""
+    tier_hit_sweep()
+    bulk_overlap()
+
+
+if __name__ == "__main__":
+    main()

@@ -13,13 +13,14 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.core import CachedEmbeddingBagCollection, dlrm_param_specs
+from repro.core.tiers import AsyncCachedTier
 from repro.data import make_dlrm_batch
 from repro.data.pipeline import (DataPipeline, dedup_indices_hook,
                                  lookahead_rows)
 from repro.nn.params import init_params
 from repro.optim import adagrad
 from repro.serve.engine import DLRMEngine
-from repro.train.steps import (build_async_cached_dlrm_train_step,
+from repro.train.steps import (build_cached_train_step,
                                cached_dlrm_init_state)
 
 
@@ -35,7 +36,8 @@ def main():
     opt = adagrad(0.05)
     state = cached_dlrm_init_state(cc, opt, params)
     astate = cc.init_async_state(params["emb"]["mega"])
-    step = build_async_cached_dlrm_train_step(cfg, cc, opt, sparse_lr=0.1)
+    step = build_cached_train_step(cfg, AsyncCachedTier(cc), opt,
+                                   sparse_lr=0.1)
 
     hook = dedup_indices_hook(ebc.plan.table_offsets)
     pipe = DataPipeline(lambda s: make_dlrm_batch(cfg, 64, step=s),

@@ -22,6 +22,7 @@ from repro.configs import get_smoke_config
 from repro.core.cache import CachedEmbeddingBagCollection
 from repro.core.dlrm import dlrm_param_specs
 from repro.core.embedding import EmbeddingBagCollection
+from repro.core.tiers import AsyncCachedTier
 from repro.data.pipeline import DataPipeline
 from repro.data.synthetic import make_dlrm_batch
 from repro.nn.params import init_params
@@ -30,7 +31,7 @@ from repro.train import (CheckpointManager, DegradationManager, FaultInjector,
                          FaultSpec, PreemptionHandler, RetryPolicy,
                          TrainState, restore_train_state, run_chaos_loop,
                          save_train_state)
-from repro.train.steps import (build_async_cached_dlrm_train_step,
+from repro.train.steps import (build_cached_train_step,
                                cached_dlrm_init_state)
 
 CKPT = "runs/example_chaos_ckpt"
@@ -75,7 +76,7 @@ def main():
         dense = {"bottom": params0["bottom"], "top": params0["top"]}
         cstate = cached_dlrm_init_state(cc, opt, params0)
         astate = cc.init_async_state(params0["emb"]["mega"])
-        step = build_async_cached_dlrm_train_step(cfg, cc, opt)
+        step = build_cached_train_step(cfg, AsyncCachedTier(cc), opt)
         losses = {}
         for t in range(N_STEPS):
             nxt = dev(batch(t + 1)) if t + 1 < N_STEPS else None
@@ -116,7 +117,7 @@ def main():
         except FileNotFoundError:
             start = 0
         job.update(cc=cc, dense=dense, cstate=cstate, astate=astate,
-                   step=build_async_cached_dlrm_train_step(cfg, cc, opt),
+                   step=build_cached_train_step(cfg, AsyncCachedTier(cc), opt),
                    pipe=DataPipeline(batch, prefetch=2, start_step=start,
                                      injector=inj))
         return start

@@ -31,7 +31,7 @@ split as CacheEmbedding's ChunkParamMgr and MTrainS's tier manager).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, ClassVar
 
 import jax
 import jax.numpy as jnp
@@ -77,6 +77,14 @@ class CacheStats:
                 "cache_prefetched": float(self.prefetched),
                 "cache_fetch_chunks": float(self.fetch_chunks),
                 "cache_overfetch_rows": float(self.overfetch_rows)}
+
+    def reset(self) -> None:
+        """Zero every counter in place. Benchmark sweeps call this between
+        candidates sharing one process (benchmarks/cache_bench.py) so
+        per-candidate figures can never silently accumulate across runs;
+        works for subclasses too (iterates the dataclass fields)."""
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, 0)
 
 
 @dataclasses.dataclass
@@ -421,6 +429,10 @@ class CachedEmbeddingBagCollection:
                                # sleep) bounding transient-fault retries in
                                # `_fetch_guard`; None = fail fast
 
+    # stats flavour hook: the bulk-backed tier (core/tiers.py) swaps in
+    # TierCacheStats so per-tier counters ride every state/checkpoint path
+    _stats_cls: ClassVar[type] = CacheStats
+
     @classmethod
     def build(cls, cfg: DLRMConfig, cache_rows: int | None = None,
               strategy: str = "cached_host", decay: float = 0.98,
@@ -464,7 +476,7 @@ class CachedEmbeddingBagCollection:
             ema=np.zeros((r,), np.float32),
             ema_tick=np.zeros((r,), np.int64),
             tick=0,
-            stats=CacheStats())
+            stats=self._stats_cls())
 
     # -- admission -----------------------------------------------------------
 
@@ -508,6 +520,25 @@ class CachedEmbeddingBagCollection:
         local = row_slot[np.where(valid, idx, 0)]
         return np.where(valid, local, -1).astype(np.int32)
 
+    # -- tier hooks (overridden by the bulk-backed tier, core/tiers.py) ------
+
+    def _stage_capacity(self, state, missing: np.ndarray) -> None:
+        """Pre-fetch tier hook: every admission path calls this with the
+        sorted unique `missing` rows right before the capacity tier is
+        read. The two-tier collection stages nothing — capacity IS its
+        slowest tier. The bulk-backed tier overrides this to promote
+        bulk-resident rows into the DRAM capacity array (behind the
+        "bulk.fetch" fault site, guard fired before any mutation) so the
+        device fetch that follows reads current values."""
+
+    def _absorb_evictions(self, state, evicted_rows: np.ndarray) -> None:
+        """Post-eviction tier hook: every admission path calls this after
+        the host maps are updated, with the global rows displaced from the
+        device tier. The two-tier collection needs nothing — evicted rows
+        already live in capacity. The bulk-backed tier overrides this to
+        account the rows DRAM-resident and demote the coldest DRAM rows to
+        the bulk store when the DRAM budget overflows."""
+
     def _admit(self, state: CacheState, missing: np.ndarray,
                seeds: np.ndarray, protect: np.ndarray) -> int:
         """Bring `missing` global rows (SORTED ascending) into cache slots,
@@ -521,6 +552,9 @@ class CachedEmbeddingBagCollection:
         # fault-injection gate BEFORE any host-map mutation: a propagated
         # transient fault leaves the tier consistent for a step replay
         _fetch_guard(self.injector, self.retry)
+        # tier hook: promote bulk-resident rows into capacity before the
+        # fetch below reads it (no-op on the two-tier collection)
+        self._stage_capacity(state, missing)
         slots, victims = _pick_slots(
             state.slot_row, state.freq, n, protect,
             f"the batch working set exceeds cache_rows={state.cache_rows};"
@@ -565,6 +599,8 @@ class CachedEmbeddingBagCollection:
         state.slot_row[slots] = missing
         state.row_slot[missing] = slots.astype(np.int32)
         state.dirty[slots] = False
+        # tier hook: evicted rows fall back to the next tier down
+        self._absorb_evictions(state, evicted_rows)
         state.stats.fetches += n
         state.stats.evictions += len(victims)
         state.stats.writebacks += int(wb_mask.sum())
@@ -736,6 +772,46 @@ class CachedEmbeddingBagCollection:
         self.flush(state)
         return state.capacity, state.cap_accum
 
+    # -- EmbeddingTier protocol surface (core/tiers.py) ----------------------
+
+    def take(self, state: CacheState, idx, train: bool = True,
+             plan=None) -> np.ndarray:
+        """Protocol `take` (core/tiers.py EmbeddingTier): make the batch
+        current and return its device-tier index remap. The sync tier
+        plans, fetches, and installs inside this one call — `prepare` by
+        its protocol name."""
+        return self.prepare(state, idx, train=train, plan=plan)
+
+    def stage(self, state: CacheState, idx, train: bool = True,
+              plan=None) -> np.ndarray | None:
+        """Protocol `stage` (overlap the NEXT batch's fetch): the sync
+        tier performs every fetch inside its own `take`, so there is
+        nothing to stage ahead — returns None."""
+        return None
+
+    def prefetch_rows(self, state: CacheState, rows,
+                      gate: bool = False) -> int:
+        """Protocol alias of `prefetch`: best-effort admission of unique
+        global `rows` ahead of use. Returns rows admitted."""
+        return self.prefetch(state, rows, gate=gate)
+
+    def commit(self, state: CacheState) -> int:
+        """Protocol `commit`: the sync tier installs fetched rows inside
+        `take`, so nothing is ever pending — returns 0."""
+        return 0
+
+    def stats(self, state: CacheState) -> CacheStats:
+        """Protocol accessor for the tier's CacheStats."""
+        return state.stats
+
+    def placement(self) -> dict:
+        """Static tier layout, fastest level first (protocol accessor;
+        the bulk-backed tier appends its third level)."""
+        return {"strategy": "cached_host", "stream": "sync",
+                "levels": [{"tier": "hbm", "rows": self.cache_rows},
+                           {"tier": "dram",
+                            "rows": self.ebc.plan.total_rows}]}
+
     # -- async exchange stream (docs/cache.md "Async fetch stream") ----------
     #
     # Per-step protocol (k = in-flight batch):
@@ -782,7 +858,7 @@ class CachedEmbeddingBagCollection:
             ema=np.zeros((r,), np.float32),
             ema_tick=np.zeros((r,), np.int64),
             tick=0,
-            stats=CacheStats())
+            stats=self._stats_cls())
 
     def _protected_mask(self, astate: AsyncCacheState) -> np.ndarray:
         """Slots no plan may evict: the in-flight batch's working set,
@@ -859,6 +935,10 @@ class CachedEmbeddingBagCollection:
             # fault gate first: staged plans that die here leave the maps
             # unflipped and the queue intact (the batch re-plans at take)
             _fetch_guard(self.injector, self.retry)
+            # tier hook: promote bulk-resident rows into capacity before
+            # the shadow fetch below reads it (no-op on the two-tier
+            # collection); its own "bulk.fetch" guard also fires pre-mutation
+            self._stage_capacity(astate, missing)
             # fetch into a fresh shadow slab — reads the tiers only, so it
             # overlaps the in-flight batch's device compute
             if self.fetch_chunk > 1:
@@ -893,6 +973,9 @@ class CachedEmbeddingBagCollection:
                                 shadow_accum, src_pos)
         if n:                                  # nothing to commit for all-hit
             astate.pending.append(pending)
+        # tier hook AFTER the queue append: an overflow demotion that must
+        # drain pending dirty writebacks then sees this entry too
+        self._absorb_evictions(astate, evicted_rows)
         return pending
 
     def _plan_async(self, astate: AsyncCacheState, idx: np.ndarray,
@@ -1095,7 +1178,7 @@ class CachedEmbeddingBagCollection:
         as jax arrays from CheckpointManager.restore — each is coerced to
         the side init_state/init_async_state put it on). The presence of
         the async-only `epoch` key selects the state flavour."""
-        stats = CacheStats(**{k: int(v) for k, v in d["stats"].items()})
+        stats = self._stats_cls(**{k: int(v) for k, v in d["stats"].items()})
         dev = {k: jnp.asarray(d[k]) for k in
                ("capacity", "cap_accum", "cache", "cache_accum")}
         # restored leaves may alias read-only device buffers; the host-side
@@ -1157,6 +1240,12 @@ class RouteStats:
                 "route_invalidations": float(self.invalidations),
                 "route_fetch_chunks": float(self.fetch_chunks),
                 "route_remote_fetch_fraction": self.remote_fetch_fraction}
+
+    def reset(self) -> None:
+        """Zero every counter in place (the RouteStats side of the sweep
+        isolation contract — see `CacheStats.reset`)."""
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, 0)
 
 
 @dataclasses.dataclass
@@ -1589,6 +1678,55 @@ class MultiHostCachedEmbeddingBagCollection:
         caches are clean by construction — every update already lives at
         its owner."""
         return state.capacity, state.cap_accum
+
+    # -- EmbeddingTier protocol surface (core/tiers.py) ----------------------
+
+    def take(self, state: MultiHostCacheState, idx, train: bool = True,
+             plan=None) -> np.ndarray:
+        """Protocol `take`: plan the batch, install its misses eagerly,
+        and return the (H, B/H, F, L) slot-space remap. The jitted train
+        step uses `plan_step` directly (its device worklist is richer than
+        a remap); this entry serves eval / serving call sites. `plan` is
+        the global host SparsePlan when the reader thread built one."""
+        splan = self.plan_step(state, idx, global_plan=plan, train=train)
+        self.install_misses(state, splan)
+        return splan.local_idx
+
+    def stage(self, state: MultiHostCacheState, idx, train: bool = True,
+              plan=None) -> np.ndarray | None:
+        """Protocol `stage`: the multi-host tier overlaps through
+        `prefetch` (whole-batch idx) instead of a staged plan — returns
+        None."""
+        return None
+
+    def prefetch_rows(self, state: MultiHostCacheState, rows,
+                      gate: bool = False) -> int:
+        """Protocol `prefetch_rows`: the multi-host planner needs the full
+        (B, F, L) batch shape to split rows by host (see `prefetch`), so a
+        bare row list admits nothing — returns 0."""
+        return 0
+
+    def commit(self, state: MultiHostCacheState) -> int:
+        """Protocol `commit`: installs happen inside `plan_step`'s device
+        worklist (or the eager `install_misses`) — nothing pending."""
+        return 0
+
+    def flush(self, state: MultiHostCacheState) -> int:
+        """Protocol `flush`: caches are clean by construction (updates are
+        owner-routed), so there is never a dirty slot — returns 0."""
+        return 0
+
+    def stats(self, state: MultiHostCacheState) -> CacheStats:
+        """Protocol accessor for the tier's aggregate CacheStats."""
+        return state.stats
+
+    def placement(self) -> dict:
+        """Static tier layout, fastest level first (protocol accessor)."""
+        return {"strategy": "cached_host", "stream": "multihost",
+                "n_hosts": self.n_hosts,
+                "levels": [{"tier": "hbm", "rows": self.cache_rows},
+                           {"tier": "dram",
+                            "rows": self.ebc.plan.total_rows}]}
 
     # -- checkpointing -------------------------------------------------------
 

@@ -1,0 +1,681 @@
+"""N-tier heterogeneous embedding memory behind one `EmbeddingTier` protocol.
+
+MTrainS (arxiv 2305.01515) shows production DLRM tables tiered across
+HBM / DRAM / NVM by bandwidth need, not just the two levels core/cache.py
+grew for the paper's capacity problem. This module adds the third level
+and the formal surface that keeps a fourth from forking the codebase again:
+
+  `EmbeddingTier`   the runtime-checkable protocol every cached collection
+                    implements — `take` (make a batch current), `stage`
+                    (overlap the next batch's fetch), `prefetch_rows`,
+                    `commit`, `flush`, `materialize`, `state_dict` /
+                    `load_state_dict`, `stats`, `placement`. Call sites in
+                    train/steps.py, serve/dlrm_engine.py, and
+                    train/fault_tolerance.py consume tiers through this
+                    surface only.
+  `AsyncCachedTier` the async exchange stream as a first-class tier: a thin
+                    wrapper mapping the protocol onto
+                    `CachedEmbeddingBagCollection`'s *_async methods, so
+                    `build_cached_train_step` dispatches on tier TYPE
+                    instead of a builder-per-schedule.
+  `BulkCachedEmbeddingBagCollection`
+                    HBM cache -> DRAM capacity -> bulk store. The capacity
+                    array keeps full height (it stays the one authoritative
+                    value store, so every oracle stays bit-exact); a
+                    `dram_resident` mask splits the non-device rows between
+                    DRAM and the `BulkStore` (mmap-backed or RAM, with
+                    injected multi-microsecond block latency). Admissions
+                    whose rows live in bulk PROMOTE them first (chunked
+                    reads through `coalesce_rows`, behind the "bulk.fetch"
+                    fault site); evictions land in DRAM, and DRAM overflow
+                    DEMOTES the coldest rows (by the same EMA score that
+                    drives admission) back to bulk. Bulk latency is a
+                    deadline, not an inline sleep: the async stream's
+                    commit pays only what batch k's compute did not already
+                    hide (docs/memory_tiers.md).
+
+Residency is EXCLUSIVE by construction — device (row_slot >= 0), DRAM
+(dram_resident, not device), bulk (neither) partition the row space; the
+hypothesis property test in tests/test_tiers.py fuzzes promotion/demotion
+interleavings against it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, ClassVar, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import DLRMConfig
+from repro.core.cache import (AsyncCacheState, CachedEmbeddingBagCollection,
+                              CacheState, CacheStats, _ema_score,
+                              _fetch_guard)
+from repro.core.embedding import EmbeddingBagCollection
+from repro.kernels.sparse_plan import coalesce_rows
+
+
+# ---------------------------------------------------------------------------
+# Per-tier counters
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TierCacheStats(CacheStats):
+    """CacheStats plus the third tier's hit/traffic counters.
+
+    The device-tier figures keep their FBGEMM conventions (`hits`,
+    `misses`, `hit_rate`); the new counters split the MISS stream by the
+    level that served it — every admitted row came from DRAM
+    (`dram_hits`) or had to be promoted from bulk (`bulk_hits`) — and
+    price the promotion/demotion pipelines in rows, bytes, chunks, and
+    injected latency. All integers so the checkpoint path's int64 cast
+    round-trips (`state_dict`)."""
+
+    dram_hits: int = 0         # admitted rows whose staging copy was in DRAM
+    bulk_hits: int = 0         # admitted rows promoted from the bulk store
+    demotions: int = 0         # rows demoted DRAM -> bulk on budget overflow
+    promotion_bytes: int = 0   # bulk -> DRAM payload bytes (row + accum)
+    demotion_bytes: int = 0    # DRAM -> bulk payload bytes
+    bulk_read_chunks: int = 0  # block descriptors issued by promotions
+    bulk_write_chunks: int = 0  # block descriptors issued by demotions
+    bulk_sched_us: int = 0     # injected bulk latency scheduled (deadlines)
+    bulk_wait_us: int = 0      # scheduled latency actually paid at a sync
+                               # point (commit/take) — the un-hidden part
+
+    @property
+    def hit_hbm(self) -> int:
+        """Accesses served by the device tier (alias of `hits`)."""
+        return self.hits
+
+    @property
+    def dram_hit_rate(self) -> float:
+        """dram_hits / fetched rows: the fraction of the miss stream DRAM
+        absorbed before it could reach the bulk tier; 0.0 untouched."""
+        fetched = self.dram_hits + self.bulk_hits
+        return self.dram_hits / fetched if fetched else 0.0
+
+    @property
+    def hidden_fraction(self) -> float:
+        """1 - bulk_wait/bulk_sched: how much of the injected bulk latency
+        the async stream hid under compute; 1.0 when nothing was scheduled."""
+        if self.bulk_sched_us <= 0:
+            return 1.0
+        return max(0.0, 1.0 - self.bulk_wait_us / self.bulk_sched_us)
+
+    def snapshot(self) -> dict[str, float]:
+        """Flat metrics dict: the two-tier payload plus `tier_*` keys."""
+        out = super().snapshot()
+        out.update({
+            "tier_hit_hbm": float(self.hits),
+            "tier_hit_dram": float(self.dram_hits),
+            "tier_hit_bulk": float(self.bulk_hits),
+            "tier_dram_hit_rate": self.dram_hit_rate,
+            "tier_demotions": float(self.demotions),
+            "tier_promotion_bytes": float(self.promotion_bytes),
+            "tier_demotion_bytes": float(self.demotion_bytes),
+            "tier_bulk_read_chunks": float(self.bulk_read_chunks),
+            "tier_bulk_write_chunks": float(self.bulk_write_chunks),
+            "tier_bulk_sched_us": float(self.bulk_sched_us),
+            "tier_bulk_wait_us": float(self.bulk_wait_us)})
+        return out
+
+
+# ---------------------------------------------------------------------------
+# The bulk store (SSD/NVM stand-in)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class BulkStore:
+    """The slowest level: an mmap-backed (or plain RAM) row store standing
+    in for SSD/NVM below host-DRAM capacity.
+
+    Access is BLOCK-granular like a real block device: reads and writes
+    coalesce their sorted row lists into contiguous `chunk`-row blocks
+    (`coalesce_rows`, min_fill=1 — every access pays whole blocks) and
+    each block schedules `latency_us` of device latency. The latency is a
+    DEADLINE (`_ready_at`), not an inline sleep: `wait()` — called at the
+    consumption point (sync admission, or the async stream's commit) —
+    sleeps only the part that real work has not already hidden, and books
+    scheduled vs paid microseconds separately so the bench can measure the
+    hidden fraction exactly."""
+
+    values: np.ndarray         # (R, d) demoted-row payload (np or memmap)
+    accum: np.ndarray          # (R,) fp32 AdaGrad accumulators
+    chunk: int                 # block height in rows (>= 1)
+    latency_us: float          # injected device latency per block access
+    path: str | None = None    # backing .npy file when mmap-backed
+    _ready_at: float = 0.0     # monotonic deadline of the in-flight access
+
+    @classmethod
+    def build(cls, rows: int, dim: int, chunk: int, latency_us: float,
+              path: str | None = None,
+              dtype=np.float32) -> BulkStore:
+        """Allocate an (rows, dim) store; `path` switches the payload to
+        np.memmap-backed .npy files (`path` + a sibling accumulator file)
+        so the tier genuinely pages through the filesystem."""
+        if path and rows:
+            values = np.lib.format.open_memmap(
+                path, mode="w+", dtype=dtype, shape=(rows, dim))
+            accum = np.lib.format.open_memmap(
+                str(path) + ".accum.npy", mode="w+", dtype=np.float32,
+                shape=(rows,))
+        else:
+            values = np.zeros((rows, dim), dtype)
+            accum = np.zeros((rows,), np.float32)
+        return cls(values, accum, max(1, int(chunk)), float(latency_us),
+                   path if rows else None)
+
+    @property
+    def row_bytes(self) -> int:
+        """Payload bytes per row (embedding row + its accumulator)."""
+        return int(self.values.shape[1]) * self.values.itemsize \
+            + self.accum.itemsize
+
+    def _schedule(self, n_blocks: int, stats: TierCacheStats) -> None:
+        """Push the readiness deadline out by `n_blocks` block latencies
+        (accesses queue behind each other, like one device channel)."""
+        lat_us = n_blocks * self.latency_us
+        base = max(self._ready_at, time.monotonic())
+        self._ready_at = base + lat_us * 1e-6
+        stats.bulk_sched_us += int(round(lat_us))
+
+    def read(self, rows: np.ndarray,
+             stats: TierCacheStats) -> tuple[np.ndarray, np.ndarray]:
+        """Block-granular read of sorted unique `rows` (the promotion leg).
+        Schedules latency and books chunks/bytes; returns (values, accum)
+        copies."""
+        starts, _ = coalesce_rows(rows, self.chunk, len(self.values),
+                                  min_fill=1)
+        stats.bulk_read_chunks += len(starts)
+        stats.promotion_bytes += len(rows) * self.row_bytes
+        self._schedule(len(starts), stats)
+        return self.values[rows].copy(), self.accum[rows].copy()
+
+    def write(self, rows: np.ndarray, values: np.ndarray,
+              accum: np.ndarray, stats: TierCacheStats) -> None:
+        """Block-granular write of sorted unique `rows` (the demotion
+        leg). Schedules latency and books chunks/bytes/demotions."""
+        starts, _ = coalesce_rows(rows, self.chunk, len(self.values),
+                                  min_fill=1)
+        stats.bulk_write_chunks += len(starts)
+        stats.demotions += len(rows)
+        stats.demotion_bytes += len(rows) * self.row_bytes
+        self._schedule(len(starts), stats)
+        self.seed(rows, values, accum)
+
+    def seed(self, rows: np.ndarray, values: np.ndarray,
+             accum: np.ndarray) -> None:
+        """Raw install without latency or counters (initial population and
+        checkpoint restore)."""
+        self.values[rows] = np.asarray(values, self.values.dtype)
+        self.accum[rows] = np.asarray(accum, np.float32)
+
+    def wait(self, stats: TierCacheStats) -> float:
+        """Sleep until the outstanding access deadline — the consumption
+        point of the latency model. Books the microseconds actually paid
+        (the part compute did not hide) and returns them."""
+        now = time.monotonic()
+        paid = 0.0
+        if self._ready_at > now:
+            paid = self._ready_at - now
+            time.sleep(paid)
+            stats.bulk_wait_us += int(round(paid * 1e6))
+        self._ready_at = 0.0
+        return paid * 1e6
+
+
+# ---------------------------------------------------------------------------
+# The protocol
+# ---------------------------------------------------------------------------
+
+
+@runtime_checkable
+class EmbeddingTier(Protocol):
+    """The one surface every cached embedding tier implements.
+
+    Implementations: `CachedEmbeddingBagCollection` (sync two-tier),
+    `AsyncCachedTier` (its overlapped stream), `BulkCachedEmbeddingBag-
+    Collection` (three-tier, sync or wrapped async), and
+    `MultiHostCachedEmbeddingBagCollection`. Call sites outside core/
+    (train/steps.py, serve/dlrm_engine.py, train/fault_tolerance.py)
+    consume tiers through these methods only — conformance is asserted in
+    tests/test_tiers.py."""
+
+    def init_state(self, mega: jax.Array, accum: jax.Array | None = None):
+        """Fresh mutable tier state over the (rows, d) capacity table."""
+        ...
+
+    def take(self, state, idx, train: bool = True, plan=None):
+        """Make `idx`'s batch current; return its device-space remap."""
+        ...
+
+    def stage(self, state, idx, train: bool = True, plan=None):
+        """Overlap the NEXT batch's fetch (None when the tier can't)."""
+        ...
+
+    def prefetch_rows(self, state, rows, gate: bool = False) -> int:
+        """Best-effort admission of unique rows ahead of use."""
+        ...
+
+    def commit(self, state) -> int:
+        """Drain pending installs at a step boundary."""
+        ...
+
+    def flush(self, state) -> int:
+        """Write dirty device rows back to the capacity tier."""
+        ...
+
+    def materialize(self, state):
+        """The up-to-date (mega, accum) capacity arrays."""
+        ...
+
+    def state_dict(self, state) -> dict:
+        """Checkpoint-ready pytree covering the whole tier."""
+        ...
+
+    def load_state_dict(self, d: dict):
+        """Rebuild tier state from a `state_dict` pytree."""
+        ...
+
+    def stats(self, state) -> CacheStats:
+        """The tier's counters."""
+        ...
+
+    def placement(self) -> dict:
+        """Static memory-level layout, fastest first."""
+        ...
+
+
+# ---------------------------------------------------------------------------
+# The async stream as a tier
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncCachedTier:
+    """The async exchange stream as a first-class `EmbeddingTier`.
+
+    Wraps any `CachedEmbeddingBagCollection` (including the bulk-backed
+    subclass) and maps the protocol onto its *_async methods, so the
+    schedule is a TIER CHOICE — `build_cached_train_step` dispatches on
+    `AsyncCachedTier` vs the bare collection instead of keeping one
+    builder per schedule. State is the wrapped collection's
+    AsyncCacheState; semantics (bit-exactness vs the sync schedule, the
+    slot_epoch invariant) are unchanged (docs/cache.md)."""
+
+    cc: CachedEmbeddingBagCollection
+
+    @property
+    def ebc(self) -> EmbeddingBagCollection:
+        """The wrapped embedding collection (step-builder accessor)."""
+        return self.cc.ebc
+
+    @property
+    def cache_rows(self) -> int:
+        """Device-tier height of the wrapped collection."""
+        return self.cc.cache_rows
+
+    def init_state(self, mega: jax.Array,
+                   accum: jax.Array | None = None) -> AsyncCacheState:
+        """Protocol `init_state` -> the wrapped `init_async_state`."""
+        return self.cc.init_async_state(mega, accum)
+
+    def take(self, state: AsyncCacheState, idx, train: bool = True,
+             plan=None) -> np.ndarray:
+        """Protocol `take` -> `take_async`: pop the staged plan (or plan
+        now), mark in-flight, commit pending fetches."""
+        return self.cc.take_async(state, idx, train=train, plan=plan)
+
+    def stage(self, state: AsyncCacheState, idx, train: bool = True,
+              plan=None) -> np.ndarray:
+        """Protocol `stage` -> `stage_async`: dispatch the next batch's
+        shadow fetch so it overlaps the in-flight compute."""
+        return self.cc.stage_async(state, idx, train=train, plan=plan)
+
+    def prefetch_rows(self, state: AsyncCacheState, rows,
+                      gate: bool = False) -> int:
+        """Protocol `prefetch_rows` -> `stage_rows` (queued lookahead)."""
+        return self.cc.stage_rows(state, rows, gate=gate)
+
+    def commit(self, state: AsyncCacheState) -> int:
+        """Protocol `commit` -> `commit_async` (drain the pending queue)."""
+        return self.cc.commit_async(state)
+
+    def flush(self, state: AsyncCacheState) -> int:
+        """Protocol `flush` -> `flush_async`."""
+        return self.cc.flush_async(state)
+
+    def materialize(self, state: AsyncCacheState
+                    ) -> tuple[jax.Array, jax.Array]:
+        """Protocol `materialize` -> `materialize_async`."""
+        return self.cc.materialize_async(state)
+
+    def state_dict(self, state: AsyncCacheState) -> dict:
+        """Protocol `state_dict` (drains + unwinds, see the collection)."""
+        return self.cc.state_dict(state)
+
+    def load_state_dict(self, d: dict) -> AsyncCacheState:
+        """Protocol `load_state_dict` (the async flavour restores itself
+        off the checkpoint's `epoch` key)."""
+        return self.cc.load_state_dict(d)
+
+    def stats(self, state: AsyncCacheState) -> CacheStats:
+        """Protocol accessor for the tier's CacheStats."""
+        return state.stats
+
+    def placement(self) -> dict:
+        """The wrapped layout, restamped as the async stream."""
+        return {**self.cc.placement(), "stream": "async"}
+
+    # step-builder delegations (beyond the protocol)
+
+    def plan_to_slots(self, state: AsyncCacheState, batch: dict) -> dict:
+        """Relabel a host sparse plan onto the cache slab (see the
+        collection's `plan_to_slots`)."""
+        return self.cc.plan_to_slots(state, batch)
+
+    def mark_updated(self, state: AsyncCacheState, new_cache: jax.Array,
+                     new_cache_accum: jax.Array) -> None:
+        """Install post-update cache arrays (see `mark_updated`)."""
+        self.cc.mark_updated(state, new_cache, new_cache_accum)
+
+    def lookup(self, state: AsyncCacheState, idx, train: bool = False,
+               rules=None) -> jax.Array:
+        """Pooled lookup through the async stream (`lookup_async`)."""
+        return self.cc.lookup_async(state, idx, train=train, rules=rules)
+
+
+# ---------------------------------------------------------------------------
+# The three-tier collection
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class BulkCacheState(CacheState):
+    """CacheState plus the third tier: the bulk store and the exclusive
+    DRAM-residency mask (row in DRAM iff dram_resident and not cached)."""
+
+    bulk: BulkStore | None = None
+    dram_resident: np.ndarray | None = None  # (R,) bool
+
+    @property
+    def dram_occupancy(self) -> int:
+        """Rows whose current home is the DRAM level (not device, marked
+        resident) — the figure the DRAM budget bounds."""
+        return int((self.dram_resident & (self.row_slot < 0)).sum())
+
+
+@dataclasses.dataclass
+class BulkAsyncCacheState(AsyncCacheState):
+    """AsyncCacheState plus the third tier (see BulkCacheState)."""
+
+    bulk: BulkStore | None = None
+    dram_resident: np.ndarray | None = None  # (R,) bool
+
+    @property
+    def dram_occupancy(self) -> int:
+        """Rows whose current home is the DRAM level."""
+        return int((self.dram_resident & (self.row_slot < 0)).sum())
+
+
+@dataclasses.dataclass(frozen=True)
+class BulkCachedEmbeddingBagCollection(CachedEmbeddingBagCollection):
+    """Three-tier cached collection: HBM cache -> DRAM capacity -> bulk.
+
+    The capacity array keeps FULL height and stays the single
+    authoritative value store — promotion copies a row's (identical) bits
+    from the bulk store into capacity, demotion copies capacity bits out —
+    so every two-tier oracle (dense single-host, sync-vs-async, chaos
+    replay) stays bit-exact by construction, and `dram_rows >= total_rows`
+    (or <= 0) degenerates EXACTLY to the parent's two-tier behaviour with
+    zero bulk traffic. What the third tier adds is the residency
+    accounting, the chunked promotion/demotion pipelines with injected
+    block latency, and the per-tier counters (`TierCacheStats`):
+
+      admit       missing rows not DRAM-resident promote from bulk first
+                  (`_stage_capacity` hook, "bulk.fetch" fault site,
+                  chunked `BulkStore.read`), then fetch to device as usual;
+      evict       displaced rows land in DRAM (`_absorb_evictions` hook);
+                  when DRAM occupancy exceeds `dram_rows`, the coldest
+                  DRAM rows (lazily-decayed EMA score — the admission
+                  policy run backwards) demote via chunked writes;
+      async       bulk latency is a deadline paid at `commit_async` — the
+                  stream that stages batch k+1 behind batch k's compute
+                  hides it the same way it hides the capacity fetch.
+    """
+
+    dram_rows: int = 0         # DRAM budget in rows; <= 0 or >= total rows
+                               # disables the bulk tier (pure two-tier)
+    bulk_chunk: int = 32       # bulk block height in rows (device blocks)
+    bulk_latency_us: float = 50.0  # injected latency per block access
+    bulk_path: str | None = None   # mmap the bulk payload at this .npy path
+
+    _stats_cls: ClassVar[type] = TierCacheStats
+
+    @classmethod
+    def build(cls, cfg: DLRMConfig, cache_rows: int | None = None,
+              strategy: str = "cached_host", decay: float = 0.98,
+              use_kernel: bool | None = None, interpret: bool = False,
+              ema_admission: bool = True, fetch_chunk: int = 1,
+              dram_rows: int = 0, bulk_chunk: int = 32,
+              bulk_latency_us: float = 50.0, bulk_path: str | None = None
+              ) -> BulkCachedEmbeddingBagCollection:
+        """Build over a fresh single-shard EmbeddingBagCollection; see the
+        class fields for the tier knobs."""
+        ebc = EmbeddingBagCollection.build(cfg, n_shards=1, strategy=strategy)
+        rows = cache_rows if cache_rows is not None else ebc.plan.cache_rows
+        assert rows > 0, "cached_host plan produced an empty cache"
+        return cls(ebc, int(rows), decay, use_kernel, interpret,
+                   ema_admission, int(fetch_chunk),
+                   dram_rows=int(dram_rows), bulk_chunk=int(bulk_chunk),
+                   bulk_latency_us=float(bulk_latency_us),
+                   bulk_path=bulk_path)
+
+    def _dram_cap(self) -> int:
+        """Effective DRAM budget in rows (total height when disabled)."""
+        r = self.ebc.plan.total_rows
+        if self.dram_rows <= 0 or self.dram_rows >= r:
+            return r
+        return int(self.dram_rows)
+
+    # -- state ---------------------------------------------------------------
+
+    def _bulk_wrap(self, base, cls, mega: jax.Array,
+                   accum: jax.Array | None):
+        """Extend a freshly-initialised two-tier state with the bulk store
+        and residency mask. Cold start: with a real budget every row
+        begins in BULK (the table height >> DRAM scenario) and the working
+        set promotes on first touch; with the tier disabled every row is
+        DRAM-resident and the store is empty."""
+        r, d = mega.shape
+        if self._dram_cap() >= r:
+            dram = np.ones((r,), bool)
+            bulk = BulkStore.build(0, int(d), self.bulk_chunk,
+                                   self.bulk_latency_us)
+        else:
+            dram = np.zeros((r,), bool)
+            bulk = BulkStore.build(r, int(d), self.bulk_chunk,
+                                   self.bulk_latency_us, self.bulk_path,
+                                   dtype=np.asarray(mega).dtype)
+            acc = np.zeros((r,), np.float32) if accum is None \
+                else np.asarray(accum, np.float32)
+            bulk.seed(np.arange(r), np.asarray(mega), acc)
+        fields = dataclasses.fields(type(base))
+        return cls(**{f.name: getattr(base, f.name) for f in fields},
+                   bulk=bulk, dram_resident=dram)
+
+    def init_state(self, mega: jax.Array,
+                   accum: jax.Array | None = None) -> BulkCacheState:
+        """Three-tier `init_state` (see the parent for the buffer
+        contract)."""
+        base = super().init_state(mega, accum)
+        return self._bulk_wrap(base, BulkCacheState, mega, accum)
+
+    def init_async_state(self, mega: jax.Array,
+                         accum: jax.Array | None = None
+                         ) -> BulkAsyncCacheState:
+        """Three-tier async `init_state` twin."""
+        base = super().init_async_state(mega, accum)
+        return self._bulk_wrap(base, BulkAsyncCacheState, mega, accum)
+
+    # -- tier hooks ----------------------------------------------------------
+
+    def _stage_capacity(self, state, missing: np.ndarray) -> None:
+        """Promote `missing` rows that live in bulk into the DRAM capacity
+        array before the device fetch reads it. The "bulk.fetch" guard
+        fires BEFORE any mutation (stats included) so a propagated fault
+        leaves the whole admission cleanly replayable; the chunked
+        `BulkStore.read` schedules its latency deadline, paid inline on
+        the sync path and at commit on the async one."""
+        if len(missing) == 0:
+            return
+        promote = missing[~state.dram_resident[missing]]
+        if len(promote):
+            _fetch_guard(self.injector, self.retry, site="bulk.fetch")
+        s = state.stats
+        s.dram_hits += len(missing) - len(promote)
+        if not len(promote):
+            return
+        vals, acc = state.bulk.read(promote, s)
+        rows_j = jnp.asarray(promote, jnp.int32)
+        state.capacity = state.capacity.at[rows_j].set(
+            jnp.asarray(vals, state.capacity.dtype))
+        state.cap_accum = state.cap_accum.at[rows_j].set(
+            jnp.asarray(acc, jnp.float32))
+        state.dram_resident[promote] = True
+        s.bulk_hits += len(promote)
+        if not isinstance(state, AsyncCacheState):
+            state.bulk.wait(s)     # sync path consumes immediately
+
+    def _absorb_evictions(self, state, evicted_rows: np.ndarray) -> None:
+        """Rows displaced from the device tier fall back to DRAM; demote
+        the coldest DRAM rows when that overflows the budget."""
+        ev = np.asarray(evicted_rows, np.int64).ravel()
+        ev = ev[ev >= 0]
+        if len(ev):
+            state.dram_resident[ev] = True
+        self._demote_overflow(state, ev)
+
+    def _demote_overflow(self, state, exclude: np.ndarray) -> None:
+        """Demote the coldest DRAM-resident rows (lazily-decayed EMA
+        score, the admission policy run backwards) until occupancy fits
+        `dram_rows`. `exclude` (this call's fresh evictions) never demote
+        in the same breath — in the async stream their dirty writeback may
+        still be queued. Older queued writebacks that intersect the victim
+        set drain first (commit_async), so a demotion always reads
+        post-writeback capacity values."""
+        r = len(state.dram_resident)
+        cap = self._dram_cap()
+        if cap >= r:
+            return
+        cand_mask = state.dram_resident & (state.row_slot < 0)
+        over = int(cand_mask.sum()) - cap
+        if over <= 0:
+            return
+        if len(exclude):
+            cand_mask[exclude] = False
+        cand = np.flatnonzero(cand_mask)
+        over = min(over, len(cand))
+        if over <= 0:
+            return
+        scores = _ema_score(state.ema, state.ema_tick, cand, state.tick,
+                            self.decay)
+        order = np.argsort(scores, kind="stable")
+        victims = np.sort(cand[order[:over]])
+        if isinstance(state, AsyncCacheState) and state.pending:
+            queued = [p.evict_rows[p.evict_rows >= 0]
+                      for p in state.pending]
+            qwb = np.concatenate(queued) if queued \
+                else np.empty((0,), np.int64)
+            if len(qwb) and np.intersect1d(victims, qwb).size:
+                self.commit_async(state)
+        vidx = jnp.asarray(victims, jnp.int32)
+        vals = np.asarray(jnp.take(state.capacity, vidx, axis=0))
+        acc = np.asarray(jnp.take(state.cap_accum, vidx))
+        state.bulk.write(victims, vals, acc, state.stats)
+        state.dram_resident[victims] = False
+        if not isinstance(state, AsyncCacheState):
+            state.bulk.wait(state.stats)
+
+    # -- async consumption point ---------------------------------------------
+
+    def commit_async(self, astate) -> int:
+        """Commit pending fetches, paying whatever part of the scheduled
+        bulk latency batch k's compute did not hide (the deadline model —
+        see BulkStore.wait)."""
+        bulk = getattr(astate, "bulk", None)
+        if bulk is not None:
+            bulk.wait(astate.stats)
+        return super().commit_async(astate)
+
+    # -- introspection -------------------------------------------------------
+
+    def tier_residency(self, state) -> dict[str, np.ndarray]:
+        """Exclusive per-row membership masks {hbm, dram, bulk} — they
+        partition the row space by construction; tests/test_tiers.py
+        fuzzes promotion/demotion interleavings against exactly this."""
+        hbm = state.row_slot >= 0
+        dram = ~hbm & state.dram_resident
+        bulk = ~hbm & ~state.dram_resident
+        return {"hbm": hbm, "dram": dram, "bulk": bulk}
+
+    def placement(self) -> dict:
+        """Static three-level layout, fastest first."""
+        r = self.ebc.plan.total_rows
+        return {"strategy": "cached_bulk", "stream": "sync",
+                "levels": [
+                    {"tier": "hbm", "rows": self.cache_rows},
+                    {"tier": "dram", "rows": self._dram_cap()},
+                    {"tier": "bulk", "rows": r,
+                     "chunk": self.bulk_chunk,
+                     "latency_us": self.bulk_latency_us,
+                     "mmap": bool(self.bulk_path)}]}
+
+    # -- checkpointing -------------------------------------------------------
+
+    def state_dict(self, state) -> dict:
+        """Parent snapshot (drained/unwound) + the residency mask. The
+        bulk payload itself is NOT saved: bulk rows are bit-identical to
+        their capacity values by construction, so restore rebuilds the
+        store from capacity."""
+        d = super().state_dict(state)
+        d["dram_resident"] = np.asarray(state.dram_resident).copy()
+        return d
+
+    def load_state_dict(self, d: dict):
+        """Rebuild the three-tier state: the parent restores the two-tier
+        half (stats come back as TierCacheStats via `_stats_cls`), then
+        the bulk store is re-seeded from capacity for every
+        non-DRAM-resident row."""
+        dram = np.array(d["dram_resident"], bool)
+        base = super().load_state_dict(
+            {k: v for k, v in d.items() if k != "dram_resident"})
+        cls = BulkAsyncCacheState if isinstance(base, AsyncCacheState) \
+            else BulkCacheState
+        fields = dataclasses.fields(type(base))
+        st = cls(**{f.name: getattr(base, f.name) for f in fields},
+                 bulk=None, dram_resident=dram)
+        r, dim = st.capacity.shape
+        if self._dram_cap() >= r:
+            st.bulk = BulkStore.build(0, int(dim), self.bulk_chunk,
+                                      self.bulk_latency_us)
+            return st
+        st.bulk = BulkStore.build(r, int(dim), self.bulk_chunk,
+                                  self.bulk_latency_us, self.bulk_path)
+        rows = np.flatnonzero(~dram)
+        if len(rows):
+            ridx = jnp.asarray(rows, jnp.int32)
+            st.bulk.seed(rows, np.asarray(jnp.take(st.capacity, ridx,
+                                                   axis=0)),
+                         np.asarray(jnp.take(st.cap_accum, ridx)))
+        return st
+
+
+def tier_conformance(obj: Any) -> bool:
+    """True iff `obj` structurally satisfies `EmbeddingTier` — the assert
+    tests and call sites use instead of hand-rolled hasattr chains."""
+    return isinstance(obj, EmbeddingTier)

@@ -249,6 +249,68 @@ def cache_admission_traffic(fetched_rows: float, embed_dim: int,
                                   if single_bytes else 1.0)}
 
 
+def tier_hierarchy_traffic(fetched_rows: float, embed_dim: int,
+                           dram_hit_rate: float,
+                           bulk_chunk: int = 32,
+                           bulk_latency_us: float = 50.0,
+                           chunk_density: float = 1.0,
+                           demotion_rows: float | None = None,
+                           dram_latency_us: float = 0.5,
+                           itemsize: int = 4, accum_itemsize: int = 4,
+                           descriptor_bytes: int = 32) -> dict[str, float]:
+    """Per-tier bytes x latency model of the HBM -> DRAM -> bulk hierarchy
+    (core/tiers.py) — the pricing `recommend_placement` uses to mark
+    tables cached_host (DRAM-backed) vs cached_bulk (bulk-backed).
+
+    The miss stream that reaches the capacity level (`fetched_rows` per
+    step, e.g. `zipf_expected_unique` discounted by the device hit rate)
+    splits by `dram_hit_rate` (the `TierCacheStats.dram_hit_rate`
+    convention): the DRAM share pays one descriptor + payload at DRAM
+    latency; the bulk share PROMOTES through block-granular reads —
+    `ceil(rows / (bulk_chunk * chunk_density))` blocks, each moving a full
+    `bulk_chunk`-row block (over-fetch included) and costing
+    `bulk_latency_us`. In steady state every promotion displaces one DRAM
+    row, so demotions write the same block traffic back unless
+    `demotion_rows` overrides the equilibrium.
+
+    Returns the per-leg bytes and microseconds plus `total_latency_us`
+    (what a fully synchronous schedule would stall) and `bulk_vs_dram`,
+    the hierarchy's latency relative to an all-DRAM capacity tier (>= 1;
+    the async stream's job is hiding the difference — the measured
+    counterpart is `tiers/bulk_overlap` in benchmarks/tiers_bench.py)."""
+    row_bytes = float(embed_dim * itemsize + accum_itemsize)
+    dram_rows = fetched_rows * min(max(dram_hit_rate, 0.0), 1.0)
+    bulk_rows = max(fetched_rows - dram_rows, 0.0)
+    density = min(max(chunk_density, 1e-9), 1.0)
+    rows_per_block = max(float(bulk_chunk) * density, 1e-9)
+    read_blocks = math.ceil(bulk_rows / rows_per_block) if bulk_rows else 0
+    demote = bulk_rows if demotion_rows is None else float(demotion_rows)
+    write_blocks = math.ceil(demote / rows_per_block) if demote else 0
+    block_bytes = float(bulk_chunk) * row_bytes + descriptor_bytes
+    dram_bytes = dram_rows * (row_bytes + descriptor_bytes)
+    bulk_read_bytes = read_blocks * block_bytes
+    bulk_write_bytes = write_blocks * block_bytes
+    dram_us = dram_rows * dram_latency_us
+    bulk_us = (read_blocks + write_blocks) * bulk_latency_us
+    all_dram_us = fetched_rows * dram_latency_us
+    total_us = dram_us + bulk_us
+    return {"row_bytes": row_bytes,
+            "dram_rows": dram_rows,
+            "bulk_rows": bulk_rows,
+            "demotion_rows": demote,
+            "bulk_read_blocks": float(read_blocks),
+            "bulk_write_blocks": float(write_blocks),
+            "dram_bytes": dram_bytes,
+            "bulk_read_bytes": bulk_read_bytes,
+            "bulk_write_bytes": bulk_write_bytes,
+            "total_bytes": dram_bytes + bulk_read_bytes + bulk_write_bytes,
+            "dram_latency_us": dram_us,
+            "bulk_latency_us": bulk_us,
+            "total_latency_us": total_us,
+            "bulk_vs_dram": (total_us / all_dram_us
+                             if all_dram_us > 0 else 1.0)}
+
+
 def serve_replay_traffic(requests: float, examples: int, n_features: int,
                          truncation: int, embed_dim: int, hit_rate: float,
                          shed_rate: float = 0.0,
@@ -338,7 +400,10 @@ def recommend_placement(hash_sizes, mean_lookups, embed_dim: int,
                         batch: int, truncation: int, n_hosts: int,
                         hbm_budget_bytes: float, alpha: float = 1.05,
                         hit_rate: float = 0.0,
-                        itemsize: int = 4) -> dict:
+                        itemsize: int = 4,
+                        dram_budget_bytes: float = 0.0,
+                        bulk_chunk: int = 32,
+                        bulk_latency_us: float = 50.0) -> dict:
     """Compose the traffic models into a per-table placement pick — the
     analytic closing of the loop "Building a Performance Model for DLRM
     Training on GPUs" (arxiv 2201.07821) argues for: place by priced
@@ -360,13 +425,22 @@ def recommend_placement(hash_sizes, mean_lookups, embed_dim: int,
                    `zipf_expected_unique`, misses discounted by
                    `hit_rate`.
 
+    A positive `dram_budget_bytes` additionally tiers the CAPACITY level
+    (the N-tier hierarchy, core/tiers.py): tables fill host DRAM greedily
+    by heat density (expected unique rows per byte — hottest bytes stay in
+    DRAM) and the overflow is marked for the bulk tier. Each per-table
+    entry then carries `"tier": "dram" | "bulk"` — i.e. cached_host vs
+    cached_bulk — and the result gains a `"tiering"` dict with the split
+    and its `tier_hierarchy_traffic` pricing at (`bulk_chunk`,
+    `bulk_latency_us`).
+
     Returns {"pick", "fits_one_host", "tablewise", "rowshard",
     "per_table": [{"table", "strategy", "owner", "column_shards",
-    "bytes", "cost"}], "plan"} — `plan` is the PlacementPlan behind the
-    table_wise pricing, ready to hand to `EmbeddingBagCollection`. The
-    deterministic bench rows (benchmarks/dlrm_bench.py `tablewise/...`)
-    validate the tablewise model against the step's measured exchange
-    metrics."""
+    "bytes", "cost", "tier"}], "plan", "tiering"} — `plan` is the
+    PlacementPlan behind the table_wise pricing, ready to hand to
+    `EmbeddingBagCollection`. The deterministic bench rows
+    (benchmarks/dlrm_bench.py `tablewise/...`) validate the tablewise
+    model against the step's measured exchange metrics."""
     import numpy as np  # local: this module otherwise imports stdlib only
 
     from repro.core.placement import plan_placement
@@ -414,9 +488,37 @@ def recommend_placement(hash_sizes, mean_lookups, embed_dim: int,
                     else "column_wise" if cs > 1 else "table_wise")
         per_table.append({"table": t, "strategy": strategy,
                           "owner": owners[t], "column_shards": cs,
-                          "bytes": table_bytes[t], "cost": costs[t]})
+                          "bytes": table_bytes[t], "cost": costs[t],
+                          "tier": "dram"})
+    tiering = None
+    if dram_budget_bytes > 0:
+        # greedy DRAM fill by heat density (expected unique rows touched
+        # per byte held): the hottest bytes stay a DRAM hit, the coldest
+        # tables page through the bulk tier
+        order = sorted(range(n_f),
+                       key=lambda t: -(uniq_t[t] / max(table_bytes[t], 1.0)))
+        spent, dram_tables, bulk_tables = 0.0, [], []
+        for t in order:
+            if spent + table_bytes[t] <= float(dram_budget_bytes):
+                spent += table_bytes[t]
+                dram_tables.append(t)
+            else:
+                per_table[t]["tier"] = "bulk"
+                bulk_tables.append(t)
+        fetched = u_g * (1.0 - min(max(hit_rate, 0.0), 1.0))
+        uniq_dram = sum(uniq_t[t] for t in dram_tables)
+        dram_hit = uniq_dram / u_g if u_g > 0 else 1.0
+        tiering = {"dram_tables": sorted(dram_tables),
+                   "bulk_tables": sorted(bulk_tables),
+                   "dram_bytes": spent,
+                   "bulk_bytes": sum(table_bytes[t] for t in bulk_tables),
+                   "dram_hit_rate": dram_hit,
+                   "traffic": tier_hierarchy_traffic(
+                       fetched, embed_dim, dram_hit, bulk_chunk=bulk_chunk,
+                       bulk_latency_us=bulk_latency_us, itemsize=itemsize)}
     return {"pick": pick, "fits_one_host": fits, "tablewise": tw,
-            "rowshard": rs, "per_table": per_table, "plan": plan}
+            "rowshard": rs, "per_table": per_table, "plan": plan,
+            "tiering": tiering}
 
 
 # ---------------------------------------------------------------------------

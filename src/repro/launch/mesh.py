@@ -29,5 +29,5 @@ def make_host_mesh(n_hosts: int, axis: str = "data") -> jax.sharding.Mesh:
     """1-D mesh over the data-parallel hosts of the multi-host cached tier
     (core/cache.py): the capacity tier row-shards over this axis and the
     routed sparse update shard_maps over it (train/steps.py
-    build_multihost_cached_train_step)."""
+    build_cached_train_step's multi-host dispatch)."""
     return jax.make_mesh((n_hosts,), (axis,))

@@ -383,7 +383,7 @@ class DLRMServeEngine:
         else:
             try:
                 _fetch_guard(self.injector, self.retry, site="serve.fetch")
-                local = self.cc.prepare(self.state, idx, train=False)
+                local = self.cc.take(self.state, idx, train=False)
             except Exception as e:
                 if not getattr(e, "transient", False):
                     raise

@@ -272,7 +272,7 @@ class DLRMEngine:
             return np.zeros((0,), np.float32)
         outs = []
         for s, e in self._split_spans(idx):
-            local = self.cc.prepare(self.state, idx[s:e], train=False)
+            local = self.cc.take(self.state, idx[s:e], train=False)
             probs = self._fwd(self.dense, self.state.cache,
                               jnp.asarray(dense_x[s:e]), jnp.asarray(local))
             outs.append(np.asarray(probs, np.float32))

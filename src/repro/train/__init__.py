@@ -23,6 +23,7 @@ from repro.train.fault_tolerance import (  # noqa: F401
 from repro.train.steps import (  # noqa: F401
     build_async_cached_dlrm_train_step,
     build_cached_dlrm_train_step,
+    build_cached_train_step,
     build_dlrm_train_step,
     build_lm_train_step,
     cached_dlrm_init_state,

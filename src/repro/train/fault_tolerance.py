@@ -51,9 +51,10 @@ import numpy as np
 
 #: hook points a FaultSpec can target (call sites fire these by name).
 #: `serve.fetch` guards the serving tier's capacity fetches and
-#: `serve.admit` its admission path (serve/dlrm_engine.py).
-SITES = ("pipeline.batch", "cache.fetch", "checkpoint.write", "loop.step",
-         "serve.fetch", "serve.admit")
+#: `serve.admit` its admission path (serve/dlrm_engine.py); `bulk.fetch`
+#: guards the bulk-tier promotion reads (core/tiers.py).
+SITES = ("pipeline.batch", "cache.fetch", "bulk.fetch", "checkpoint.write",
+         "loop.step", "serve.fetch", "serve.admit")
 
 #: raising kinds ("error"/"kill") throw at the hook point; cooperative kinds
 #: ("latency"/"torn"/"preempt"/"host_loss") return the spec for the call
@@ -127,6 +128,7 @@ class FaultInjector:
         seed => same schedule (the chaos tests' determinism contract)."""
         kinds = {"pipeline.batch": ("kill", "error"),
                  "cache.fetch": ("error", "latency"),
+                 "bulk.fetch": ("error", "latency"),
                  "checkpoint.write": ("torn",),
                  "loop.step": ("preempt",),
                  "serve.fetch": ("error", "latency"),
@@ -165,7 +167,8 @@ class FaultInjector:
             time.sleep(float(spec.arg or 0.002))
             return spec
         if spec.kind == "error":
-            if site in ("cache.fetch", "serve.fetch", "serve.admit"):
+            if site in ("cache.fetch", "bulk.fetch", "serve.fetch",
+                        "serve.admit"):
                 raise TransientFetchFault(
                     f"injected transient fetch fault at {site}[{at}]")
             raise InjectedFault(f"injected fault at {site}[{at}]")

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from collections.abc import Callable
 
 import jax
@@ -21,8 +22,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import DLRMConfig, ModelConfig
+from repro.core.cache import (CachedEmbeddingBagCollection,
+                              MultiHostCachedEmbeddingBagCollection)
 from repro.core.dlrm import _bce, dlrm_forward_dense, dlrm_grads
 from repro.core.embedding import EmbeddingBagCollection
+from repro.core.tiers import AsyncCachedTier, EmbeddingTier
 from repro.kernels import ops as kernel_ops
 from repro.kernels import ref as kref
 from repro.kernels.sparse_plan import (build_sparse_plan_host,
@@ -294,21 +298,18 @@ def _build_cached_inner(cfg: DLRMConfig, cc, dense_opt: Optimizer,
     return jax.jit(inner, donate_argnums=(2, 3))
 
 
-def build_cached_dlrm_train_step(cfg: DLRMConfig, cc, dense_opt: Optimizer,
-                                 sparse_lr: float = 0.05,
-                                 sparse_eps: float = 1e-8,
-                                 interpret: bool = False,
-                                 rules: LogicalRules = TRAIN_RULES,
-                                 fetch_chunk: int | None = None
-                                 ) -> Callable:
-    """Train step for `CachedEmbeddingBagCollection` (the cached_host tier).
+def _build_sync_cached_step(cfg: DLRMConfig, cc, dense_opt: Optimizer,
+                            sparse_lr: float, sparse_eps: float,
+                            interpret: bool, rules: LogicalRules) -> Callable:
+    """Sync-schedule half of `build_cached_train_step` (the cached_host
+    tier consumed through the `EmbeddingTier` protocol).
 
-    Split execution: the HOST half (cc.prepare) makes the batch's rows
+    Split execution: the HOST half (tier.take) makes the batch's rows
     cache-resident and remaps indices to slot space; the jitted DEVICE half
     then runs forward/backward/update entirely against the small cache
     array — per-step device cost scales with cache_rows, not table height.
     Row-wise AdaGrad updates land on cached rows (slots were marked dirty
-    by prepare) and reach the capacity tier on eviction or flush.
+    by take) and reach the capacity tier on eviction or flush.
 
     Returns step(params, state, cache_state, batch, step_idx,
     next_batch=None) -> (params, state, metrics) where params = {"bottom",
@@ -317,27 +318,21 @@ def build_cached_dlrm_train_step(cfg: DLRMConfig, cc, dense_opt: Optimizer,
     pipeline's upcoming batch as `next_batch`: its "uniq_rows" (attached by
     data.dedup_indices_hook in the reader thread) are admitted AFTER the
     device work is dispatched, so the capacity-tier fetch overlaps compute.
-
-    `fetch_chunk` (> 1) overrides the collection's chunk-granular transfer
-    size: capacity->cache fetches move contiguous row blocks instead of
-    single rows (docs/cache.md "Chunk-granular transfers").
     """
 
-    if fetch_chunk is not None:
-        cc = dataclasses.replace(cc, fetch_chunk=fetch_chunk)
     inner_jit = _build_cached_inner(cfg, cc, dense_opt, sparse_lr,
                                     sparse_eps, interpret, rules)
 
     def step(params, state, cache_state, batch, step_idx, next_batch=None):
         # a hook-attached plan feeds the miss planner too (its live prefix
         # IS the sorted unique row set) — the np.unique re-sort is gone
-        local = cc.prepare(cache_state, batch["idx"], train=True,
-                           plan=host_plan_from_batch(batch))
+        local = cc.take(cache_state, batch["idx"], train=True,
+                        plan=host_plan_from_batch(batch))
         dev_batch = {**batch, "idx": jnp.asarray(local)}
         dev_batch.pop("uniq_rows", None)
         if "plan_rows" in batch:
             # the reader thread's bucketing plan is in global row space; the
-            # batch's rows are all resident after prepare, so a cheap host
+            # batch's rows are all resident after take, so a cheap host
             # relabel (row -> slot) carries it onto the cache slab
             dev_batch.update(cc.plan_to_slots(cache_state, batch))
         new_dense, new_dense_state, new_cache, new_accum, metrics = inner_jit(
@@ -347,8 +342,8 @@ def build_cached_dlrm_train_step(cfg: DLRMConfig, cc, dense_opt: Optimizer,
         if next_batch is not None and "uniq_rows" in next_batch:
             # the jitted step above is dispatched asynchronously — admitting
             # the next batch's rows here overlaps fetch with device compute
-            cc.prefetch(cache_state, next_batch["uniq_rows"])
-        metrics = {**metrics, **cache_state.stats.snapshot()}
+            cc.prefetch_rows(cache_state, next_batch["uniq_rows"])
+        metrics = {**metrics, **cc.stats(cache_state).snapshot()}
         return new_dense, {"dense": new_dense_state}, metrics
 
     return step
@@ -361,25 +356,21 @@ def cached_dlrm_init_state(cc, dense_opt: Optimizer, params: dict) -> dict:
                                      "top": params["top"]})}
 
 
-def build_async_cached_dlrm_train_step(cfg: DLRMConfig, cc,
-                                       dense_opt: Optimizer,
-                                       sparse_lr: float = 0.05,
-                                       sparse_eps: float = 1e-8,
-                                       interpret: bool = False,
-                                       rules: LogicalRules = TRAIN_RULES,
-                                       strict_sync: bool = False,
-                                       fetch_chunk: int | None = None
-                                       ) -> Callable:
-    """Overlapped cached train step: batch k+1's capacity-tier fetch runs
-    while batch k's dense forward/backward executes (docs/cache.md "Async
-    fetch stream"). Per call:
+def _build_async_cached_step(cfg: DLRMConfig, tier: AsyncCachedTier,
+                             dense_opt: Optimizer, sparse_lr: float,
+                             sparse_eps: float, interpret: bool,
+                             rules: LogicalRules,
+                             strict_sync: bool) -> Callable:
+    """Overlapped half of `build_cached_train_step`: batch k+1's
+    capacity-tier fetch runs while batch k's dense forward/backward
+    executes (docs/cache.md "Async fetch stream"). Per call:
 
-      1. `take_async` — batch k's staged plan (made during step k-1) is
+      1. `tier.take` — batch k's staged plan (made during step k-1) is
          popped and every pending shadow fetch COMMITS: a cheap on-device
          row swap, dispatched after batch k-1's update so dirty-victim
          writebacks carry post-update values.
       2. the jitted device half runs against the committed cache slab;
-      3. `stage_async(next_batch)` — batch k+1's miss rows start fetching
+      3. `tier.stage(next_batch)` — batch k+1's miss rows start fetching
          into a fresh shadow slab, off the critical path;
       4. optional `prefetch_rows` (k-step pipeline lookahead, see
          data.lookahead_rows) are queued best-effort behind it.
@@ -391,42 +382,37 @@ def build_async_cached_dlrm_train_step(cfg: DLRMConfig, cc,
 
     Returns step(params, state, astate, batch, step_idx, next_batch=None,
     prefetch_rows=None) -> (params, state, metrics); astate is an
-    AsyncCacheState from `cc.init_async_state`; batch carries OFFSET global
+    AsyncCacheState from `tier.init_state`; batch carries OFFSET global
     indices (e.g. from data.dedup_indices_hook).
-
-    `fetch_chunk` (> 1) switches the staged capacity->cache fetches to
-    contiguous row blocks (chunk-granular transfers).
     """
 
-    if fetch_chunk is not None:
-        cc = dataclasses.replace(cc, fetch_chunk=fetch_chunk)
-    inner_jit = _build_cached_inner(cfg, cc, dense_opt, sparse_lr,
+    inner_jit = _build_cached_inner(cfg, tier.cc, dense_opt, sparse_lr,
                                     sparse_eps, interpret, rules)
 
     def step(params, state, astate, batch, step_idx, next_batch=None,
              prefetch_rows=None):
-        local = cc.take_async(astate, batch["idx"], train=True,
-                              plan=host_plan_from_batch(batch))
+        local = tier.take(astate, batch["idx"], train=True,
+                          plan=host_plan_from_batch(batch))
         dev_batch = {**batch, "idx": jnp.asarray(local)}
         dev_batch.pop("uniq_rows", None)
         if "plan_rows" in batch:
-            dev_batch.update(cc.plan_to_slots(astate, batch))
+            dev_batch.update(tier.plan_to_slots(astate, batch))
         new_dense, new_dense_state, new_cache, new_accum, metrics = inner_jit(
             params, state["dense"], astate.cache, astate.cache_accum,
             dev_batch, step_idx)
-        cc.mark_updated(astate, new_cache, new_accum)
+        tier.mark_updated(astate, new_cache, new_accum)
         # snapshot BEFORE staging batch k+1 so step k's metrics cover only
         # batches that ran — identical between overlapped and strict_sync
         # schedules (the point of the fallback flag is A/B comparison)
-        metrics = {**metrics, **astate.stats.snapshot()}
+        metrics = {**metrics, **tier.stats(astate).snapshot()}
         if not strict_sync and next_batch is not None:
             # dispatched after the jitted step: the fetch only READS the
             # tiers, so it overlaps the in-flight compute; its commit waits
             # for the next step boundary
-            cc.stage_async(astate, next_batch["idx"], train=True,
-                           plan=host_plan_from_batch(next_batch))
+            tier.stage(astate, next_batch["idx"], train=True,
+                       plan=host_plan_from_batch(next_batch))
         if not strict_sync and prefetch_rows is not None:
-            cc.stage_rows(astate, prefetch_rows)
+            tier.prefetch_rows(astate, prefetch_rows)
         return new_dense, {"dense": new_dense_state}, metrics
 
     return step
@@ -437,18 +423,14 @@ def build_async_cached_dlrm_train_step(cfg: DLRMConfig, cc,
 # ---------------------------------------------------------------------------
 
 
-def build_multihost_cached_train_step(cfg: DLRMConfig, mc,
-                                      dense_opt: Optimizer,
-                                      sparse_lr: float = 0.05,
-                                      sparse_eps: float = 1e-8,
-                                      interpret: bool = False,
-                                      rules: LogicalRules = TRAIN_RULES,
-                                      strict_sync: bool = False,
-                                      mesh=None,
-                                      host_axis: str = "data",
-                                      fetch_chunk: int | None = None
-                                      ) -> Callable:
-    """Train step for `MultiHostCachedEmbeddingBagCollection`: H hosts each
+def _build_multihost_cached_step(cfg: DLRMConfig, mc,
+                                 dense_opt: Optimizer,
+                                 sparse_lr: float, sparse_eps: float,
+                                 interpret: bool, rules: LogicalRules,
+                                 strict_sync: bool, mesh,
+                                 host_axis: str) -> Callable:
+    """Multi-host half of `build_cached_train_step`
+    (`MultiHostCachedEmbeddingBagCollection`): H hosts each
     run a hot cache over a capacity tier row-sharded across the same hosts.
 
     Split execution per step (docs/cache.md):
@@ -474,15 +456,8 @@ def build_multihost_cached_train_step(cfg: DLRMConfig, mc,
     prefetch); results are bit-identical either way. Returns step(params,
     state, mstate, batch, step_idx, next_batch=None) -> (params, state,
     metrics); batch carries OFFSET global indices and, optionally, the
-    hook-attached plan artifacts (`data.sparse_plan_hook(n_hosts=H)`).
+    hook-attached plan artifacts (`data.sparse_plan_hook(n_hosts=H)`)."""
 
-    `fetch_chunk` (> 1) books the planned fetch all-to-all in contiguous
-    row blocks per (host, owner) pair — the chunk model the route stats
-    expose as `route_fetch_chunks` (the device install is unchanged and
-    stays bit-exact)."""
-
-    if fetch_chunk is not None:
-        mc = dataclasses.replace(mc, fetch_chunk=fetch_chunk)
     hn = mc.n_hosts
     ebc = mc.ebc
 
@@ -568,7 +543,7 @@ def build_multihost_cached_train_step(cfg: DLRMConfig, mc,
                               step_idx)
         mc.mark_updated(mstate, new_cap, new_acc, new_caches)
         # snapshot BEFORE the prefetch so step metrics cover run batches
-        metrics = {**metrics, **mstate.stats.snapshot(),
+        metrics = {**metrics, **mc.stats(mstate).snapshot(),
                    **mstate.route.snapshot()}
         if not strict_sync and next_batch is not None:
             # dispatched after the jitted step: the gather consumes the
@@ -579,6 +554,130 @@ def build_multihost_cached_train_step(cfg: DLRMConfig, mc,
         return new_dense, {"dense": new_dense_state}, metrics
 
     return step
+
+
+# ---------------------------------------------------------------------------
+# The one cached-step factory (EmbeddingTier dispatch)
+# ---------------------------------------------------------------------------
+
+
+def build_cached_train_step(cfg: DLRMConfig, tier, dense_opt: Optimizer,
+                            sparse_lr: float = 0.05,
+                            sparse_eps: float = 1e-8,
+                            interpret: bool = False,
+                            rules: LogicalRules = TRAIN_RULES,
+                            strict_sync: bool = False,
+                            mesh=None, host_axis: str = "data",
+                            fetch_chunk: int | None = None) -> Callable:
+    """ONE train-step factory for every cached embedding tier, dispatching
+    on the tier's TYPE instead of a builder per schedule:
+
+      `CachedEmbeddingBagCollection`        sync schedule (take admits the
+      (incl. the bulk-backed subclass)      batch inline; next_batch rows
+                                            prefetch behind the dispatch)
+      `AsyncCachedTier(cc)`                 overlapped schedule (batch k+1
+                                            stages while batch k computes;
+                                            `strict_sync=True` falls back
+                                            bit-identically)
+      `MultiHostCachedEmbeddingBagCollection`
+                                            row-sharded capacity + per-host
+                                            caches (`mesh`/`host_axis`
+                                            route the owner update)
+
+    The returned step's signature matches the schedule (see the per-tier
+    builders); all of them consume the tier through the `EmbeddingTier`
+    protocol (core/tiers.py). `fetch_chunk` (> 1) switches capacity->cache
+    transfers to contiguous row blocks on any tier (docs/cache.md
+    "Chunk-granular transfers"); `strict_sync`/`mesh`/`host_axis` are
+    ignored by tiers without the knob."""
+
+    if isinstance(tier, AsyncCachedTier):
+        cc = tier.cc
+        if fetch_chunk is not None:
+            cc = dataclasses.replace(cc, fetch_chunk=fetch_chunk)
+        return _build_async_cached_step(cfg, AsyncCachedTier(cc), dense_opt,
+                                        sparse_lr, sparse_eps, interpret,
+                                        rules, strict_sync)
+    if isinstance(tier, MultiHostCachedEmbeddingBagCollection):
+        if fetch_chunk is not None:
+            tier = dataclasses.replace(tier, fetch_chunk=fetch_chunk)
+        return _build_multihost_cached_step(cfg, tier, dense_opt, sparse_lr,
+                                            sparse_eps, interpret, rules,
+                                            strict_sync, mesh, host_axis)
+    if isinstance(tier, CachedEmbeddingBagCollection):
+        if fetch_chunk is not None:
+            tier = dataclasses.replace(tier, fetch_chunk=fetch_chunk)
+        return _build_sync_cached_step(cfg, tier, dense_opt, sparse_lr,
+                                       sparse_eps, interpret, rules)
+    raise TypeError(
+        f"build_cached_train_step: unsupported tier {type(tier).__name__}; "
+        "expected an EmbeddingTier (CachedEmbeddingBagCollection, "
+        "AsyncCachedTier, MultiHostCachedEmbeddingBagCollection or the "
+        f"bulk-backed subclass); protocol conformance: "
+        f"{isinstance(tier, EmbeddingTier)}")
+
+
+def build_cached_dlrm_train_step(cfg: DLRMConfig, cc, dense_opt: Optimizer,
+                                 sparse_lr: float = 0.05,
+                                 sparse_eps: float = 1e-8,
+                                 interpret: bool = False,
+                                 rules: LogicalRules = TRAIN_RULES,
+                                 fetch_chunk: int | None = None
+                                 ) -> Callable:
+    """Deprecated alias of `build_cached_train_step(cfg, cc, ...)` (one
+    release); the factory dispatches the sync schedule from the tier type."""
+    warnings.warn(
+        "build_cached_dlrm_train_step is deprecated; use "
+        "build_cached_train_step(cfg, tier, ...)", DeprecationWarning,
+        stacklevel=2)
+    return build_cached_train_step(cfg, cc, dense_opt, sparse_lr, sparse_eps,
+                                   interpret, rules,
+                                   fetch_chunk=fetch_chunk)
+
+
+def build_async_cached_dlrm_train_step(cfg: DLRMConfig, cc,
+                                       dense_opt: Optimizer,
+                                       sparse_lr: float = 0.05,
+                                       sparse_eps: float = 1e-8,
+                                       interpret: bool = False,
+                                       rules: LogicalRules = TRAIN_RULES,
+                                       strict_sync: bool = False,
+                                       fetch_chunk: int | None = None
+                                       ) -> Callable:
+    """Deprecated alias of `build_cached_train_step(cfg,
+    AsyncCachedTier(cc), ...)` (one release)."""
+    warnings.warn(
+        "build_async_cached_dlrm_train_step is deprecated; use "
+        "build_cached_train_step(cfg, AsyncCachedTier(cc), ...)",
+        DeprecationWarning, stacklevel=2)
+    return build_cached_train_step(cfg, AsyncCachedTier(cc), dense_opt,
+                                   sparse_lr, sparse_eps, interpret, rules,
+                                   strict_sync=strict_sync,
+                                   fetch_chunk=fetch_chunk)
+
+
+def build_multihost_cached_train_step(cfg: DLRMConfig, mc,
+                                      dense_opt: Optimizer,
+                                      sparse_lr: float = 0.05,
+                                      sparse_eps: float = 1e-8,
+                                      interpret: bool = False,
+                                      rules: LogicalRules = TRAIN_RULES,
+                                      strict_sync: bool = False,
+                                      mesh=None,
+                                      host_axis: str = "data",
+                                      fetch_chunk: int | None = None
+                                      ) -> Callable:
+    """Deprecated alias of `build_cached_train_step(cfg, mc, ...)` (one
+    release); the factory dispatches the multi-host schedule from the tier
+    type."""
+    warnings.warn(
+        "build_multihost_cached_train_step is deprecated; use "
+        "build_cached_train_step(cfg, tier, ...)", DeprecationWarning,
+        stacklevel=2)
+    return build_cached_train_step(cfg, mc, dense_opt, sparse_lr, sparse_eps,
+                                   interpret, rules, strict_sync=strict_sync,
+                                   mesh=mesh, host_axis=host_axis,
+                                   fetch_chunk=fetch_chunk)
 
 
 def build_tablewise_train_step(cfg: DLRMConfig, ebc: EmbeddingBagCollection,

@@ -23,6 +23,7 @@ from repro.core.cache import (CachedEmbeddingBagCollection,
                               MultiHostCachedEmbeddingBagCollection)
 from repro.core.dlrm import dlrm_param_specs
 from repro.core.embedding import EmbeddingBagCollection
+from repro.core.tiers import BulkCachedEmbeddingBagCollection
 from repro.data.pipeline import DataPipeline
 from repro.data.synthetic import make_dlrm_batch
 from repro.nn.params import init_params
@@ -35,7 +36,7 @@ from repro.train.fault_tolerance import (DegradationManager, FaultInjector,
                                          restore_train_state, run_chaos_loop,
                                          save_train_state)
 from repro.train.steps import (build_async_cached_dlrm_train_step,
-                               build_cached_dlrm_train_step,
+                               build_cached_train_step,
                                build_multihost_cached_train_step,
                                build_tablewise_train_step,
                                cached_dlrm_init_state, dlrm_init_state)
@@ -361,12 +362,18 @@ def _tier_tools(cfg, ebc, tier, injector=None, retry=None):
     if tier == "multihost":
         col = MultiHostCachedEmbeddingBagCollection.build(cfg, n_hosts=2,
                                                           cache_rows=256)
+    elif tier == "bulk":
+        # 3-tier flavor: DRAM budget below the table height so promotions
+        # pull from bulk and evictions overflow DRAM back into it
+        col = BulkCachedEmbeddingBagCollection.build(
+            cfg, cache_rows=256, dram_rows=300, bulk_chunk=16,
+            bulk_latency_us=0.0)
     else:
         col = CachedEmbeddingBagCollection.build(cfg, cache_rows=256)
     col = dataclasses.replace(col, injector=injector, retry=retry)
 
-    if tier == "sync":
-        step = build_cached_dlrm_train_step(cfg, col, opt)
+    if tier in ("sync", "bulk"):
+        step = build_cached_train_step(cfg, col, opt)
 
         def run(dense, cstate, tstate, t, batch, nxt):
             return step(dense, cstate, tstate, batch,
@@ -438,8 +445,9 @@ def _check_resume_equivalence(tier, seed):
     dense, cstate, l2a = _tier_segment(cfg, ebc, tier, tools, dense,
                                        cstate, tstate, 0, n1, n1 + n2)
     snap = tools[0].state_dict(tstate)
-    inj = FaultInjector.from_seed(seed, 32, sites=("cache.fetch",),
-                                  n_faults=2)
+    sites = (("cache.fetch", "bulk.fetch") if tier == "bulk"
+             else ("cache.fetch",))
+    inj = FaultInjector.from_seed(seed, 32, sites=sites, n_faults=2)
     tools2 = _tier_tools(cfg, ebc, tier, injector=inj,
                          retry=RetryPolicy(max_retries=3, backoff_s=1e-5))
     tstate2 = tools2[0].load_state_dict(snap)
@@ -453,16 +461,63 @@ def _check_resume_equivalence(tier, seed):
     np.testing.assert_array_equal(np.asarray(got_a), np.asarray(want_a))
 
 
-@pytest.mark.parametrize("tier", ["sync", "async", "multihost"])
+@pytest.mark.parametrize("tier", ["sync", "async", "multihost", "bulk"])
 def test_resume_under_faults_equals_uninterrupted(tier):
     _check_resume_equivalence(tier, seed=5)
+
+
+def test_chaos_bulk_latency_fault_with_preemption_bitexact(cfg, ebc):
+    """3-tier chaos: multi-millisecond latency faults armed on the bulk
+    promotion path (`bulk.fetch`) PLUS a mid-run preemption (snapshot ->
+    discard live state -> restore into a fresh faulty collection) leave
+    the run bit-equal to the fault-free uninterrupted oracle. Latency
+    faults only stretch wall time, and the capacity tier is always
+    current, so the restored bulk store reseeds bit-identically."""
+    params = init_params(dlrm_param_specs(cfg, ebc), jax.random.PRNGKey(3))
+    n1, n2 = 2, 3
+
+    def boot(tools):
+        col, opt, init, run = tools
+        dense = {"bottom": params["bottom"], "top": params["top"]}
+        return dense, cached_dlrm_init_state(col, opt, params), \
+            init(params["emb"]["mega"])
+
+    tools = _tier_tools(cfg, ebc, "bulk")
+    dense, cstate, tstate = boot(tools)
+    dense, cstate, l1 = _tier_segment(cfg, ebc, "bulk", tools, dense,
+                                      cstate, tstate, 0, n1 + n2, n1 + n2)
+    want_m, want_a = _tier_materialize("bulk", tools[0], tstate)
+
+    tools = _tier_tools(cfg, ebc, "bulk")
+    dense, cstate, tstate = boot(tools)
+    dense, cstate, l2a = _tier_segment(cfg, ebc, "bulk", tools, dense,
+                                       cstate, tstate, 0, n1, n1 + n2)
+    # preemption: checkpoint, then throw the live collection away and
+    # restore into one whose bulk reads fire latency + transient faults
+    snap = tools[0].state_dict(tstate)
+    del tstate
+    inj = FaultInjector([FaultSpec("bulk.fetch", 0, "latency", 0.002),
+                         FaultSpec("bulk.fetch", 1, "error"),
+                         FaultSpec("bulk.fetch", 2, "latency", 0.002)])
+    tools2 = _tier_tools(cfg, ebc, "bulk", injector=inj,
+                         retry=RetryPolicy(max_retries=3, backoff_s=1e-5))
+    tstate2 = tools2[0].load_state_dict(snap)
+    dense, cstate, l2b = _tier_segment(cfg, ebc, "bulk", tools2, dense,
+                                       cstate, tstate2, n1, n1 + n2,
+                                       n1 + n2)
+    got_m, got_a = _tier_materialize("bulk", tools2[0], tstate2)
+
+    assert l2a + l2b == l1
+    assert any(site == "bulk.fetch" for site, _, _ in inj.fired)
+    np.testing.assert_array_equal(np.asarray(got_m), np.asarray(want_m))
+    np.testing.assert_array_equal(np.asarray(got_a), np.asarray(want_a))
 
 
 if HAS_HYPOTHESIS:
 
     @requires_hypothesis
     @settings(max_examples=4, deadline=None)
-    @given(tier=st.sampled_from(["sync", "async", "multihost"]),
+    @given(tier=st.sampled_from(["sync", "async", "multihost", "bulk"]),
            seed=st.integers(0, 10 ** 6))
     def test_resume_under_fuzzed_faults_equals_uninterrupted(tier, seed):
         _check_resume_equivalence(tier, seed)
